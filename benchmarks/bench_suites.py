@@ -1,0 +1,108 @@
+"""Paper Figure 5 analogue: the four suites across datasets/lengths/windows.
+
+UCR (full), UCR-USP (pruned), UCR-MON (eapruned), UCR-MON-nolb — same
+queries, same references, wall-clock + pruning counters. Sizes default to
+CPU-tractable scales; ``--paper-scale`` selects the real ones (1M-point
+references, 1024-sample queries) for TPU runs.
+
+Output CSV: name,us_per_call,derived
+  derived = cells_computed/cells_full (the paper's pruning-effectiveness ratio)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import DATASETS, make_dataset, make_queries
+from repro.search import subsequence_search
+from repro.search.subsequence import VARIANTS
+
+
+def run(
+    ref_len: int = 20_000,
+    lengths=(128, 256),
+    ratios=(0.1, 0.3),
+    datasets=DATASETS,
+    n_queries: int = 1,
+    batch: int = 128,
+    repeats: int = 2,
+):
+    rows = []
+    totals = {v: 0.0 for v in VARIANTS}
+    for ds in datasets:
+        ref = jnp.asarray(make_dataset(ds, ref_len, seed=0), jnp.float32)
+        for length in lengths:
+            queries = make_queries(ds, n_queries, length, seed=1)
+            for ratio in ratios:
+                w = max(int(length * ratio), 1)
+                n_win = ref_len - length + 1
+                full_cells = n_win * min(
+                    length * (2 * w + 1) - w * (w + 1), length * length
+                )
+                for variant in VARIANTS:
+                    best, cells = None, 0
+                    dt_best = float("inf")
+                    for q in queries:
+                        qj = jnp.asarray(q, jnp.float32)
+                        # warmup / compile
+                        res = subsequence_search(
+                            ref, qj, length=length, window=w,
+                            variant=variant, batch=batch,
+                        )
+                        jax.block_until_ready(res.best_dist)
+                        for _ in range(repeats):
+                            t0 = time.time()
+                            res = subsequence_search(
+                                ref, qj, length=length, window=w,
+                                variant=variant, batch=batch,
+                            )
+                            jax.block_until_ready(res.best_dist)
+                            dt_best = min(dt_best, time.time() - t0)
+                        cells += int(res.cells)
+                        best = (int(res.best_start), float(res.best_dist))
+                    name = f"suite/{ds}/l{length}/r{ratio}/{variant}"
+                    ratio_cells = cells / (full_cells * len(queries))
+                    rows.append((name, dt_best * 1e6, f"cells_ratio={ratio_cells:.4f}"))
+                    totals[variant] += dt_best
+    for v in VARIANTS:
+        rows.append((f"suite/TOTAL/{v}", totals[v] * 1e6, "sum_best_times"))
+    # headline speedups (paper reports MON vs UCR and vs USP)
+    if totals["eapruned"] > 0:
+        rows.append(
+            ("suite/SPEEDUP/eapruned_vs_full", 0.0,
+             f"x{totals['full'] / totals['eapruned']:.2f}")
+        )
+        rows.append(
+            ("suite/SPEEDUP/eapruned_vs_pruned", 0.0,
+             f"x{totals['pruned'] / totals['eapruned']:.2f}")
+        )
+        rows.append(
+            ("suite/SPEEDUP/nolb_vs_full", 0.0,
+             f"x{totals['full'] / totals['eapruned_nolb']:.2f}")
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--ref-len", type=int, default=None)
+    args = ap.parse_args()
+    if args.paper_scale:
+        rows = run(
+            ref_len=args.ref_len or 1_000_000,
+            lengths=(128, 256, 512, 1024),
+            ratios=(0.1, 0.2, 0.3, 0.4, 0.5),
+            n_queries=5,
+        )
+    else:
+        rows = run(ref_len=args.ref_len or 20_000)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

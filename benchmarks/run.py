@@ -1,0 +1,64 @@
+"""Benchmark entry point. One section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+  * suite/*       — paper Fig. 5 analogue (four suites x dataset x l x w)
+  * dtw/*         — per-computation EA/Pruned/full work + time comparison
+  * kernel/*      — Pallas kernel harness checks (interpret mode)
+  * roofline/*    — dry-run-derived roofline terms per (arch x shape)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import bench_dtw_micro, bench_kernels, bench_suites
+
+    print("name,us_per_call,derived")
+    if args.quick:
+        rows = bench_suites.run(ref_len=4_000, lengths=(128,), ratios=(0.1,),
+                                datasets=("ECG",), repeats=1)
+    else:
+        rows = bench_suites.run()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    for name, us, derived in bench_dtw_micro.run(length=128, k=128, window_ratio=0.1):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    bench_kernels.main()
+
+    if not args.skip_roofline:
+        from repro.roofline.analysis import load_cells
+
+        try:
+            cells = load_cells()
+        except Exception as e:
+            print(f"roofline/unavailable,0.0,{e}")
+            cells = []
+        for c in cells:
+            if "skipped" in c:
+                continue
+            name = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+            bound_us = max(c["compute_s"], c["memory_s"], c["collective_s"]) * 1e6
+            print(
+                f"{name},{bound_us:.1f},"
+                f"bound={c['dominant']};frac={c['roofline_fraction']:.4f};"
+                f"useful={c['useful_ratio']:.3f}",
+                flush=True,
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Train a ~100M-parameter LM for a few hundred steps (end-to-end driver).
+
+Uses the mamba2-130m architecture at FULL width but reduced depth so it's a
+real ~100M-param training run that fits CPU time budgets, exercising the
+production path: sharded state, microbatching, async checkpoints, restart.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.data.lm import TokenStream
+from repro.distributed.fault_tolerance import TrainingSupervisor
+from repro.models.registry import build
+from repro.train.train_step import init_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--depth", type=int, default=4)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # full-width mamba2 (d_model 768, vocab 50280), reduced depth: ~90M params
+    cfg = dataclasses.replace(
+        ARCHS["mamba2-130m"], n_layers=args.depth, dtype="float32",
+        num_microbatches=1,
+    )
+    model = build(cfg)
+    state = init_state(model, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"training {cfg.name} depth={args.depth}: {n_params/1e6:.1f}M params")
+
+    stream = TokenStream(cfg.vocab, args.batch, args.seq, seed=0)
+    step_fn = jax.jit(
+        make_train_step(model, base_lr=1e-3, warmup=20, total_steps=args.steps),
+        donate_argnums=(0,),
+    )
+    sup = TrainingSupervisor(step_fn, stream.batch_at, args.ckpt, ckpt_every=100)
+    t0 = time.time()
+    state, log = sup.run(state, args.steps)
+    dt = time.time() - t0
+    losses = [m["loss"] for m in log]
+    print(
+        f"{len(log)} steps in {dt:.0f}s ({dt/len(log):.2f}s/step): "
+        f"loss {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f}"
+    )
+    assert np.mean(losses[-10:]) < losses[0], "loss must decrease"
+    print("done; checkpoints in", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

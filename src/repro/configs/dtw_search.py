@@ -1,0 +1,23 @@
+"""The paper's own workload: UCR-suite subsequence similarity search.
+
+Not one of the 40 assigned LM cells — this is the configuration the
+benchmarks and the distributed-search dry-run use (reference length x query
+length x window ratio, as in Herrmann & Webb §5)."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class SearchConfig:
+    name: str = "dtw-search"
+    ref_len: int = 1_000_000         # long reference series R
+    query_len: int = 1024            # paper: 128 / 256 / 512 / 1024
+    window_ratio: float = 0.1        # paper: 0.1 .. 0.5
+    batch: int = 256                 # candidates per shared-ub round
+    variant: str = "eapruned"
+
+    @property
+    def window(self) -> int:
+        return int(self.query_len * self.window_ratio)
+
+
+CONFIG = SearchConfig()

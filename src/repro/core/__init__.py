@@ -1,0 +1,40 @@
+"""The paper's contribution: EAPrunedDTW and its supporting DTW stack.
+
+Public API:
+  dtw, dtw_batch                — exact DTW (scan formulation)
+  ea_pruned_dtw                 — EAPrunedDTW, full-row vectorized
+  ea_pruned_dtw_banded          — EAPrunedDTW, O(n·band) banded hot path
+  ea_pruned_dtw_batch           — batched banded EA (search unit of work)
+  pruned_dtw                    — PrunedDTW baseline (row-min abandon)
+  envelope, lb_keogh, lb_kim_fl — lower bounds
+"""
+from repro.core.batch import ea_pruned_dtw_batch, ea_search_round
+from repro.core.common import BIG
+from repro.core.dtw import dtw, dtw_batch, dtw_matrix
+from repro.core.ea_pruned_dtw import EAInfo, ea_pruned_dtw, ea_pruned_dtw_banded
+from repro.core.lower_bounds import (
+    cascade_keogh_cumulative,
+    envelope,
+    lb_keogh,
+    lb_keogh_pair,
+    lb_kim_fl,
+)
+from repro.core.pruned_dtw import pruned_dtw
+
+__all__ = [
+    "BIG",
+    "EAInfo",
+    "cascade_keogh_cumulative",
+    "dtw",
+    "dtw_batch",
+    "dtw_matrix",
+    "ea_pruned_dtw",
+    "ea_pruned_dtw_banded",
+    "ea_pruned_dtw_batch",
+    "ea_search_round",
+    "envelope",
+    "lb_keogh",
+    "lb_keogh_pair",
+    "lb_kim_fl",
+    "pruned_dtw",
+]

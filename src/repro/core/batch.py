@@ -1,0 +1,84 @@
+"""Batched EAPrunedDTW — the TPU-native unit of similarity-search work.
+
+The UCR suite streams candidates one at a time, tightening ``ub`` after each.
+A TPU wants thousands of independent lanes in flight, so the unit of work here
+is a *batch* of K candidates evaluated under one shared ``ub`` (DESIGN.md
+§2.4). Each lane early-abandons independently (its banded while_loop predicate
+goes false); the batch completes when every lane has abandoned or finished;
+``ub`` is then tightened with the batch minimum before the next batch.
+
+Best-first ordering by lower bound (see search/cascade.py) restores most of
+the sequential tightening power the paper gets for free.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ea_pruned_dtw import ea_pruned_dtw_banded
+
+
+@partial(jax.jit, static_argnames=("window", "band_width", "rows_per_step"))
+def ea_pruned_dtw_batch(
+    query: jax.Array,
+    candidates: jax.Array,
+    ub: jax.Array,
+    window: int,
+    band_width: int | None = None,
+    cb: jax.Array | None = None,
+    rows_per_step: int = 1,
+) -> jax.Array:
+    """Banded EAPrunedDTW of one query against K candidates, shared ``ub``.
+
+    Args:
+      query: ``(m,)`` or ``(m, dims)``.
+      candidates: ``(K, m[, dims])``.
+      ub: scalar upper bound shared by the whole batch.
+      window: Sakoe-Chiba window.
+      band_width: static band columns per row (defaults to lane-aligned
+        ``2*window+1``).
+      cb: optional ``(K, m)`` per-candidate cumulative LB_Keogh suffix sums
+        for UCR-style threshold tightening.
+
+    Returns: ``(K,)`` distances; ``+inf`` where abandoned.
+    """
+    if cb is None:
+        fn = lambda c: ea_pruned_dtw_banded(
+            query, c, ub, window=window, band_width=band_width,
+            rows_per_step=rows_per_step,
+        )
+        return jax.vmap(fn)(candidates)
+    fn = lambda c, cbv: ea_pruned_dtw_banded(
+        query, c, ub, window=window, band_width=band_width, cb=cbv,
+        rows_per_step=rows_per_step,
+    )
+    return jax.vmap(fn)(candidates, cb)
+
+
+@partial(jax.jit, static_argnames=("window", "band_width"))
+def ea_search_round(
+    query: jax.Array,
+    candidates: jax.Array,
+    ub: jax.Array,
+    best_idx: jax.Array,
+    cand_idx: jax.Array,
+    window: int,
+    band_width: int | None = None,
+    cb: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One search round: batch EAPrunedDTW + incumbent update.
+
+    ``cand_idx`` carries the global index of each candidate (for argmin
+    bookkeeping across rounds). Returns updated ``(ub, best_idx)``. Ties keep
+    the incumbent (strict improvement only), matching the paper's strictness
+    rule for early abandoning.
+    """
+    d = ea_pruned_dtw_batch(query, candidates, ub, window, band_width, cb)
+    k = jnp.argmin(d)
+    dmin = d[k]
+    improved = dmin < ub
+    new_ub = jnp.where(improved, dmin, ub)
+    new_best = jnp.where(improved, cand_idx[k], best_idx)
+    return new_ub, new_best

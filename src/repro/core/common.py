@@ -1,0 +1,50 @@
+"""Shared numerics for the DTW core.
+
+TPU-side convention: "pruned / not computed / border" cells hold the large
+finite sentinel ``BIG`` instead of ``+inf``. The min-plus prefix-scan row
+recurrence (see ``row_scan``) computes ``d[k] - P[k]`` differences, and
+``inf - inf = nan`` would poison the scan; ``BIG`` keeps everything finite.
+``BIG`` is chosen so that summing ~1e4 of them stays below float32 max.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1.0e30  # pruned-cell sentinel (finite stand-in for +inf)
+
+
+def is_pruned(x: jax.Array) -> jax.Array:
+    """Cells >= BIG/2 are considered pruned/infinite."""
+    return x >= jnp.asarray(BIG / 2, dtype=x.dtype)
+
+
+def to_inf(x: jax.Array) -> jax.Array:
+    """Map BIG sentinels back to +inf for user-facing results."""
+    return jnp.where(is_pruned(x), jnp.inf, x)
+
+
+def cummin(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Cumulative minimum along ``axis`` (log-depth associative scan)."""
+    return jax.lax.associative_scan(jnp.minimum, x, axis=axis)
+
+
+def row_scan(d: jax.Array, c: jax.Array) -> jax.Array:
+    """Solve the DTW row recurrence in closed form.
+
+    Given per-cell ``d[j] = c[j] + min(prev[j], prev[j-1])`` (the contribution
+    that does NOT involve the current row's left neighbour) and the cost row
+    ``c``, solve
+
+        curr[j] = min(d[j], c[j] + curr[j-1])
+                = P[j] + cummin_{k<=j}(d[k] - P[k]),   P = exclusive prefix sum of c
+
+    which replaces the sequential left-to-right chain with one prefix sum and
+    one cumulative min — both vectorizable. Shapes: ``d`` and ``c`` are
+    ``(..., m)``; returns ``curr`` of the same shape.
+
+    Note ``P`` is the *inclusive* prefix sum shifted so that ``P[j]`` equals
+    ``sum(c[..j])``; the ``k = j`` term reproduces ``d[j]`` exactly.
+    """
+    P = jnp.cumsum(c, axis=-1)
+    return P + cummin(d - P, axis=-1)

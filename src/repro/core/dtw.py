@@ -1,0 +1,102 @@
+"""Exact DTW in JAX via the min-plus prefix-scan row recurrence.
+
+This is the vectorized *unpruned* reference the paper's technique accelerates
+(and the oracle the Pallas kernels are tested against). One `lax.scan` step per
+row; within a row the sequential left-neighbour chain
+
+    curr[j] = min(d[j], c[j] + curr[j-1])
+
+is solved in closed form by ``row_scan`` (prefix sum + cumulative min), giving
+log-depth vector ops instead of a scalar loop — the TPU-native shape of the
+computation (DESIGN.md §2.1).
+
+Supports univariate ``(n,)`` and multivariate ``(n, dims)`` series with the
+squared-Euclidean cost, and a Sakoe-Chiba window for equal-length inputs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.common import BIG, row_scan, to_inf
+
+
+def _cost_row(x_i: jax.Array, t: jax.Array) -> jax.Array:
+    """Squared Euclidean cost of one point of S against every point of T."""
+    diff = x_i - t  # (m,) or (m, dims)
+    if diff.ndim == 1:
+        return diff * diff
+    return jnp.sum(diff * diff, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("window",))
+def dtw(s: jax.Array, t: jax.Array, window: int | None = None) -> jax.Array:
+    """Exact DTW distance between ``s`` and ``t`` (squared-Euclidean cost).
+
+    Args:
+      s: ``(n,)`` or ``(n, dims)`` series (the "line" series — scanned rows).
+      t: ``(m,)`` or ``(m, dims)`` series.
+      window: optional Sakoe-Chiba warping window (requires ``n == m``).
+
+    Returns: scalar DTW cost; ``+inf`` if the window admits no path.
+    """
+    s = jnp.asarray(s)
+    t = jnp.asarray(t)
+    n = s.shape[0]
+    m = t.shape[0]
+    if window is not None and n != m:
+        raise ValueError("windowed DTW requires equal lengths")
+    if window is not None and window >= m:
+        window = None
+
+    cols = jnp.arange(m)
+
+    def step(prev: jax.Array, xs) -> tuple[jax.Array, None]:
+        x_i, i = xs
+        c = _cost_row(x_i, t).astype(prev.dtype)
+        # d[j] = c[j] + min(prev[j], prev[j-1]); prev has a border cell at [0].
+        d = c + jnp.minimum(prev[1:], prev[:-1])
+        if window is not None:
+            in_win = jnp.abs(cols - i) <= window
+            d = jnp.where(in_win, d, BIG)
+        curr = row_scan(d, c)
+        if window is not None:
+            curr = jnp.where(in_win, curr, BIG)
+        curr = jnp.minimum(curr, BIG)  # keep sentinel arithmetic bounded
+        return jnp.concatenate([jnp.full((1,), BIG, prev.dtype), curr]), None
+
+    dtype = jnp.result_type(s.dtype, t.dtype, jnp.float32)
+    prev0 = jnp.full((m + 1,), BIG, dtype)
+    prev0 = prev0.at[0].set(0.0)  # the (0,0) corner border cell
+    final, _ = jax.lax.scan(step, prev0, (s.astype(dtype), jnp.arange(n)))
+    return to_inf(final[m])
+
+
+@partial(jax.jit, static_argnames=("window",))
+def dtw_batch(
+    queries: jax.Array, candidates: jax.Array, window: int | None = None
+) -> jax.Array:
+    """Pairwise-batched exact DTW: ``queries`` ``(B, n[, d])`` vs
+    ``candidates`` ``(B, m[, d])`` → ``(B,)`` distances."""
+    return jax.vmap(lambda q, c: dtw(q, c, window=window))(queries, candidates)
+
+
+def dtw_matrix(s: jax.Array, t: jax.Array) -> jax.Array:
+    """Full (n+1, m+1) DTW matrix (paper Fig. 2a) — for tests/visualization."""
+    s = jnp.asarray(s)
+    t = jnp.asarray(t)
+    n, m = s.shape[0], t.shape[0]
+
+    def step(prev, x_i):
+        c = _cost_row(x_i, t).astype(prev.dtype)
+        d = c + jnp.minimum(prev[1:], prev[:-1])
+        curr = row_scan(d, c)
+        nxt = jnp.concatenate([jnp.full((1,), BIG, prev.dtype), curr])
+        return nxt, nxt
+
+    prev0 = jnp.full((m + 1,), BIG, jnp.float64 if s.dtype == jnp.float64 else jnp.float32)
+    prev0 = prev0.at[0].set(0.0)
+    _, rows = jax.lax.scan(step, prev0, s.astype(prev0.dtype))
+    return to_inf(jnp.concatenate([prev0[None], rows], axis=0))

@@ -1,0 +1,88 @@
+"""Activation-sharding anchors (§Perf-A1).
+
+Without explicit activation constraints, GSPMD propagates shardings from the
+vocab-sharded embedding into the batch-sharded token stream and resolves the
+conflict with "involuntary full rematerialization" (replicate-then-reshard) —
+multi-GB activation tensors per microbatch in the 72B/1T train cells.
+
+Model code calls ``constrain_tokens_like`` at three anchor points (after
+embedding, after each block, at the logits); the launcher/dry-run sets the
+batch axes before tracing. Defaults to no-op so CPU tests and single-device
+runs are untouched. This is the MaxText-style pattern, kept minimal.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: tuple | None = None
+_TP_AXIS: str | None = None
+_SEQ_PARALLEL: bool = False
+_MESH = None
+
+
+def set_axes(
+    batch_axes: tuple | None,
+    tp_axis: str | None = "model",
+    seq_parallel: bool = False,
+    mesh=None,
+) -> None:
+    global _BATCH_AXES, _TP_AXIS, _SEQ_PARALLEL, _MESH
+    _BATCH_AXES = batch_axes
+    _TP_AXIS = tp_axis
+    _SEQ_PARALLEL = seq_parallel
+    _MESH = mesh
+
+
+def clear() -> None:
+    set_axes(None, None)
+
+
+def mesh_info():
+    """(mesh, batch_axes, tp_axis) when set — used by shard_map layers."""
+    if _MESH is None or _BATCH_AXES is None:
+        return None
+    return _MESH, _BATCH_AXES, _TP_AXIS
+
+
+def _wsc(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint that works with or without a mesh context:
+    when a mesh was registered via ``set_axes``, bind the spec to it."""
+    if _MESH is not None:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_acts(x: jax.Array) -> jax.Array:
+    """(B, S, D) activations: batch on (pod, data); with sequence
+    parallelism (§Perf-B2) the sequence dim additionally shards on the TP
+    axis at block boundaries, turning per-layer all-reduces into
+    reduce-scatter + all-gather pairs (half the ring traffic)."""
+    if _BATCH_AXES is None:
+        return x
+    if _SEQ_PARALLEL and x.ndim >= 3:
+        spec = P(_BATCH_AXES, _TP_AXIS, *([None] * (x.ndim - 2)))
+    else:
+        spec = P(_BATCH_AXES, *([None] * (x.ndim - 1)))
+    return _wsc(x, spec)
+
+
+def constrain_logits(x: jax.Array) -> jax.Array:
+    """(B, S, V) logits: batch on (pod, data), vocab on the TP axis."""
+    if _BATCH_AXES is None:
+        return x
+    spec = P(_BATCH_AXES, *([None] * (x.ndim - 2)), _TP_AXIS)
+    return _wsc(x, spec)
+
+
+def constrain_decode_scores(scores: jax.Array) -> jax.Array:
+    """Flash-decode sharding (§Perf-D3): during single-token decode the KV
+    cache is sequence-sharded on the TP axis; keeping the score tensor's T
+    dim sharded makes GSPMD compute partial softmax locally and psum only
+    the (tiny) output/normalizer, instead of all-gathering the whole cache
+    every layer. scores: (B, K, G, 1, T)."""
+    if _BATCH_AXES is None:
+        return scores
+    spec = P(_BATCH_AXES, None, None, None, _TP_AXIS)
+    return _wsc(scores, spec)

@@ -1,0 +1,212 @@
+"""Partitioning rules: Megatron-style TP on "model", FSDP on "data", DP on "pod".
+
+Specs are derived from abstract shape trees (``jax.eval_shape``) with
+name-based rules, so they track the real parameter structure of every
+architecture without duplication. A mesh axis is only applied to a dimension
+it divides exactly; otherwise that dimension stays replicated (GSPMD would
+pad uneven shards — we prefer the waste to be explicit in the roofline table,
+so the rule is conservative and the §Perf log revisits the hot cases).
+
+Axis roles:
+  pod    — pure data parallelism across pods (gradient all-reduce crosses DCI
+           once per step, on already reduce-scattered shards)
+  data   — batch sharding + ZeRO-3-style parameter/optimizer sharding
+  model  — tensor parallelism: attention heads / ffn hidden / vocab / experts
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.train.optimizer import AdafactorState, AdamWState
+from repro.train.train_step import TrainState
+
+NORM_NAMES = {
+    "ln", "ln1", "ln2", "ln3", "final_norm", "enc_norm", "dec_norm", "out_ln",
+    "a_param", "d_skip", "dt_bias", "a_log",
+}
+# (d_model, hidden)-shaped projections: FSDP on dim0, TP on dim1
+IN_PROJ = {"wq", "w_gate", "w_up", "w_in", "w_x", "w_gate_in", "a_gate", "i_gate"}
+# (hidden, d_model)-shaped projections: TP on dim0, FSDP on dim1
+OUT_PROJ = {"wo", "w_down", "w_out"}
+KV_PROJ = {"wk", "wv"}
+BIASES = {"bq", "bk", "bv"}
+
+STACKED_MARKERS = ("layers", "groups", "enc_layers", "dec_layers")
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        key = getattr(p, "key", None)
+        if key is None:
+            key = getattr(p, "idx", None)
+        out.append(str(key))
+    return out
+
+
+def _axes(mesh) -> tuple[str | None, str, str]:
+    names = mesh.axis_names
+    pod = "pod" if "pod" in names else None
+    return pod, "data", "model"
+
+
+def spec_for_param(path, shape, mesh, fsdp_shard: bool = True) -> P:
+    """Rule-based PartitionSpec for one parameter leaf.
+
+    ``fsdp_shard=False`` drops the "data"-axis parameter sharding — used for
+    decode when the TP-sharded weights fit HBM outright, eliminating the
+    per-layer FSDP all-gathers (§Perf-D4; inference has no optimizer state
+    to amortize them against)."""
+    pod, fsdp, tp = _axes(mesh)
+    if not fsdp_shard:
+        fsdp = None
+    names = _path_names(path)
+    name = names[-1]
+    stacked = any(m in names for m in STACKED_MARKERS)
+    dims = tuple(shape[1:]) if stacked else tuple(shape)
+
+    def ax(a: str | None, size: int):
+        if a is None:
+            return None
+        return a if size % mesh.shape[a] == 0 else None
+
+    nd = len(dims)
+    if name in NORM_NAMES or nd == 0:
+        spec: tuple = (None,) * nd
+    elif name == "embed":
+        spec = (ax(tp, dims[0]), ax(fsdp, dims[1]))
+    elif name == "unembed":
+        spec = (ax(fsdp, dims[0]), ax(tp, dims[1]))
+    elif name == "router":
+        spec = (ax(fsdp, dims[0]), None)
+    elif name == "conv_w":
+        spec = (None, ax(tp, dims[1]))
+    elif name in BIASES:
+        spec = (ax(tp, dims[0]),)
+    elif name in IN_PROJ:
+        if nd == 3:  # MoE expert weights (E, D, FF): experts on TP
+            spec = (ax(tp, dims[0]), ax(fsdp, dims[1]), None)
+        else:
+            spec = (ax(fsdp, dims[0]), ax(tp, dims[1]))
+    elif name in OUT_PROJ:
+        if nd == 3:  # (E, FF, D)
+            spec = (ax(tp, dims[0]), None, ax(fsdp, dims[2]))
+        else:
+            spec = (ax(tp, dims[0]), ax(fsdp, dims[1]))
+    elif name in KV_PROJ:
+        spec = (ax(fsdp, dims[0]), ax(tp, dims[1]))
+    else:
+        spec = (None,) * nd
+    if stacked:
+        spec = (None,) + spec
+    return P(*spec)
+
+
+def make_param_specs(model, mesh, fsdp_shard: bool = True) -> Any:
+    """PartitionSpec tree matching ``model.init`` (no allocation)."""
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_param(path, leaf.shape, mesh, fsdp_shard),
+        shapes,
+    )
+
+
+def _drop_last(spec: P) -> P:
+    return P(*tuple(spec)[:-1]) if len(tuple(spec)) else spec
+
+
+def _factored_col(spec: P) -> P:
+    t = tuple(spec)
+    if len(t) >= 2:
+        return P(*t[:-2], t[-1])
+    return P()
+
+
+def make_state_specs(model, mesh) -> TrainState:
+    pspecs = make_param_specs(model, mesh)
+    if model.cfg.optimizer == "adafactor":
+        opt = AdafactorState(
+            vr=jax.tree.map(_drop_last, pspecs),
+            vc=jax.tree.map(_factored_col, pspecs),
+            step=P(),
+        )
+    else:
+        opt = AdamWState(m=pspecs, v=pspecs, step=P())
+    return TrainState(params=pspecs, opt=opt, step=P())
+
+
+def batch_axes(mesh) -> tuple:
+    pod, fsdp, _ = _axes(mesh)
+    return (pod, fsdp) if pod else (fsdp,)
+
+
+def make_batch_specs(batch_shapes: dict, mesh) -> dict:
+    """Batch leaves shard their leading (global batch) dim on (pod, data).
+
+    When the batch doesn't divide the axes (long_500k has batch=1) the leading
+    dim stays replicated and capacity rides on the sequence-sharded caches.
+    """
+    ba = batch_axes(mesh)
+    total = 1
+    for a in ba:
+        total *= mesh.shape[a]
+
+    def spec(v):
+        lead = ba if v.shape[0] % total == 0 else None
+        return P(lead, *([None] * (len(v.shape) - 1)))
+
+    return {k: spec(v) for k, v in batch_shapes.items()}
+
+
+def spec_for_cache(path, shape, mesh) -> P:
+    """KV caches: batch on (pod,data); cache length on "model" (the baseline
+    sequence-sharded layout — see EXPERIMENTS.md §Perf for the flash-decode
+    alternative); SSM/LRU states: batch on (pod,data), width/heads on model."""
+    pod, fsdp, tp = _axes(mesh)
+    ba = (pod, fsdp) if pod else fsdp
+    names = _path_names(path)
+    name = names[-1].rstrip("0123456789")
+    nd = len(shape)
+
+    def ax(a, size):
+        if a is None:
+            return None
+        if isinstance(a, tuple):
+            tot = 1
+            for x in a:
+                tot *= mesh.shape[x]
+            return a if size % tot == 0 else None
+        return a if size % mesh.shape[a] == 0 else None
+
+    if name in ("k", "v", "ek", "ev"):
+        if nd == 5:  # (L, B, T, K, hd)
+            return P(None, ax(ba, shape[1]), ax(tp, shape[2]), None, None)
+        if nd == 4:  # (B, T, K, hd)
+            return P(ax(ba, shape[0]), ax(tp, shape[1]), None, None)
+    if name == "state":  # (L, B, H, P, N)
+        return P(None, ax(ba, shape[1]), ax(tp, shape[2]), None, None)
+    if name == "tail":
+        if nd == 4:  # (L, B, k-1, C)
+            return P(None, ax(ba, shape[1]), None, ax(tp, shape[3]))
+        return P(ax(ba, shape[0]), None, ax(tp, shape[2]))
+    if name == "h":  # (G, B, W) rg-lru state
+        if nd == 3:
+            return P(None, ax(ba, shape[1]), ax(tp, shape[2]))
+        return P(ax(ba, shape[0]), ax(tp, shape[1]))
+    return P(*([None] * nd))
+
+
+def make_cache_specs(model, mesh, batch: int, max_len: int) -> Any:
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_cache(path, leaf.shape, mesh), shapes
+    )
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)

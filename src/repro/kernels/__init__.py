@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  dtw_band  — batched early-abandoning pruned DTW (the paper's core loop,
+              TPU-tiled: candidate-parallel grid x sequential row-blocks,
+              VMEM DP carry, SMEM abandon flag)
+  lb_keogh  — LB_Kim + LB_Keogh for every window of a reference in one pass
+
+``ops.py`` holds the jitted wrappers (interpret=True on CPU, Mosaic on TPU);
+``ref.py`` the pure-jnp oracles the tests sweep against.
+"""
+from repro.kernels.ops import dtw_ea, lb_keogh_all_windows
+
+__all__ = ["dtw_ea", "lb_keogh_all_windows"]

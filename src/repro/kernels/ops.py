@@ -1,0 +1,171 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU backends (kernel body executed in
+Python for validation) and False on TPU (real Mosaic lowering).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.dtw_band import _dtw_ea_kernel
+from repro.kernels.lb_keogh import _lb_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(
+    jax.jit,
+    static_argnames=("window", "block_k", "row_block", "interpret"),
+)
+def dtw_ea(
+    query: jax.Array,
+    candidates: jax.Array,
+    ub: jax.Array,
+    window: int,
+    cb: jax.Array | None = None,
+    block_k: int = 8,
+    row_block: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched early-abandoning pruned DTW (Pallas kernel).
+
+    Args:
+      query: ``(n,)`` z-normalized query (rows of the DP).
+      candidates: ``(K, m)`` candidate windows (columns of the DP).
+      ub: scalar upper bound.
+      window: Sakoe-Chiba window (use ``>= m`` for unconstrained).
+      cb: optional ``(K, m)`` cumulative LB_Keogh suffix sums (UCR
+        tightening); ``None`` disables.
+    Returns: ``(K,)`` float32 distances, ``+inf`` where abandoned.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    query = jnp.asarray(query, jnp.float32)
+    candidates = jnp.asarray(candidates, jnp.float32)
+    n = query.shape[0]
+    k, m = candidates.shape
+    window = int(min(window, m))
+
+    use_cb = cb is not None
+    if cb is None:
+        cb_arr = jnp.zeros((k, m), jnp.float32)
+    else:
+        cb_arr = jnp.asarray(cb, jnp.float32)
+
+    k_pad = -(-k // block_k) * block_k
+    n_pad = -(-n // row_block) * row_block
+    if k_pad != k:
+        candidates = jnp.pad(candidates, ((0, k_pad - k), (0, 0)))
+        cb_arr = jnp.pad(cb_arr, ((0, k_pad - k), (0, 0)))
+    if n_pad != n:
+        query = jnp.pad(query, (0, n_pad - n))
+
+    grid = (k_pad // block_k, n_pad // row_block)
+    kernel = partial(
+        _dtw_ea_kernel,
+        n_rows=n,
+        window=window,
+        row_block=row_block,
+        use_cb=use_cb,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((row_block,), lambda ci, ri: (ri,)),
+            pl.BlockSpec((block_k, m), lambda ci, ri: (ci, 0)),
+            pl.BlockSpec((block_k, m), lambda ci, ri: (ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_k,), lambda ci, ri: (ci,)),
+        out_shape=jax.ShapeDtypeStruct((k_pad,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_k, m), jnp.float32),
+            pltpu.VMEM((block_k, 1), jnp.int32),
+            pltpu.VMEM((block_k, 2), jnp.int32),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        jnp.reshape(jnp.asarray(ub, jnp.float32), (1,)),
+        query,
+        candidates,
+        cb_arr,
+    )
+    return out[:k]
+
+
+@partial(
+    jax.jit,
+    static_argnames=("length", "chunk", "interpret"),
+)
+def lb_keogh_all_windows(
+    ref: jax.Array,
+    mu: jax.Array,
+    sigma: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    qends: jax.Array,
+    length: int,
+    chunk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """LB_Kim + LB_Keogh for every z-normalized window of ``ref``.
+
+    Args:
+      ref: ``(N,)`` reference series (resident in VMEM — suitable for
+        references up to a few MB; shard first for longer ones).
+      mu, sigma: per-window stats ``(N_win,)`` (from search.znorm).
+      upper, lower: query envelope ``(length,)``.
+      qends: ``(2,)`` first/last value of the z-normalized query (LB_Kim).
+    Returns: ``(N_win,)`` lower bounds (max of Kim and Keogh).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    ref = jnp.asarray(ref, jnp.float32)
+    n = ref.shape[0]
+    n_win = n - length + 1
+    n_pad = -(-n_win // chunk) * chunk
+    mu_p = jnp.pad(jnp.asarray(mu, jnp.float32), (0, n_pad - n_win))
+    sg_p = jnp.pad(jnp.asarray(sigma, jnp.float32), (0, n_pad - n_win), constant_values=1.0)
+    # pad ref so every chunk can read ``chunk + length`` samples
+    ref_p = jnp.pad(ref, (0, n_pad + length - n))
+
+    grid = (n_pad // chunk,)
+    kernel = partial(_lb_kernel, length=length, chunk=chunk, n_win=n_win)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # query endpoints (2,)
+            pl.BlockSpec(memory_space=pltpu.VMEM),  # full ref in VMEM
+            pl.BlockSpec((chunk,), lambda ci: (ci,)),
+            pl.BlockSpec((chunk,), lambda ci: (ci,)),
+            pl.BlockSpec(memory_space=pltpu.VMEM),  # envelope upper, full
+            pl.BlockSpec(memory_space=pltpu.VMEM),  # envelope lower, full
+        ],
+        out_specs=pl.BlockSpec((chunk,), lambda ci: (ci,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(
+        jnp.asarray(qends, jnp.float32),
+        ref_p,
+        mu_p,
+        sg_p,
+        jnp.asarray(upper, jnp.float32),
+        jnp.asarray(lower, jnp.float32),
+    )
+    return out[:n_win]

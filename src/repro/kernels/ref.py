@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the reference semantics each kernel must reproduce; tests sweep
+shapes/dtypes and ``assert_allclose`` kernel-vs-ref in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dtw import dtw
+from repro.core.ea_pruned_dtw import ea_pruned_dtw
+from repro.core.lower_bounds import envelope, lb_keogh, lb_kim_fl
+from repro.search.znorm import gather_norm_windows
+
+
+def dtw_ea_ref(
+    query: jax.Array,
+    candidates: jax.Array,
+    ub: jax.Array,
+    window: int,
+    cb: jax.Array | None = None,
+) -> jax.Array:
+    """Reference for kernels.ops.dtw_ea: vmapped full-row EAPrunedDTW."""
+    m = candidates.shape[-1]
+    win = None if window >= m else int(window)
+    if cb is None:
+        fn = lambda c: ea_pruned_dtw(query, c, ub, window=win)
+        return jax.vmap(fn)(candidates)
+    fn = lambda c, cbv: ea_pruned_dtw(query, c, ub, window=win, cb=cbv)
+    return jax.vmap(fn)(candidates, cb)
+
+
+def dtw_exact_ref(query: jax.Array, candidates: jax.Array, window: int) -> jax.Array:
+    """Unpruned exact DTW per candidate (for value checks of survivors)."""
+    m = candidates.shape[-1]
+    win = None if window >= m else int(window)
+    return jax.vmap(lambda c: dtw(query, c, window=win))(candidates)
+
+
+def lb_all_windows_ref(
+    ref: jax.Array,
+    query_n: jax.Array,
+    mu: jax.Array,
+    sigma: jax.Array,
+    length: int,
+    window: int,
+) -> jax.Array:
+    """Reference for kernels.ops.lb_keogh_all_windows."""
+    n_win = ref.shape[0] - length + 1
+    starts = jnp.arange(n_win)
+    cand = gather_norm_windows(ref, starts, length, mu, sigma)
+    u, low = envelope(query_n, window)
+    return jnp.maximum(lb_keogh(cand, u, low), lb_kim_fl(query_n, cand))

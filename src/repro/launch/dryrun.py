@@ -1,0 +1,394 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). 512 host devices back both the 16x16 single-pod mesh
+# and the 2x16x16 multi-pod mesh.
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the jitted step (train_step / prefill / decode) with the
+     production in/out shardings,
+  2. ``.lower(**abstract inputs).compile()`` — sharding mismatches, OOM at
+     compile, and unsupported collectives all fail HERE, which is the point,
+  3. records ``compiled.cost_analysis()`` (FLOPs / bytes), the collective
+     operands parsed from the post-SPMD HLO, ``memory_analysis()``, and the
+     analytic per-device bytes of params/optimizer/cache,
+  4. writes one JSON per cell under results/dryrun/ (resumable).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--force]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES
+from repro.distributed import hints
+from repro.distributed.sharding import (
+    batch_axes,
+    make_batch_specs,
+    make_cache_specs,
+    make_param_specs,
+    make_state_specs,
+    named,
+)
+from repro.launch.input_specs import (
+    applicable,
+    decode_inputs,
+    prefill_inputs,
+    train_batch_specs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build
+from repro.roofline.hlo_stats import analyze_hlo
+from repro.train.train_step import init_state, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+OPT_RESULTS_DIR = RESULTS_DIR + "_opt"
+
+
+def _bytes_of(tree) -> int:
+    return sum(
+        leaf.size * jnp.dtype(leaf.dtype).itemsize for leaf in jax.tree.leaves(tree)
+    )
+
+
+def _sharded_bytes(shapes, specs, mesh) -> int:
+    """Per-device bytes given PartitionSpecs (analytic, no allocation)."""
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(shapes), jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        shards = 1
+        for entry in tuple(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                shards *= mesh.shape[a]
+        total += leaf.size * jnp.dtype(leaf.dtype).itemsize // max(shards, 1)
+    return total
+
+
+# Per-arch config tuning applied only in the optimized sweep (§Perf-E1):
+# kimi's 384-expert dispatch conflicts with generic anchors; the shard_map
+# expert-parallel MoE + halved microbatch count turns the 0.8x regression
+# into a 1.67x win (collective 385->211s, memory 165->121s).
+OPT_OVERRIDES: dict = {
+    "kimi-k2-1t-a32b": {"train_4k": dict(moe_impl="ep", num_microbatches=8)},
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, optimized: bool = False) -> dict:
+    import dataclasses
+
+    cfg = ARCHS[arch]
+    if optimized:
+        over = OPT_OVERRIDES.get(arch, {}).get(shape_name)
+        if over:
+            cfg = dataclasses.replace(cfg, **over)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if optimized:
+        # §Perf: activation anchors everywhere; sequence parallelism for
+        # prefill (long S, no backward) — measured win; hurts short-S train.
+        hints.set_axes(batch_axes(mesh), seq_parallel=(shape.kind == "prefill"), mesh=mesh)
+    else:
+        hints.clear()
+    model = build(cfg)
+    t0 = time.time()
+    result: dict = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mesh": dict(zip(mesh.axis_names, [mesh.shape[a] for a in mesh.axis_names])),
+        "kind": shape.kind,
+    }
+
+    pspecs = make_param_specs(model, mesh)
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    result["param_count"] = int(sum(l.size for l in jax.tree.leaves(pshapes)))
+    result["param_bytes_per_device"] = _sharded_bytes(pshapes, pspecs, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            train_step = make_train_step(model)
+            sspecs = make_state_specs(model, mesh)
+            sshapes = jax.eval_shape(lambda k: init_state(model, k), jax.random.PRNGKey(0))
+            batch = train_batch_specs(cfg, shape)
+            bspecs = make_batch_specs(batch, mesh)
+            result["state_bytes_per_device"] = _sharded_bytes(sshapes, sspecs, mesh)
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(named(mesh, sspecs), named(mesh, bspecs)),
+                out_shardings=(named(mesh, sspecs), named(mesh, P())),
+            )
+            lowered = jitted.lower(sshapes, batch)
+        elif shape.kind == "prefill":
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            cspecs = make_cache_specs(model, mesh, shape.global_batch, shape.seq_len)
+            result["cache_bytes_per_device"] = _sharded_bytes(cache_shapes, cspecs, mesh)
+            inp = prefill_inputs(cfg, shape)
+            key0 = "embeds" if "embeds" in inp else "tokens"
+            ispec = make_batch_specs(inp, mesh)[key0]
+            if model.prefill is not None:
+                fn = lambda p, cache, x: model.prefill(p, cache, **{key0: x})
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(
+                        named(mesh, pspecs),
+                        named(mesh, cspecs),
+                        named(mesh, ispec),
+                    ),
+                )
+                lowered = jitted.lower(pshapes, cache_shapes, inp[key0])
+            else:
+                # hybrid archs: prefill compute == forward over the prompt
+                fn = lambda p, x: model.forward(p, **{key0: x})
+                jitted = jax.jit(
+                    fn, in_shardings=(named(mesh, pspecs), named(mesh, ispec))
+                )
+                lowered = jitted.lower(pshapes, inp[key0])
+        else:  # decode
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            cspecs = make_cache_specs(model, mesh, shape.global_batch, shape.seq_len)
+            result["cache_bytes_per_device"] = _sharded_bytes(cache_shapes, cspecs, mesh)
+            if optimized:
+                # §Perf-D4: inference has no optimizer state; if TP-sharded
+                # weights + cache fit HBM, drop FSDP sharding and its
+                # per-layer weight all-gathers (measured 60x collective).
+                # Only when the batch actually shards the data axis — at
+                # batch=1 (long_500k) distributed weights are the win.
+                param_bytes = _bytes_of(pshapes)
+                tp_resident = param_bytes / mesh.shape["model"]
+                budget = 14 * 2**30
+                ba_tot = 1
+                for a in batch_axes(mesh):
+                    ba_tot *= mesh.shape[a]
+                fits = tp_resident + result["cache_bytes_per_device"] <= budget
+                batched = shape.global_batch % ba_tot == 0
+                if fits and batched:
+                    pspecs = make_param_specs(model, mesh, fsdp_shard=False)
+                    result["decode_fsdp"] = False
+                else:
+                    result["decode_fsdp"] = True
+            inp = decode_inputs(cfg, shape)
+            ba = batch_axes(mesh)
+            tot = 1
+            for a in ba:
+                tot *= mesh.shape[a]
+            tok_spec = P(ba if shape.global_batch % tot == 0 else None, None)
+            fn = lambda p, cache, tok, pos: model.decode_step(p, cache, tok, pos)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(
+                    named(mesh, pspecs),
+                    named(mesh, cspecs),
+                    named(mesh, tok_spec),
+                    named(mesh, P()),
+                ),
+                out_shardings=(None, named(mesh, cspecs)),
+            )
+            lowered = jitted.lower(
+                pshapes, cache_shapes, inp["tokens"], inp["pos"]
+            )
+
+        result["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 2)
+
+        ca = compiled.cost_analysis() or {}
+        result["cost_analysis"] = {
+            k: float(v)
+            for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in (
+                "flops", "bytes accessed", "transcendentals",
+                "bytes accessed from memory", "utilization operand",
+            ) or k in ("flops", "bytes accessed")
+        }
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                result["memory_analysis"] = {
+                    attr: int(getattr(ma, attr))
+                    for attr in (
+                        "argument_size_in_bytes", "output_size_in_bytes",
+                        "temp_size_in_bytes", "generated_code_size_in_bytes",
+                        "alias_size_in_bytes",
+                    )
+                    if hasattr(ma, attr)
+                }
+        except Exception as e:  # CPU backend may not expose it
+            result["memory_analysis_error"] = str(e)
+
+        hlo = compiled.as_text()
+        stats = analyze_hlo(hlo)
+        result["hlo_stats"] = stats
+        result["collectives"] = {
+            "total_bytes": stats["collective_total"],
+            "per_op_bytes": stats["collective_bytes"],
+            "counts": stats["collective_counts"],
+        }
+        result["hlo_bytes"] = len(hlo)
+    result["status"] = "ok"
+    result["optimized"] = optimized
+    result["total_s"] = round(time.time() - t0, 2)
+    hints.clear()
+    return result
+
+
+def lower_search_cell(multi_pod: bool) -> dict:
+    """Dry-run the paper's own workload: distributed EAPrunedDTW search
+    sharded over every axis of the production mesh."""
+    from repro.configs import SEARCH_CONFIG as SC
+    from repro.search.distributed import make_distributed_search
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    result: dict = {
+        "arch": "dtw-search", "shape": f"N{SC.ref_len}_l{SC.query_len}",
+        "multi_pod": multi_pod, "kind": "search",
+        "mesh": dict(zip(mesh.axis_names, [mesh.shape[a] for a in mesh.axis_names])),
+    }
+    search = make_distributed_search(
+        mesh, tuple(mesh.axis_names), length=SC.query_len, window=SC.window,
+        batch=SC.batch,
+    )
+    ref = jax.ShapeDtypeStruct((SC.ref_len,), jnp.float32)
+    query = jax.ShapeDtypeStruct((SC.query_len,), jnp.float32)
+    lowered = search.lower(ref, query)
+    result["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t1, 2)
+    ca = compiled.cost_analysis() or {}
+    result["cost_analysis"] = {
+        k: float(v) for k, v in ca.items()
+        if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")
+    }
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo)
+    result["hlo_stats"] = stats
+    result["collectives"] = {
+        "total_bytes": stats["collective_total"],
+        "per_op_bytes": stats["collective_bytes"],
+        "counts": stats["collective_counts"],
+    }
+    result["note"] = (
+        "search rounds are data-dependent (dynamic while); HLO stats are "
+        "per-round lower bounds — see benchmarks/bench_suites.py for "
+        "measured round counts"
+    )
+    result["status"] = "ok"
+    result["total_s"] = round(time.time() - t0, 2)
+    return result
+
+
+def cell_path(arch, shape_name, multi_pod, optimized=False):
+    tag = "multipod" if multi_pod else "pod"
+    base = OPT_RESULTS_DIR if optimized else RESULTS_DIR
+    return os.path.join(base, f"{arch}__{shape_name}__{tag}.json")
+
+
+def run_cell(arch, shape_name, multi_pod, force=False, optimized=False) -> dict:
+    path = cell_path(arch, shape_name, multi_pod, optimized)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    try:
+        res = lower_cell(arch, shape_name, multi_pod, optimized)
+    except Exception as e:
+        res = {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "status": "error", "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--search", action="store_true", help="dry-run the paper's search workload")
+    ap.add_argument("--opt", action="store_true", help="optimized shardings (results/dryrun_opt)")
+    args = ap.parse_args()
+
+    if args.search:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        for mp in ([False, True] if args.both_meshes else [args.multipod]):
+            tag = "multipod" if mp else "pod"
+            path = os.path.join(RESULTS_DIR, f"dtw-search__{tag}.json")
+            if os.path.exists(path) and not args.force:
+                continue
+            try:
+                res = lower_search_cell(mp)
+            except Exception as e:
+                res = {"arch": "dtw-search", "multi_pod": mp, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            print(f"{res.get('status', '?').upper():5s} dtw-search {tag} "
+                  f"coll={res.get('collectives', {}).get('total_bytes', 0):.3e}B "
+                  f"compile={res.get('compile_s', 0)}s", flush=True)
+        return
+
+    cells = []
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    n_ok = n_skip = n_err = 0
+    for a, s, mp in cells:
+        res = run_cell(a, s, mp, force=args.force, optimized=args.opt)
+        status = res.get("status")
+        tag = "multipod" if mp else "pod"
+        if status == "ok":
+            n_ok += 1
+            ca = res.get("cost_analysis", {})
+            print(
+                f"OK   {a:24s} {s:12s} {tag:8s} "
+                f"flops={ca.get('flops', 0):.3e} "
+                f"coll={res['collectives'].get('total_bytes', 0):.3e}B "
+                f"compile={res.get('compile_s', 0):.0f}s",
+                flush=True,
+            )
+        elif status == "skipped":
+            n_skip += 1
+            print(f"SKIP {a:24s} {s:12s} {tag:8s} ({res['reason']})", flush=True)
+        else:
+            n_err += 1
+            print(f"ERR  {a:24s} {s:12s} {tag:8s} {res.get('error')}", flush=True)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x shape) cell.
+
+Nothing here allocates: the dry-run lowers ``train_step`` / ``serve_step``
+against these abstract inputs only. Modality frontends are stubs per the
+assignment: ``[vlm]``/``[audio]`` cells feed precomputed patch/frame
+embeddings of the assigned sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict = {"labels": SDS((b, s), jnp.int32)}
+    if cfg.input_embeds:
+        batch["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            batch["tokens"] = SDS((b, s), jnp.int32)
+    else:
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_embeds:
+        return {"embeds": SDS((b, s, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    return {
+        "tokens": SDS((b, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+
+
+def cache_shapes(model, shape: ShapeConfig):
+    """Abstract KV/state cache for a decode cell (seq_len of context)."""
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+
+
+def applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is this (arch x shape) cell runnable? (False, reason) if skipped."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "full quadratic attention; long_500k requires sub-quadratic"
+    return True, ""

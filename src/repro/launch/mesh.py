@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module touches
+no jax device state. Target: TPU v5e pods — 16x16 = 256 chips per pod;
+multi-pod adds a leading "pod" axis (2 pods = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e class)
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (ring model)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -1,0 +1,136 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb measurement harness: lower one cell with optional experimental
+toggles, print the three roofline terms (compare against results/dryrun/).
+
+  PYTHONPATH=src python -m repro.launch.perf_cell --arch qwen2-72b \
+      --shape train_4k [--hints] [--remat-policy dots] [--tag exp1]
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES
+from repro.distributed import hints
+from repro.distributed.sharding import (
+    batch_axes,
+    make_batch_specs,
+    make_cache_specs,
+    make_param_specs,
+    make_state_specs,
+    named,
+)
+from repro.launch.input_specs import decode_inputs, train_batch_specs
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS, make_production_mesh
+from repro.models.registry import build
+from repro.roofline.hlo_stats import analyze_hlo
+from repro.train.train_step import init_state, make_train_step
+
+
+def measure(arch: str, shape_name: str, use_hints: bool, multi_pod: bool = False):
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build(cfg)
+    if use_hints:
+        hints.set_axes(batch_axes(mesh), mesh=mesh)
+    else:
+        hints.clear()
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            train_step = make_train_step(model)
+            sspecs = make_state_specs(model, mesh)
+            sshapes = jax.eval_shape(lambda k: init_state(model, k), jax.random.PRNGKey(0))
+            batch = train_batch_specs(cfg, shape)
+            bspecs = make_batch_specs(batch, mesh)
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(named(mesh, sspecs), named(mesh, bspecs)),
+                out_shardings=(named(mesh, sspecs), named(mesh, P())),
+            )
+            compiled = jitted.lower(sshapes, batch).compile()
+        elif shape.kind == "decode":
+            pspecs = make_param_specs(model, mesh)
+            pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            cspecs = make_cache_specs(model, mesh, shape.global_batch, shape.seq_len)
+            inp = decode_inputs(cfg, shape)
+            ba = batch_axes(mesh)
+            tot = 1
+            for a in ba:
+                tot *= mesh.shape[a]
+            tok_spec = P(ba if shape.global_batch % tot == 0 else None, None)
+            fn = lambda p, cache, tok, pos: model.decode_step(p, cache, tok, pos)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(named(mesh, pspecs), named(mesh, cspecs),
+                              named(mesh, tok_spec), named(mesh, P())),
+                out_shardings=(None, named(mesh, cspecs)),
+            )
+            compiled = jitted.lower(pshapes, cache_shapes, inp["tokens"], inp["pos"]).compile()
+        else:  # prefill
+            pspecs = make_param_specs(model, mesh)
+            pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            from repro.launch.input_specs import prefill_inputs
+
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            cspecs = make_cache_specs(model, mesh, shape.global_batch, shape.seq_len)
+            inp = prefill_inputs(cfg, shape)
+            key0 = "embeds" if "embeds" in inp else "tokens"
+            ispec = make_batch_specs(inp, mesh)[key0]
+            if model.prefill is not None:
+                fn = lambda p, cache, x: model.prefill(p, cache, **{key0: x})
+                jitted = jax.jit(fn, in_shardings=(
+                    named(mesh, pspecs), named(mesh, cspecs), named(mesh, ispec)))
+                compiled = jitted.lower(pshapes, cache_shapes, inp[key0]).compile()
+            else:
+                fn = lambda p, x: model.forward(p, **{key0: x})
+                jitted = jax.jit(fn, in_shardings=(named(mesh, pspecs), named(mesh, ispec)))
+                compiled = jitted.lower(pshapes, inp[key0]).compile()
+
+        st = analyze_hlo(compiled.as_text())
+    hints.clear()
+    out = {
+        "compute_s": st["dot_flops"] / PEAK_FLOPS,
+        "memory_s": st["mem_bytes"] / HBM_BW,
+        "collective_s": st["collective_total"] / ICI_BW,
+        "dot_flops": st["dot_flops"],
+        "mem_bytes": st["mem_bytes"],
+        "collective_bytes": st["collective_bytes"],
+        "compile_s": round(time.time() - t0, 1),
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--hints", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    out = measure(args.arch, args.shape, args.hints, args.multipod)
+    label = f"{args.arch}/{args.shape}" + (" +hints" if args.hints else " baseline")
+    if args.tag:
+        label += f" [{args.tag}]"
+    print(f"{label}: compute={out['compute_s']:.2f}s memory={out['memory_s']:.2f}s "
+          f"collective={out['collective_s']:.2f}s (compile {out['compile_s']}s)")
+    print(json.dumps({k: v for k, v in out.items() if k != 'collective_bytes'}))
+    print("coll mix:", {k: f"{v:.2e}" for k, v in out["collective_bytes"].items()})
+
+
+if __name__ == "__main__":
+    main()

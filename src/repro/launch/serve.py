@@ -1,0 +1,62 @@
+"""Batched serving driver: prefill + decode over any registered arch.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mistral-nemo-12b \
+      --reduced --batch 4 --prompt-len 16 --new-tokens 32
+
+On the production mesh the same driver runs with sharded params and the
+sequence-sharded (or rolling/SSM) caches exercised by the decode dry-run
+cells; on CPU (--reduced) it generates for real.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models.registry import build
+from repro.serve.generate import generate
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build(cfg)
+    if model.prefill is None:
+        raise SystemExit(f"{cfg.name} (family {cfg.family}) has no prefill path")
+    params = model.init(jax.random.PRNGKey(args.seed))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"serving {cfg.name}: {n/1e6:.1f}M params, batch={args.batch}")
+
+    rng = np.random.default_rng(args.seed)
+    prompt = jax.numpy.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
+    )
+    t0 = time.time()
+    out = generate(
+        model, params, prompt, args.new_tokens,
+        temperature=args.temperature, key=jax.random.PRNGKey(args.seed),
+    )
+    jax.block_until_ready(out)
+    dt = time.time() - t0
+    tput = args.batch * args.new_tokens / dt
+    print(f"generated {args.new_tokens} tokens x {args.batch} seqs "
+          f"in {dt:.2f}s ({tput:.1f} tok/s)")
+    print("sample continuation ids:", np.asarray(out[0, args.prompt_len:])[:16])
+
+
+if __name__ == "__main__":
+    main()

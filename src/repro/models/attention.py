@@ -1,0 +1,250 @@
+"""GQA attention with sliding-window, QKV-bias, cross-attention and KV cache.
+
+Functional layers over explicit param dicts. Shapes:
+  x: (B, S, D);  q: (B, S, H, hd);  k/v: (B, T, K, hd)  (K = KV heads)
+
+Grouped attention reshapes q to (B, S, K, G, hd) with G = H // K so the
+einsum contracts per KV head — the layout that shards cleanly with the KV
+head (or head_dim) on the "model" mesh axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rope
+
+NEG = -1.0e30
+
+
+def init_attention(key, cfg, cross: bool = False) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, qd), dt),
+        "wk": dense_init(ks[1], (d, kvd), dt),
+        "wv": dense_init(ks[2], (d, kvd), dt),
+        "wo": dense_init(ks[3], (qd, d), dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((qd,), dt)
+        p["bk"] = jnp.zeros((kvd,), dt)
+        p["bv"] = jnp.zeros((kvd,), dt)
+    return p
+
+
+def _project_q(p, x, cfg):
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    return q.reshape(x.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+
+
+def _project_kv(p, x, cfg):
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    shp = x.shape[:-1] + (cfg.n_kv, cfg.head_dim)
+    return k.reshape(shp), v.reshape(shp)
+
+
+def _attend(q, k, v, mask, cfg):
+    """q (B,S,H,hd), k/v (B,T,K,hd), mask (B|1, S, T) bool -> (B,S,H*hd).
+
+    f32 accumulation happens inside the MXU (``preferred_element_type``),
+    never by materializing f32 copies of the inputs — XLA hoists per-layer
+    ``astype`` of scanned KV slices into a full-cache f32 convert otherwise
+    (measured 3x full-cache traffic per decode step, §Perf-D2).
+    """
+    b, s, h, hd = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    q = q.reshape(b, s, kheads, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum(
+        "bskgh,btkh->bkgst", q, k, preferred_element_type=jnp.float32
+    )
+    scores = scores * scale
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG)
+    if s == 1:  # decode: keep T sharded — flash-decode combine (§Perf-D3)
+        from repro.distributed import hints
+
+        scores = hints.constrain_decode_scores(scores)
+        # explicit stable softmax so the T-reductions stay local + psum
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        e = jnp.exp(scores - m)
+        e = hints.constrain_decode_scores(e)
+        probs = e / jnp.sum(e, axis=-1, keepdims=True)
+        probs = hints.constrain_decode_scores(probs)
+    else:
+        probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h * hd)
+
+
+def _attend_chunked(q, k, v, cfg, causal: bool, window: int, kv_chunk: int = 1024):
+    """Flash-style online-softmax attention, scanning KV chunks.
+
+    Never materializes the (S, T) score matrix — memory per step is
+    O(S * kv_chunk). Differentiable (scan of jnp ops) and remat-friendly.
+    q (B,S,H,hd), k/v (B,T,K,hd) -> (B,S,H*hd).
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, s, kheads, g, hd)
+    scale = hd ** -0.5
+    n_chunks = -(-t // kv_chunk)
+    t_pad = n_chunks * kv_chunk
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, kheads, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, kheads, hd).transpose(1, 0, 2, 3, 4)
+    rows = jnp.arange(s)[:, None]
+
+    def step(carry, xs):
+        acc, m_run, l_run = carry
+        kb, vb, c0 = xs
+        scores = (
+            jnp.einsum("bskgh,btkh->bkgst", qg, kb, preferred_element_type=jnp.float32)
+            * scale
+        )
+        cols = c0 + jnp.arange(kv_chunk)[None, :]
+        mask = cols < t
+        if causal:
+            mask = jnp.logical_and(mask, cols <= rows)
+            if window:
+                mask = jnp.logical_and(mask, cols > rows - window)
+        scores = jnp.where(mask[None, None, None, :, :], scores, NEG)
+        m_new = jnp.maximum(m_run, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkh->bskgh", p.astype(vb.dtype), vb).astype(jnp.float32)
+        acc = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, s, kheads, g, hd), jnp.float32)
+    m0 = jnp.full((b, kheads, g, s), NEG, jnp.float32)
+    l0 = jnp.zeros((b, kheads, g, s), jnp.float32)
+    c0s = jnp.arange(n_chunks) * kv_chunk
+    (acc, m_run, l_run), _ = jax.lax.scan(step, (acc0, m0, l0), (kc, vc, c0s))
+    denom = jnp.maximum(l_run, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    out = (acc / denom).astype(v.dtype)
+    return out.reshape(b, s, h * hd)
+
+
+def causal_mask(s: int, window: int = 0, dtype=bool) -> jax.Array:
+    """(1, S, S) causal (optionally sliding-window) mask."""
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window:
+        m = jnp.logical_and(m, j > i - window)
+    return m[None].astype(dtype)
+
+
+CHUNKED_THRESHOLD = 8192  # sequences >= this use online-softmax attention
+
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg,
+    mask: jax.Array | None = None,
+    kv_x: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    use_rope: bool = True,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill). Cross-attn if kv_x.
+
+    For sequences >= CHUNKED_THRESHOLD the flash-style chunked path is used
+    (mask is then derived from ``causal`` + ``cfg.sliding_window``; an
+    explicit ``mask`` forces the naive path).
+    """
+    src = x if kv_x is None else kv_x
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, src, cfg)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        kpos = positions if kv_positions is None else kv_positions
+        k = rope(k, kpos, cfg.rope_theta)
+    s, t = x.shape[1], src.shape[1]
+    window = cfg.sliding_window if kv_x is None else 0
+    if mask is None and max(s, t) >= CHUNKED_THRESHOLD:
+        out = _attend_chunked(q, k, v, cfg, causal=causal and kv_x is None, window=window)
+    else:
+        if mask is None:
+            if causal and kv_x is None:
+                mask = causal_mask(s, window)
+            else:
+                mask = jnp.ones((1, s, t), bool)
+        out = _attend(q, k, v, mask, cfg)
+    return out @ p["wo"]
+
+
+def init_kv_cache(batch: int, max_len: int, cfg, dtype=None) -> dict:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv, cfg.head_dim), dt),
+    }
+
+
+def decode_attention(
+    p: dict,
+    x: jax.Array,
+    pos: jax.Array,
+    cache: dict,
+    cfg,
+    window: int = 0,
+    use_rope: bool = True,
+    write_pos: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    """One-token decode with KV cache. x: (B, 1, D); pos: absolute position.
+
+    ``write_pos`` (defaults to ``pos``) is the cache slot — pass
+    ``pos % cache_len`` for rolling local-window caches; K is always roped at
+    the absolute position so relative rotations stay correct across wraps.
+    Returns (output (B, 1, D), updated cache).
+    """
+    b = x.shape[0]
+    t = cache["k"].shape[1]
+    wp = pos if write_pos is None else write_pos
+    rolling = write_pos is not None
+    q = _project_q(p, x, cfg)
+    k_new, v_new = _project_kv(p, x, cfg)
+    if use_rope:
+        posv = jnp.full((b, 1), pos, jnp.int32)
+        q = rope(q, posv, cfg.rope_theta)
+        k_new = rope(k_new, posv, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, wp, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, wp, 0, 0))
+    j = jnp.arange(t)[None, None, :]
+    if rolling:
+        # once warmed up, every slot holds one of the last ``t`` positions
+        m = jnp.logical_or(j <= pos, jnp.broadcast_to(pos >= t, j.shape))
+    else:
+        m = j <= pos
+        if window:
+            m = jnp.logical_and(m, j > pos - window)
+    out = _attend(q, k, v, jnp.broadcast_to(m, (b, 1, t)), cfg)
+    return out @ p["wo"], {"k": k, "v": v}
+
+
+def decode_cross_attention(
+    p: dict, x: jax.Array, enc_k: jax.Array, enc_v: jax.Array, cfg
+) -> jax.Array:
+    """Cross-attention during decode; encoder K/V precomputed at prefill."""
+    b, t = enc_k.shape[0], enc_k.shape[1]
+    q = _project_q(p, x, cfg)
+    mask = jnp.ones((b, 1, t), bool)
+    out = _attend(q, enc_k, enc_v, mask, cfg)
+    return out @ p["wo"]

@@ -1,0 +1,230 @@
+"""Mamba-2 (SSD — state-space duality) language model.
+
+Chunked SSD algorithm (Dao & Gu 2024, minimal-SSD form): within a chunk the
+recurrence is evaluated as a masked quadratic form (MXU-friendly), across
+chunks a linear state recurrence carries (B, H, P, N) states — O(S) total
+work, O(1)-state decode. Attention-free: runs every assigned shape including
+long_500k.
+
+Layer = RMSNorm -> [in_proj -> conv1d -> SSD -> gate -> out_proj] + residual.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import hints
+from repro.models.common import cross_entropy_loss, dense_init, embed_init, rms_norm
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_layer(key, cfg) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    d_inner, h, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n  # x, B, C all pass the conv
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.zeros((d,), dt),
+        # in_proj -> [z, x, B, C, dt]
+        "w_in": dense_init(ks[0], (d, 2 * d_inner + 2 * n + h), dt),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, conv_dim), dt) * 0.1,
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "w_out": dense_init(ks[2], (d_inner, d), dt),
+        "out_ln": jnp.zeros((d_inner,), dt),
+    }
+
+
+def _segsum(a):
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] = sum a[j+1..i]."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H); a_log: (H,) log-decay rates;
+    b, c: (B, S, N) (single group). Returns (y, last_state (B, H, P, N)).
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+
+    A = -jnp.exp(a_log)  # (H,) negative
+    xb = x.reshape(bs, nc, chunk, h, p)
+    dtb = dt.reshape(bs, nc, chunk, h)
+    bb = b.reshape(bs, nc, chunk, n)
+    cb = c.reshape(bs, nc, chunk, n)
+    da = dtb * A[None, None, None, :]          # (B, C, Q, H) log decay per step
+    da_cum = jnp.cumsum(da, axis=2)            # within-chunk cumulative
+
+    # intra-chunk (quadratic, masked)
+    L = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))      # (B, C, H, Q, Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cb, bb)      # (B, C, Q, Q)
+    m = scores[:, :, None] * L                          # (B, C, H, Q, Q)
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", m, dtb, xb)
+
+    # chunk states: contribution of each chunk to the carried state
+    decay_states = jnp.exp(da_cum[:, :, -1:, :] - da_cum)      # (B, C, Q, H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", bb, decay_states * dtb, xb)
+
+    # inter-chunk recurrence: h_{c} = exp(sum da_c) h_{c-1} + states_c
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])                 # (B, C, H)
+
+    def combine(l, r):
+        al, hl = l
+        ar, hr = r
+        return al * ar, hl * ar[..., None, None] + hr
+
+    a_sc, h_sc = jax.lax.associative_scan(
+        combine, (chunk_decay, states), axis=1
+    )
+    # state entering chunk c is h_sc[c-1] (plus h0 propagated)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_sc[:, :1]), h_sc[:, :-1]], axis=1
+    )
+    if h0 is not None:
+        # propagate the initial state through each chunk's total decay
+        total_decay = jnp.concatenate(
+            [jnp.ones_like(a_sc[:, :1]), a_sc[:, :-1]], axis=1
+        )
+        h_prev = h_prev + total_decay[..., None, None] * h0[:, None]
+
+    y_off = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", cb, h_prev, jnp.exp(da_cum)
+    )
+    y = (y_diag + y_off).reshape(bs, nc * chunk, h, p)[:, :s]
+    last = h_sc[:, -1]
+    if h0 is not None:
+        last = last + a_sc[:, -1][..., None, None] * h0
+    return y, last
+
+
+def _conv1d(w, x, tail=None):
+    k = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : xp.shape[1] - (k - 1 - i)] * w[i][None, None, :] for i in range(k)
+    )
+    return out, xp[:, -(k - 1):]
+
+
+def _split_proj(p, u, cfg):
+    d_inner, h, n = _dims(cfg)
+    z = u[..., :d_inner]
+    xc = u[..., d_inner : 2 * d_inner + 2 * n]  # conv inputs: x, B, C
+    dt = u[..., 2 * d_inner + 2 * n :]
+    return z, xc, dt
+
+
+def layer_forward(p, x, cfg, state=None, conv_tail=None):
+    """x: (B, S, D) -> (y, (new_state, new_tail))."""
+    bs, s, _ = x.shape
+    d_inner, h, n = _dims(cfg)
+    u = rms_norm(x, p["ln"], cfg.norm_eps) @ p["w_in"]
+    z, xc, dtr = _split_proj(p, u, cfg)
+    xc, new_tail = _conv1d(p["conv_w"], xc, conv_tail)
+    xc = jax.nn.silu(xc)
+    xs = xc[..., :d_inner].reshape(bs, s, h, cfg.ssm_head_dim)
+    b = xc[..., d_inner : d_inner + n]
+    c = xc[..., d_inner + n :]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    y, last = ssd_chunked(
+        xs.astype(jnp.float32), dt, p["a_log"], b.astype(jnp.float32),
+        c.astype(jnp.float32), cfg.ssm_chunk, h0=state,
+    )
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bs, s, d_inner).astype(x.dtype)
+    y = rms_norm(y, p["out_ln"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_out"], (last, new_tail)
+
+
+def init_params(key, cfg) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(keys[: cfg.n_layers])
+    return {
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.dtype)),
+        "embed": embed_init(keys[-1], (cfg.vocab, cfg.d_model), jnp.dtype(cfg.dtype)),
+    }
+
+
+def forward(params, cfg, tokens, embeds=None):
+    x = hints.constrain_acts(jnp.take(params["embed"], tokens, axis=0))
+
+    def body(x, lp):
+        y, _ = layer_forward(lp, x, cfg)
+        return hints.constrain_acts(x + y), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return hints.constrain_logits(x @ params["embed"].T), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch) -> jax.Array:
+    logits, _ = forward(params, cfg, batch["tokens"])
+    return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    d_inner, h, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "state": jnp.zeros((cfg.n_layers, batch, h, cfg.ssm_head_dim, n), jnp.float32),
+        "tail": jnp.zeros(
+            (cfg.n_layers, batch, cfg.conv_width - 1, conv_dim), jnp.dtype(cfg.dtype)
+        ),
+    }
+
+
+def prefill(params, cfg, cache, tokens):
+    """Run the full prompt, producing final per-layer SSM states + conv
+    tails (the cache) and the last-token logits."""
+    x = hints.constrain_acts(jnp.take(params["embed"], tokens, axis=0))
+
+    def body(x, lp):
+        y, (st, tail) = layer_forward(lp, x, cfg)
+        return hints.constrain_acts(x + y), (st, tail)
+
+    x, (states, tails) = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1:] @ params["embed"].T
+    return logits, {"state": states, "tail": tails}
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """O(1)-state decode step (sequence length never appears)."""
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, 1, D)
+
+    def body(x, xs):
+        lp, st, tail = xs
+        y, (new_st, new_tail) = layer_forward(lp, x, cfg, state=st, conv_tail=tail)
+        return x + y, (new_st, new_tail)
+
+    x, (new_state, new_tail) = jax.lax.scan(
+        body, x, (params["layers"], cache["state"], cache["tail"])
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T, {"state": new_state, "tail": new_tail}

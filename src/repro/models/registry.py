@@ -1,0 +1,67 @@
+"""Uniform model API over the architecture families."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.models import mamba2, rglru, transformer, whisper
+from repro.models.config import ModelConfig
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]
+    loss_fn: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    prefill: Callable[..., Any] | None = None
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        mod = transformer
+        return Model(
+            cfg=cfg,
+            init=lambda key: mod.init_params(key, cfg),
+            forward=lambda p, **kw: mod.forward(p, cfg, kw.get("tokens"), kw.get("embeds")),
+            loss_fn=lambda p, batch: mod.loss_fn(p, cfg, batch),
+            init_cache=lambda b, s: mod.init_cache(cfg, b, s),
+            decode_step=lambda p, cache, tok, pos: mod.decode_step(p, cfg, cache, tok, pos),
+            prefill=lambda p, cache, **kw: mod.prefill(
+                p, cfg, kw.get("tokens"), kw.get("embeds"), cache
+            ),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: rglru.init_params(key, cfg),
+            forward=lambda p, **kw: rglru.forward(p, cfg, kw.get("tokens")),
+            loss_fn=lambda p, batch: rglru.loss_fn(p, cfg, batch),
+            init_cache=lambda b, s: rglru.init_cache(cfg, b, s),
+            decode_step=lambda p, cache, tok, pos: rglru.decode_step(p, cfg, cache, tok, pos),
+        )
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: mamba2.init_params(key, cfg),
+            forward=lambda p, **kw: mamba2.forward(p, cfg, kw.get("tokens")),
+            loss_fn=lambda p, batch: mamba2.loss_fn(p, cfg, batch),
+            init_cache=lambda b, s: mamba2.init_cache(cfg, b, s),
+            decode_step=lambda p, cache, tok, pos: mamba2.decode_step(p, cfg, cache, tok, pos),
+            prefill=lambda p, cache, **kw: mamba2.prefill(p, cfg, cache, kw["tokens"]),
+        )
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda key: whisper.init_params(key, cfg),
+            forward=lambda p, **kw: whisper.forward(
+                p, cfg, tokens=kw.get("tokens"), embeds=kw.get("embeds")
+            ),
+            loss_fn=lambda p, batch: whisper.loss_fn(p, cfg, batch),
+            init_cache=lambda b, s: whisper.init_cache(cfg, b, s),
+            decode_step=lambda p, cache, tok, pos: whisper.decode_step(p, cfg, cache, tok, pos),
+            prefill=lambda p, cache, **kw: whisper.prefill_encoder(
+                p, cfg, kw["embeds"], cache
+            ),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,264 @@
+"""RecurrentGemma / Griffin: RG-LRU recurrent blocks + local attention (1:2).
+
+Block pattern (cfg.block_pattern, default ("rec", "rec", "attn")): two
+recurrent blocks per local-attention block. The RG-LRU recurrence
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ x_t)
+    a_t = sigmoid(gate)^(c) with c = 8 softplus temperature (Griffin eq. 5)
+
+is evaluated with ``jax.lax.associative_scan`` over the sequence — log-depth,
+TPU-native and the reason this arch runs the long_500k cell. Decode carries
+the (B, lru_width) recurrent state + a (B, conv_width) conv tail instead of a
+KV cache, so state is O(1) in sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import hints
+from repro.models.attention import (
+    attention,
+    decode_attention,
+    init_attention,
+    init_kv_cache,
+)
+from repro.models.common import cross_entropy_loss, dense_init, embed_init, rms_norm
+from repro.models.mlp import init_mlp, mlp
+
+C_TEMP = 8.0
+
+
+def init_rglru_block(key, cfg) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, w), dt),       # input branch
+        "w_gate_in": dense_init(ks[1], (d, w), dt),  # multiplicative gate branch
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), dt) * 0.1,
+        "a_gate": dense_init(ks[3], (w, w), dt),
+        "i_gate": dense_init(ks[4], (w, w), dt),
+        "a_param": jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, w))).astype(dt),
+        "w_out": dense_init(ks[5], (w, d), dt),
+    }
+
+
+def _rg_lru(p, x, h0=None):
+    """x: (B, S, W). Returns (y, h_last). Associative scan over S."""
+    bsz, s, w = x.shape
+    xf = x.astype(jnp.float32)
+    gate_a = jax.nn.sigmoid(xf @ p["a_gate"].astype(jnp.float32))
+    gate_i = jax.nn.sigmoid(xf @ p["i_gate"].astype(jnp.float32))
+    log_a0 = -C_TEMP * jax.nn.softplus(p["a_param"].astype(jnp.float32))
+    log_a = gate_a * log_a0[None, None, :]          # (B, S, W), <= 0
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    inp = mult * gate_i * xf
+
+    if h0 is not None:
+        # fold the initial state in as a virtual first element
+        a = jnp.concatenate([jnp.ones((bsz, 1, w), a.dtype), a], axis=1)
+        inp = jnp.concatenate([h0[:, None, :].astype(jnp.float32), inp], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, inp), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def _conv1d(p, x, tail=None):
+    """Causal depthwise conv, width cfg.conv_width. x (B,S,W)."""
+    k = p["conv_w"].shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : xp.shape[1] - (k - 1 - i)] * p["conv_w"][i][None, None, :]
+        for i in range(k)
+    )
+    return out, xp[:, -(k - 1):]
+
+
+def rglru_block(p, x, h0=None, conv_tail=None):
+    """Full recurrent block: gated branch * (conv -> RG-LRU) -> out proj."""
+    gate = jax.nn.gelu(x @ p["w_gate_in"])
+    u = x @ p["w_x"]
+    u, new_tail = _conv1d(p, u, conv_tail)
+    y, h_last = _rg_lru(p, u, h0)
+    return (y * gate) @ p["w_out"], h_last, new_tail
+
+
+def init_params(key, cfg) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    pattern = cfg.block_pattern or ("rec", "rec", "attn")
+    n_groups = cfg.n_layers // len(pattern)
+    rem = cfg.n_layers - n_groups * len(pattern)
+    keys = jax.random.split(key, 3)
+
+    def group(k):
+        ks = jax.random.split(k, len(pattern) * 2)
+        g = []
+        for i, kind in enumerate(pattern):
+            k1, k2 = ks[2 * i], ks[2 * i + 1]
+            p = {
+                "ln1": jnp.zeros((cfg.d_model,), dt),
+                "ln2": jnp.zeros((cfg.d_model,), dt),
+                "mlp": init_mlp(k2, cfg),
+            }
+            if kind == "rec":
+                p["rec"] = init_rglru_block(k1, cfg)
+            else:
+                p["attn"] = init_attention(k1, cfg)
+            g.append(p)
+        return tuple(g)
+
+    gkeys = jax.random.split(keys[0], max(n_groups, 1))
+    groups = jax.vmap(group)(gkeys[:n_groups]) if n_groups else ()
+    rkeys = jax.random.split(keys[1], max(rem, 1))
+    remainder = [group(rkeys[i])[i % len(pattern)] for i in range(rem)]
+    return {
+        "groups": groups,
+        "remainder": remainder,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "embed": embed_init(keys[2], (cfg.vocab, cfg.d_model), dt),
+    }
+
+
+def _apply_block(cfg, x, positions, p, kind):
+    # attention blocks use the local window: the config sets
+    # ``sliding_window == local_window`` so attention() masks correctly.
+    h_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        h, _, _ = rglru_block(p["rec"], h_in)
+    else:
+        h = attention(p["attn"], h_in, positions, cfg)
+    x = x + h
+    x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x
+
+
+def forward(params, cfg, tokens, embeds=None):
+    x = hints.constrain_acts(jnp.take(params["embed"], tokens, axis=0))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pattern = cfg.block_pattern or ("rec", "rec", "attn")
+
+    def body(x, gp):
+        for i, kind in enumerate(pattern):
+            x = _apply_block(cfg, x, positions, gp[i], kind)
+        return hints.constrain_acts(x), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if params["groups"]:
+        x, _ = jax.lax.scan(body_fn, x, params["groups"])
+    for i, p in enumerate(params["remainder"]):
+        x = _apply_block(cfg, x, positions, p, pattern[i % len(pattern)])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return hints.constrain_logits(x @ params["embed"].T), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch) -> jax.Array:
+    logits, _ = forward(params, cfg, batch["tokens"])
+    return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+# ----------------------------- serving ------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    """Recurrent state + conv tails for rec blocks; *rolling* local-window KV
+    for attention blocks — state is O(window), not O(max_len), which is what
+    makes the long_500k decode cell viable for this architecture."""
+    pattern = cfg.block_pattern or ("rec", "rec", "attn")
+    n_groups = cfg.n_layers // len(pattern)
+    rem = cfg.n_layers - n_groups * len(pattern)
+    w = cfg.lru_width or cfg.d_model
+    attn_len = min(max_len, cfg.local_window or max_len)
+    caches: dict = {"grouped": {}, "rem": {}}
+    for i, kind in enumerate(pattern):
+        g = caches["grouped"]
+        if kind == "rec":
+            g[f"h{i}"] = jnp.zeros((n_groups, batch, w), jnp.float32)
+            g[f"tail{i}"] = jnp.zeros(
+                (n_groups, batch, cfg.conv_width - 1, w), jnp.dtype(cfg.dtype)
+            )
+        else:
+            kv = init_kv_cache(batch, attn_len, cfg)
+            g[f"k{i}"] = jnp.zeros((n_groups,) + kv["k"].shape, kv["k"].dtype)
+            g[f"v{i}"] = jnp.zeros((n_groups,) + kv["v"].shape, kv["v"].dtype)
+    for i in range(rem):
+        kind = pattern[i % len(pattern)]
+        r = caches["rem"]
+        if kind == "rec":
+            r[f"h{i}"] = jnp.zeros((batch, w), jnp.float32)
+            r[f"tail{i}"] = jnp.zeros(
+                (batch, cfg.conv_width - 1, w), jnp.dtype(cfg.dtype)
+            )
+        else:
+            kv = init_kv_cache(batch, attn_len, cfg)
+            r[f"k{i}"] = kv["k"]
+            r[f"v{i}"] = kv["v"]
+    return caches
+
+
+def _decode_block(cfg, x, p, kind, cc, prefix, i, pos, attn_len):
+    """One block of decode; returns (x, updated cache entries)."""
+    new_c = {}
+    h_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        gate = jax.nn.gelu(h_in @ p["rec"]["w_gate_in"])
+        u = h_in @ p["rec"]["w_x"]
+        u, new_tail = _conv1d(p["rec"], u, cc[f"tail{i}"])
+        y, h_last = _rg_lru(p["rec"], u, cc[f"h{i}"])
+        h = (y * gate) @ p["rec"]["w_out"]
+        new_c[f"h{i}"] = h_last
+        new_c[f"tail{i}"] = new_tail
+    else:
+        h, kv = decode_attention(
+            p["attn"], h_in, pos, {"k": cc[f"k{i}"], "v": cc[f"v{i}"]}, cfg,
+            write_pos=jnp.mod(pos, attn_len),
+        )
+        new_c[f"k{i}"] = kv["k"]
+        new_c[f"v{i}"] = kv["v"]
+    x = x + h
+    x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x, new_c
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """One-token decode; attention caches are rolling local windows."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pattern = cfg.block_pattern or ("rec", "rec", "attn")
+    grouped = cache["grouped"]
+    attn_len = next(
+        (grouped[f"k{i}"].shape[2] for i, k in enumerate(pattern) if k == "attn"),
+        cfg.local_window or 1,
+    )
+
+    def body(x, xs):
+        gp, cc = xs
+        new_c = {}
+        for i, kind in enumerate(pattern):
+            x, upd = _decode_block(cfg, x, gp[i], kind, cc, "g", i, pos, attn_len)
+            new_c.update(upd)
+        return x, new_c
+
+    if params["groups"]:
+        x, new_grouped = jax.lax.scan(body, x, (params["groups"], grouped))
+    else:
+        new_grouped = grouped
+    new_rem = {}
+    for i, p in enumerate(params["remainder"]):
+        kind = pattern[i % len(pattern)]
+        x, upd = _decode_block(cfg, x, p, kind, cache["rem"], "r", i, pos, attn_len)
+        new_rem.update(upd)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T, {"grouped": new_grouped, "rem": new_rem}

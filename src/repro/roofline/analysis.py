@@ -1,0 +1,198 @@
+"""Three-term roofline analysis from the dry-run artifacts.
+
+Per (arch x shape x mesh) cell:
+    compute term    = per-device dot FLOPs       / 197 TFLOP/s (bf16, v5e)
+    memory term     = per-device HBM bytes       / 819 GB/s
+    collective term = per-device collective bytes / 50 GB/s (ICI ring model)
+
+All numerators come from the trip-count-aware HLO walk (roofline/hlo_stats.py)
+over the post-SPMD module, so they are per-device dynamic totals for one step.
+
+MODEL_FLOPS is the analytic useful work: 6·N·D for training (N = active
+params for MoE), 2·N·D for prefill/decode forward passes. The ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy/padding waste, and the
+roofline fraction (useful-compute-time / dominant-term-time) is the score a
+perfect implementation would push to 1.0.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"
+)
+
+
+def param_counts(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts, analytically from the config."""
+    d, v = cfg.d_model, cfg.vocab
+    embed = v * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "ssm":
+        d_inner = cfg.ssm_expand * d
+        h = d_inner // cfg.ssm_head_dim
+        per_layer = (
+            d * (2 * d_inner + 2 * cfg.ssm_state + h)
+            + cfg.conv_width * (d_inner + 2 * cfg.ssm_state)
+            + d_inner * d
+            + 3 * h + d_inner + d
+        )
+        total = embed + cfg.n_layers * per_layer
+        return total, total
+
+    attn = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+    if cfg.qkv_bias:
+        attn += cfg.q_dim + 2 * cfg.kv_dim
+    if cfg.is_moe:
+        ffe = cfg.moe_d_ff or cfg.d_ff
+        moe_total = cfg.n_experts * 3 * d * ffe + d * cfg.n_experts
+        moe_active = (cfg.top_k) * 3 * d * ffe + d * cfg.n_experts
+        shared = cfg.n_shared_experts * 3 * d * ffe
+        ffn_total = moe_total + shared
+        ffn_active = moe_active + shared
+    else:
+        ffn_total = ffn_active = 3 * d * cfg.d_ff
+
+    if cfg.family == "hybrid":
+        pattern = cfg.block_pattern or ("rec", "rec", "attn")
+        w = cfg.lru_width or d
+        rec = 2 * d * w + cfg.conv_width * w + 2 * w * w + w + w * d
+        n_rec = sum(1 for i in range(cfg.n_layers) if pattern[i % len(pattern)] == "rec")
+        n_attn = cfg.n_layers - n_rec
+        total = embed + n_rec * (rec + ffn_total) + n_attn * (attn + ffn_total)
+        return total, total
+
+    layers = cfg.n_layers * (attn + ffn_total)
+    layers_active = cfg.n_layers * (attn + ffn_active)
+    if cfg.family == "audio":
+        enc = (cfg.n_enc_layers or cfg.n_layers) * (attn + ffn_total)
+        cross = cfg.n_layers * (d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d)
+        layers += enc + cross
+        layers_active += enc + cross
+    total = embed + layers
+    return total, embed + layers_active
+
+
+def model_flops(cfg, shape) -> float:
+    """Global useful FLOPs for one step of this cell."""
+    total, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence; embedding table isn't multiplied
+    return 2.0 * active * shape.global_batch
+
+
+def analyze_cell(res: dict) -> dict | None:
+    if res.get("status") != "ok":
+        return None
+    cfg = ARCHS[res["arch"]]
+    shape = SHAPES[res["shape"]]
+    chips = 1
+    for v in res["mesh"].values():
+        chips *= v
+    st = res["hlo_stats"]
+    compute_s = st["dot_flops"] / PEAK_FLOPS
+    memory_s = st["mem_bytes"] / HBM_BW
+    coll_s = st["collective_total"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful_s = (mf / chips) / PEAK_FLOPS
+    bound_s = max(terms.values())
+    total_hlo_flops = st["dot_flops"] * chips
+    return {
+        "arch": res["arch"],
+        "shape": res["shape"],
+        "mesh": "2x16x16" if res["multi_pod"] else "16x16",
+        "chips": chips,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": total_hlo_flops,
+        "useful_ratio": mf / total_hlo_flops if total_hlo_flops else 0.0,
+        "roofline_fraction": useful_s / bound_s if bound_s else 0.0,
+        "param_bytes_per_device": res.get("param_bytes_per_device"),
+        "state_bytes_per_device": res.get("state_bytes_per_device"),
+        "cache_bytes_per_device": res.get("cache_bytes_per_device"),
+        "collective_mix": st["collective_bytes"],
+    }
+
+
+FIX_NOTES = {
+    "compute": "raise MXU utilization: fuse small dots, widen microbatch, drop remat on cheap layers",
+    "memory": "cut HBM traffic: better fusion, bf16 intermediates, avoid full-tensor reshards",
+    "collective": "re-shard to cut collective volume: overlap with compute, hierarchical reduce, flash-decode the KV all-gather",
+}
+
+
+def load_cells(results_dir: str = RESULTS_DIR) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            res = json.load(f)
+        if res.get("arch") == "dtw-search":
+            continue
+        if res.get("status") == "skipped":
+            rows.append({
+                "arch": res["arch"], "shape": res["shape"],
+                "mesh": "2x16x16" if res["multi_pod"] else "16x16",
+                "skipped": res["reason"],
+            })
+            continue
+        cell = analyze_cell(res)
+        if cell:
+            rows.append(cell)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def render_markdown(rows: list[dict], mesh_filter: str = "16x16") -> str:
+    out = [
+        "| arch | shape | compute | memory | collective | bound | "
+        "MODEL/HLO flops | roofline frac | fix |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh_filter and "skipped" not in r:
+            continue
+        if "skipped" in r:
+            if r["mesh"] == mesh_filter:
+                out.append(
+                    f"| {r['arch']} | {r['shape']} | — | — | — | — | — | skip | {r['skipped']} |"
+                )
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {FIX_NOTES[r['dominant']][:58]} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    rows = load_cells()
+    print(render_markdown(rows, "16x16"))
+    print()
+    print(render_markdown(rows, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,368 @@
+"""Trip-count-aware HLO statistics: dot FLOPs, HBM traffic, collective bytes.
+
+``compiled.cost_analysis()`` counts every instruction ONCE — a ``lax.scan``
+over 80 layers or 16 microbatches under-reports by that factor. This module
+re-derives the three roofline numerators by walking the post-SPMD optimized
+HLO text with loop trip counts multiplied through the call graph:
+
+  * dot_flops   — 2 * prod(result dims) * contraction size, per dot; fusions
+                  descended; while bodies multiplied by trip count. MXU work.
+  * mem_bytes   — per top-level instruction: operand + result bytes. After
+                  XLA fusion each top-level op reads its operands from HBM
+                  and writes its result, so this is a first-order HBM traffic
+                  model (fusion internals excluded).
+  * collectives — per-device ring-traffic conventions (see below); shapes in
+                  partitioned HLO are per-device shapes.
+
+Trip counts come from the loop-condition comparison constant (lax.scan emits
+``compare(iter, constant(N))``); data-dependent loops default to 1 and are
+listed in ``dynamic_loops`` so the caller can bound them separately.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_NAME_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=")
+# first lowercase-word token followed by '(' after the '=' — opcodes are
+# lowercase; dtype tokens are always followed by '[', tiled layouts use
+# uppercase T(8,128)/S(2,1), so this lands on the opcode.
+_OPCODE_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*(\w+\[[\d,]*\])")
+
+
+def _opcode_of(line: str) -> tuple[str, int]:
+    """Return (opcode, index_of_opcode) for an instruction line, or ("", -1)."""
+    eq = line.find(" = ")
+    if eq < 0:
+        return "", -1
+    m = _OPCODE_RE.search(line, eq + 3)
+    if not m:
+        return "", -1
+    return m.group(1), m.start(1)
+
+MEM_EXCLUDE = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _shape_elems(dims) * DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class Comp:
+    header: str = ""
+    lines: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # name -> (dtype, dims)
+    dot_flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll: dict = field(default_factory=dict)      # op -> bytes
+    coll_counts: dict = field(default_factory=dict)
+    fusions: list = field(default_factory=list)
+    fusion_sites: list = field(default_factory=list)  # (body_name, result_bytes)
+    calls: list = field(default_factory=list)
+    whiles: list = field(default_factory=list)    # (body, cond)
+    _io: tuple | None = None                      # cached fusion body IO
+
+
+def _fusion_io(c: Comp) -> tuple[float, float | None]:
+    """HBM traffic of one fusion body: (input_bytes, write_bytes | None).
+
+    A body parameter consumed only through ``dynamic-slice`` reads just the
+    slices (the scan-over-layers weight-stack pattern); a parameter that is
+    only the in-place target of a ``dynamic-update-slice`` reads nothing.
+    ``write_bytes`` is the update size when the root is a DUS (aliased
+    output), else None -> caller uses the call-site result size.
+    """
+    if c._io is not None:
+        return c._io
+    params: dict[str, dict] = {}
+    views: dict[str, str] = {}  # value name -> underlying param (pure views)
+    for line in c.lines:
+        if " parameter(" in line:
+            nm = _NAME_RE.match(line)
+            if nm and nm.group(1) in c.symbols:
+                params[nm.group(1)] = {"sliced": 0.0, "full": False, "alias": False}
+                views[nm.group(1)] = nm.group(1)
+    # ops that don't force a full read of a param inside a fused kernel:
+    # the generated kernel reads only the elements the slice touches.
+    TRANSPARENT = {"bitcast", "reshape", "transpose", "convert", "copy", "broadcast"}
+    write: float | None = None
+    for line in c.lines:
+        opcode, opi = _opcode_of(line)
+        if not opcode or opcode == "parameter":
+            continue
+        args = line[line.find("(", opi) + 1 :]
+        operands = [
+            an.group(1) for an in re.finditer(r"%([\w\.\-]+)", args.split("),")[0])
+        ]
+        nm = _NAME_RE.match(line)
+        result_name = nm.group(1) if nm else None
+        eq = line.find(" = ")
+        res = _SHAPE_RE.search(line, eq)
+        rb = _shape_bytes(res.group(1), res.group(2)) if res else 0
+        for k, op in enumerate(operands):
+            root = views.get(op)
+            if root is None:
+                continue
+            if opcode in TRANSPARENT and k == 0 and result_name:
+                views[result_name] = root  # propagate the view
+            elif opcode in ("dynamic-slice", "slice", "gather") and k == 0:
+                params[root]["sliced"] += rb
+            elif opcode == "dynamic-update-slice" and k == 0:
+                params[root]["alias"] = True
+            else:
+                params[root]["full"] = True
+        if line.startswith("ROOT") and opcode == "dynamic-update-slice":
+            upd = c.symbols.get(operands[1]) if len(operands) > 1 else None
+            if upd:
+                write = float(2 * _shape_bytes(*upd))
+    total_in = 0.0
+    for name, info in params.items():
+        sym = c.symbols.get(name)
+        if sym is None:
+            continue
+        full_b = _shape_bytes(*sym)
+        if info["full"]:
+            total_in += full_b
+        elif info["sliced"]:
+            total_in += info["sliced"]
+        elif info["alias"]:
+            pass  # in-place target, not read
+        else:
+            total_in += full_b  # unused/indirect: be conservative
+    c._io = (total_in, write)
+    return c._io
+
+
+def _split(hlo: str) -> dict[str, Comp]:
+    comps: dict[str, Comp] = {}
+    cur: Comp | None = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$", line)
+            if m and " = " not in line.split("(")[0]:
+                cur = Comp(header=line)
+                comps[m.group(1)] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        cur.lines.append(line)
+    return comps
+
+
+def _analyze_comp(c: Comp) -> None:
+    # symbol table: header params + instruction results
+    for name, shape in _PARAM_RE.findall(c.header):
+        m = _SHAPE_RE.match(shape)
+        if m:
+            c.symbols[name] = (m.group(1), m.group(2))
+    for line in c.lines:
+        nm = _NAME_RE.match(line)
+        if not nm:
+            continue
+        name = nm.group(1)
+        eq = line.find("=")
+        # result shape: first shape token after '='
+        m = _SHAPE_RE.search(line, eq)
+        if m:
+            c.symbols[name] = (m.group(1), m.group(2))
+
+    coll = defaultdict(float)
+    counts = defaultdict(int)
+    for line in c.lines:
+        opcode, opi = _opcode_of(line)
+        # ---- collectives ----
+        matched_coll = None
+        for op in COLLECTIVES:
+            if opcode in (op, op + "-start"):
+                matched_coll = op
+                break
+        if matched_coll:
+            eq = line.find(" = ")
+            seg = line[eq + 3 : opi]
+            b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(seg))
+            if matched_coll == "all-reduce":
+                b *= 2
+            elif matched_coll == "reduce-scatter":
+                m = _GROUPS_EXPL_RE.search(line)
+                g = len(m.group(1).split(",")) if m else 0
+                if not g:
+                    m = _GROUPS_IOTA_RE.search(line)
+                    g = int(m.group(2)) if m else 1
+                b *= g
+            coll[matched_coll] += b
+            counts[matched_coll] += 1
+        # ---- structure ----
+        if opcode == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", line)
+            cm = re.search(r"condition=%?([\w\.\-]+)", line)
+            if bm:
+                c.whiles.append((bm.group(1), cm.group(1) if cm else ""))
+        fm = re.search(r"calls=%?([\w\.\-]+)", line)
+        if fm and opcode == "fusion":
+            c.fusions.append(fm.group(1))
+        for cm in re.finditer(r"(?:branch_computations=\{|to_apply=)%?([\w\.\-]+)", line):
+            c.calls.append(cm.group(1))
+        if opcode == "call" and fm:
+            c.calls.append(fm.group(1))
+        # ---- dot flops ----
+        if opcode in ("dot", "dot-general"):
+            eq = line.find(" = ")
+            res = _SHAPE_RE.search(line, eq)
+            out_elems = _shape_elems(res.group(2)) if res else 0
+            # lhs operand name
+            args = line[line.find("(", opi) + 1 :]
+            am = re.match(r"\s*%([\w\.\-]+)", args)
+            contraction = 1
+            if am and am.group(1) in c.symbols:
+                lhs_dims = c.symbols[am.group(1)][1]
+                dims = [int(x) for x in lhs_dims.split(",")] if lhs_dims else []
+                cm2 = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                if cm2 and cm2.group(1):
+                    for ci in cm2.group(1).split(","):
+                        contraction *= dims[int(ci)]
+            c.dot_flops += 2.0 * out_elems * contraction
+        # ---- memory ----
+        if opcode and opcode not in MEM_EXCLUDE and opcode != "fusion":
+            eq = line.find(" = ")
+            seg = line[eq + 3 : opi]
+            rb = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(seg))
+            args = line[line.find("(", opi) + 1 :]
+            operands = [
+                an.group(1)
+                for an in re.finditer(r"%([\w\.\-]+)", args.split("),")[0])
+            ]
+            if opcode in ("dynamic-slice", "slice", "gather"):
+                # reads only the slice it produces
+                c.mem_bytes += 2 * rb
+            elif opcode == "dynamic-update-slice":
+                # in-place: reads the update, writes the region
+                upd = c.symbols.get(operands[1]) if len(operands) > 1 else None
+                c.mem_bytes += 2 * _shape_bytes(*upd) if upd else rb
+            else:
+                ob = 0
+                for name_ in operands:
+                    sym = c.symbols.get(name_)
+                    if sym:
+                        ob += _shape_bytes(sym[0], sym[1])
+                c.mem_bytes += rb + ob
+        elif opcode == "fusion":
+            # traffic computed from the fused body (dynamic-slice aware);
+            # record the callee + result bytes for the second pass
+            eq = line.find(" = ")
+            seg = line[eq + 3 : opi]
+            rb = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(seg))
+            if fm:
+                c.fusion_sites.append((fm.group(1), rb))
+    c.coll = dict(coll)
+    c.coll_counts = dict(counts)
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps = _split(hlo)
+    for c in comps.values():
+        _analyze_comp(c)
+
+    def trip(cond: str) -> int:
+        c = comps.get(cond)
+        if c is None:
+            return 1
+        consts = [int(x) for l in c.lines for x in _CONST_RE.findall(l)]
+        # also look one fusion deep (compare is often wrapped)
+        for f in c.fusions + c.calls:
+            fc = comps.get(f)
+            if fc:
+                consts += [int(x) for l in fc.lines for x in _CONST_RE.findall(l)]
+        return max(consts) if consts else 1
+
+    dynamic_loops: list[str] = []
+
+    memo: dict[tuple, dict] = {}
+
+    def total(name: str, seen=()) -> dict:
+        key = (name,)
+        if key in memo:
+            return memo[key]
+        c = comps.get(name)
+        if c is None or name in seen:
+            return {"flops": 0.0, "mem": 0.0, "coll": {}}
+        flops = c.dot_flops
+        mem = c.mem_bytes
+        coll = defaultdict(float, c.coll)
+        for body, rb in c.fusion_sites:
+            fc = comps.get(body)
+            if fc is not None:
+                tin, w = _fusion_io(fc)
+                mem += tin + (w if w is not None else rb)
+            else:
+                mem += rb
+        for f in c.fusions:
+            sub = total(f, seen + (name,))
+            flops += sub["flops"]  # fusion internals: flops yes, HBM no
+        for cal in c.calls:
+            sub = total(cal, seen + (name,))
+            flops += sub["flops"]
+            mem += sub["mem"]
+            for k, v in sub["coll"].items():
+                coll[k] += v
+        for body, cond in c.whiles:
+            n = trip(cond)
+            if n == 1:
+                dynamic_loops.append(body)
+            sub = total(body, seen + (name,))
+            flops += n * sub["flops"]
+            mem += n * sub["mem"]
+            for k, v in sub["coll"].items():
+                coll[k] += n * v
+        out = {"flops": flops, "mem": mem, "coll": dict(coll)}
+        memo[key] = out
+        return out
+
+    entry = None
+    for name in comps:
+        if name.startswith("main") or "entry" in name.lower():
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    t = total(entry) if entry else {"flops": 0, "mem": 0, "coll": {}}
+    static_counts: dict[str, int] = defaultdict(int)
+    for c in comps.values():
+        for op, n in c.coll_counts.items():
+            static_counts[op] += n
+    return {
+        "entry": entry,
+        "dot_flops": float(t["flops"]),
+        "mem_bytes": float(t["mem"]),
+        "collective_bytes": {k: float(v) for k, v in t["coll"].items()},
+        "collective_total": float(sum(t["coll"].values())),
+        "collective_counts": dict(static_counts),
+        "dynamic_loops": dynamic_loops[:8],
+    }

@@ -1,0 +1,18 @@
+"""UCR-suite style similarity search built on EAPrunedDTW."""
+from repro.search.cascade import cascade, cascade_lower_bounds
+from repro.search.distributed import DistSearchResult, make_distributed_search
+from repro.search.subsequence import VARIANTS, SearchResult, subsequence_search
+from repro.search.znorm import gather_norm_windows, window_stats, znorm
+
+__all__ = [
+    "DistSearchResult",
+    "SearchResult",
+    "VARIANTS",
+    "cascade",
+    "cascade_lower_bounds",
+    "gather_norm_windows",
+    "make_distributed_search",
+    "subsequence_search",
+    "window_stats",
+    "znorm",
+]

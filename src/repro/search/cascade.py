@@ -1,0 +1,89 @@
+"""Lower-bound cascade over all candidate windows (UCR-suite stage 1).
+
+One fused, batched pass computes LB_Kim and LB_Keogh for *every* window —
+the TPU-native replacement for the UCR suite's per-candidate cascade. The
+output is a best-first candidate ordering plus per-window lower bounds, which
+stage 2 (batched EAPrunedDTW, search/subsequence.py) consumes.
+
+Chunked over windows so the materialized ``(chunk, l)`` window matrix stays
+within a fixed memory budget regardless of reference length.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lower_bounds import envelope, lb_keogh, lb_kim_fl
+from repro.search.znorm import gather_norm_windows
+
+
+class CascadeOut(NamedTuple):
+    order: jax.Array    # (N,) window starts sorted by ascending lower bound
+    lb_sorted: jax.Array  # (N,) the lower bound per sorted window
+    n_windows: int
+
+
+@partial(jax.jit, static_argnames=("length", "window", "use_kim", "use_keogh", "chunk"))
+def cascade_lower_bounds(
+    ref: jax.Array,
+    query_n: jax.Array,
+    mu: jax.Array,
+    sigma: jax.Array,
+    length: int,
+    window: int,
+    use_kim: bool = True,
+    use_keogh: bool = True,
+    chunk: int = 4096,
+) -> jax.Array:
+    """Lower bound for every candidate window start. Returns ``(N,)``.
+
+    ``query_n`` must already be z-normalized. When both bounds are enabled the
+    result is their max (both are valid DTW lower bounds).
+    """
+    n_win = ref.shape[0] - length + 1
+    u, low = envelope(query_n, window)
+
+    n_chunks = -(-n_win // chunk)
+    pad_total = n_chunks * chunk
+
+    def one_chunk(c0: jax.Array) -> jax.Array:
+        starts = c0 + jnp.arange(chunk)
+        valid = starts < n_win
+        safe = jnp.minimum(starts, n_win - 1)
+        cand = gather_norm_windows(ref, safe, length, mu, sigma)
+        lb = jnp.zeros((chunk,), cand.dtype)
+        if use_kim:
+            lb = jnp.maximum(lb, lb_kim_fl(query_n, cand))
+        if use_keogh:
+            lb = jnp.maximum(lb, lb_keogh(cand, u, low))
+        return jnp.where(valid, lb, jnp.inf)
+
+    chunk_starts = jnp.arange(n_chunks) * chunk
+    lbs = jax.lax.map(one_chunk, chunk_starts).reshape(pad_total)
+    return lbs[:n_win]
+
+
+@partial(jax.jit, static_argnames=("length", "window", "use_kim", "use_keogh", "chunk"))
+def cascade(
+    ref: jax.Array,
+    query_n: jax.Array,
+    mu: jax.Array,
+    sigma: jax.Array,
+    length: int,
+    window: int,
+    use_kim: bool = True,
+    use_keogh: bool = True,
+    chunk: int = 4096,
+) -> tuple[jax.Array, jax.Array]:
+    """Best-first ordering of window starts by lower bound.
+
+    Returns ``(order, lb_sorted)``; both ``(N,)`` with N = #windows.
+    """
+    lbs = cascade_lower_bounds(
+        ref, query_n, mu, sigma, length, window, use_kim, use_keogh, chunk
+    )
+    order = jnp.argsort(lbs)
+    return order, lbs[order]

@@ -1,0 +1,191 @@
+"""UCR-suite subsequence similarity search with EAPrunedDTW (single device).
+
+Reproduces the paper's experimental pipeline: given a long reference series R
+and a query Q, find the window of R (length = |Q|, z-normalized) with minimum
+DTW distance to z-normalized Q, under a warping window.
+
+Four variants, mirroring the paper's four suites (§5):
+
+  ``full``           — UCR:      LB cascade + exact DTW (no in-DTW pruning)
+  ``pruned``         — UCR-USP:  LB cascade + PrunedDTW (row-min abandon)
+  ``eapruned``       — UCR-MON:  LB cascade + EAPrunedDTW + cb tightening
+  ``eapruned_nolb``  — UCR-MON-nolb: EAPrunedDTW only, natural order
+
+The search is one jitted program: cascade → best-first batches inside a
+``lax.while_loop`` that stops when the next batch's smallest lower bound can
+no longer beat the incumbent (``ub``). Batches share ``ub`` (DESIGN.md §2.4).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.batch import ea_pruned_dtw_batch
+from repro.core.common import BIG
+from repro.core.dtw import dtw
+from repro.core.ea_pruned_dtw import ea_pruned_dtw_banded
+from repro.core.lower_bounds import _lb_keogh_terms, envelope
+from repro.core.pruned_dtw import pruned_dtw
+from repro.search.cascade import cascade
+from repro.search.znorm import gather_norm_windows, window_stats, znorm
+
+VARIANTS = ("full", "pruned", "eapruned", "eapruned_nolb")
+
+
+class SearchResult(NamedTuple):
+    best_start: jax.Array   # window start of the nearest neighbour
+    best_dist: jax.Array    # its DTW distance (z-normalized)
+    rounds: jax.Array       # batch rounds executed
+    lanes: jax.Array        # candidate lanes evaluated (rounds * batch)
+    lb_pruned: jax.Array    # candidates never evaluated thanks to LB ordering
+    rows: jax.Array         # DTW rows issued across all lanes
+    cells: jax.Array        # admissible DTW cells across all lanes
+
+
+def _batch_distances(variant, query_n, cand, ub, window, band_width, cb):
+    if variant == "eapruned" or variant == "eapruned_nolb":
+        return ea_pruned_dtw_batch(
+            query_n, cand, ub, window=window, band_width=band_width, cb=cb
+        )
+    if variant == "pruned":
+        fn = lambda c: pruned_dtw(query_n, c, ub, window=window)
+        return jax.vmap(fn)(cand)
+    if variant == "full":
+        fn = lambda c: dtw(query_n, c, window=window)
+        return jax.vmap(fn)(cand)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def _batch_info(variant, query_n, cand, ub, window, band_width, cb):
+    """Distances + (rows, cells) pruning counters for the batch."""
+    if variant in ("eapruned", "eapruned_nolb"):
+        fn = lambda c, cbv: ea_pruned_dtw_banded(
+            query_n, c, ub, window=window, band_width=band_width,
+            with_info=True, cb=cbv,
+        )
+        if cb is None:
+            d, info = jax.vmap(lambda c: ea_pruned_dtw_banded(
+                query_n, c, ub, window=window, band_width=band_width, with_info=True
+            ))(cand)
+        else:
+            d, info = jax.vmap(fn)(cand, cb)
+        return d, jnp.sum(info.rows), jnp.sum(info.cells)
+    if variant == "pruned":
+        d, info = jax.vmap(
+            lambda c: pruned_dtw(query_n, c, ub, window=window, with_info=True)
+        )(cand)
+        return d, jnp.sum(info.rows), jnp.sum(info.cells)
+    d = _batch_distances(variant, query_n, cand, ub, window, band_width, cb)
+    m = query_n.shape[-1]
+    k = cand.shape[0]
+    # full DTW issues every in-window cell
+    win_cells = m * (2 * window + 1) - window * (window + 1)
+    return d, jnp.asarray(k * m), jnp.asarray(k * min(win_cells, m * m))
+
+
+@partial(
+    jax.jit,
+    static_argnames=("length", "window", "variant", "batch", "band_width", "chunk"),
+)
+def subsequence_search(
+    ref: jax.Array,
+    query: jax.Array,
+    length: int,
+    window: int,
+    variant: str = "eapruned",
+    batch: int = 64,
+    band_width: int | None = None,
+    chunk: int = 4096,
+) -> SearchResult:
+    """Locate the closest z-normalized window of ``ref`` to ``query``.
+
+    Args:
+      ref: ``(N,)`` long reference series.
+      query: ``(l,)`` raw query (z-normalized internally); ``l == length``.
+      length: window/query length (static).
+      window: Sakoe-Chiba warping window in samples (static).
+      variant: one of ``VARIANTS``.
+      batch: candidates per shared-ub round (static).
+    """
+    assert variant in VARIANTS, variant
+    ref = jnp.asarray(ref)
+    query_n = znorm(jnp.asarray(query)[:length])
+    n_win = ref.shape[0] - length + 1
+    use_lb = variant != "eapruned_nolb"
+    use_cb = variant == "eapruned"
+
+    mu, sigma = window_stats(ref, length)
+    if use_lb:
+        order, lb_sorted = cascade(
+            ref, query_n, mu, sigma, length, window, chunk=chunk
+        )
+    else:
+        order = jnp.arange(n_win)
+        lb_sorted = jnp.zeros((n_win,), query_n.dtype)
+
+    u, low = envelope(query_n, window)
+    n_rounds = -(-n_win // batch)
+    pad = n_rounds * batch - n_win
+    order_p = jnp.concatenate([order, jnp.zeros((pad,), order.dtype)])
+    lb_p = jnp.concatenate([lb_sorted, jnp.full((pad,), jnp.inf, lb_sorted.dtype)])
+
+    class St(NamedTuple):
+        r: jax.Array
+        ub: jax.Array
+        best: jax.Array
+        lanes: jax.Array
+        rows: jax.Array
+        cells: jax.Array
+
+    def cond(st: St) -> jax.Array:
+        more = st.r < n_rounds
+        if not use_lb:
+            return more
+        next_lb = jax.lax.dynamic_slice(lb_p, (st.r * batch,), (1,))[0]
+        return jnp.logical_and(more, next_lb < st.ub)
+
+    def body(st: St) -> St:
+        starts = jax.lax.dynamic_slice(order_p, (st.r * batch,), (batch,))
+        lbs = jax.lax.dynamic_slice(lb_p, (st.r * batch,), (batch,))
+        cand = gather_norm_windows(ref, starts, length, mu, sigma)
+        cb = None
+        if use_cb:
+            terms = _lb_keogh_terms(cand, u, low)
+            cb = jnp.flip(jnp.cumsum(jnp.flip(terms, -1), -1), -1)
+        d, rows, cells = _batch_info(
+            variant, query_n, cand, st.ub, window, band_width, cb
+        )
+        d = jnp.where(jnp.isfinite(lbs), d, jnp.inf)  # padding lanes
+        k = jnp.argmin(d)
+        dmin = d[k]
+        improved = dmin < st.ub
+        return St(
+            r=st.r + 1,
+            ub=jnp.where(improved, dmin, st.ub),
+            best=jnp.where(improved, starts[k], st.best),
+            lanes=st.lanes + batch,
+            rows=st.rows + rows,
+            cells=st.cells + cells,
+        )
+
+    st0 = St(
+        r=jnp.asarray(0),
+        ub=jnp.asarray(BIG, query_n.dtype),
+        best=jnp.asarray(-1, order.dtype),
+        lanes=jnp.asarray(0),
+        rows=jnp.asarray(0),
+        cells=jnp.asarray(0),
+    )
+    st = jax.lax.while_loop(cond, body, st0)
+    return SearchResult(
+        best_start=st.best,
+        best_dist=st.ub,
+        rounds=st.r,
+        lanes=st.lanes,
+        lb_pruned=jnp.asarray(n_win) - jnp.minimum(st.lanes, n_win),
+        rows=st.rows,
+        cells=st.cells,
+    )

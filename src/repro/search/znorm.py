@@ -1,0 +1,59 @@
+"""Streaming z-normalization of subsequence windows via prefix sums.
+
+The UCR suite z-normalizes every candidate window of the long reference
+series. Doing that one window at a time is O(N·l); with prefix sums every
+window's mean/std comes from two table lookups, and the normalized window is
+materialized lazily only for the candidates that survive the LB cascade.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+@partial(jax.jit, static_argnames=("length",))
+def window_stats(ref: jax.Array, length: int) -> tuple[jax.Array, jax.Array]:
+    """Mean and std of every window ``ref[s : s+length]``.
+
+    Returns ``(mu, sigma)`` of shape ``(N - length + 1,)`` each.
+    """
+    n = ref.shape[0]
+    p = jnp.concatenate([jnp.zeros((1,), ref.dtype), jnp.cumsum(ref)])
+    q = jnp.concatenate([jnp.zeros((1,), ref.dtype), jnp.cumsum(ref * ref)])
+    starts = jnp.arange(n - length + 1)
+    s1 = p[starts + length] - p[starts]
+    s2 = q[starts + length] - q[starts]
+    mu = s1 / length
+    var = jnp.maximum(s2 / length - mu * mu, 0.0)
+    return mu, jnp.sqrt(var)
+
+
+@jax.jit
+def znorm(x: jax.Array) -> jax.Array:
+    """Z-normalize along the last axis (whole-series, for queries)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    sd = jnp.std(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.maximum(sd, EPS)
+
+
+@partial(jax.jit, static_argnames=("length",))
+def gather_norm_windows(
+    ref: jax.Array,
+    starts: jax.Array,
+    length: int,
+    mu: jax.Array,
+    sigma: jax.Array,
+) -> jax.Array:
+    """Materialize z-normalized windows ``(K, length)`` for given starts.
+
+    ``mu``/``sigma`` are the precomputed per-window stats indexed by start.
+    """
+    idx = starts[:, None] + jnp.arange(length)[None, :]
+    win = ref[idx]
+    m = mu[starts][:, None]
+    s = jnp.maximum(sigma[starts][:, None], EPS)
+    return (win - m) / s

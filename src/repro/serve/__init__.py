@@ -1,0 +1,4 @@
+"""Serving: batched prefill + decode generation loop."""
+from repro.serve.generate import generate
+
+__all__ = ["generate"]

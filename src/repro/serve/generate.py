@@ -1,0 +1,51 @@
+"""Batched autoregressive generation: prefill + greedy/temperature decode.
+
+The serving loop every decode-shape dry-run cell corresponds to: one prefill
+over the prompt (filling the sequence-sharded KV / SSM / rolling-SWA cache),
+then ``decode_step`` per token. Works for every registered architecture that
+exposes ``prefill`` (transformer family, mamba2, whisper-after-encoder).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def generate(
+    model,
+    params,
+    prompt_tokens: jax.Array,
+    max_new_tokens: int,
+    max_len: int | None = None,
+    temperature: float = 0.0,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Generate ``max_new_tokens`` continuations for a (B, S) prompt batch.
+
+    Greedy when ``temperature == 0``; otherwise softmax sampling. Returns
+    (B, S + max_new_tokens) tokens.
+    """
+    b, s = prompt_tokens.shape
+    total = max_len or (s + max_new_tokens)
+    cache = model.init_cache(b, total)
+    if model.prefill is None:
+        raise ValueError(f"{model.cfg.name} has no prefill path")
+    logits, cache = model.prefill(params, cache, tokens=prompt_tokens)
+
+    def sample(logits_1, k):
+        if temperature == 0.0:
+            return jnp.argmax(logits_1, axis=-1).astype(prompt_tokens.dtype)
+        probs = jax.nn.softmax(logits_1.astype(jnp.float32) / temperature, axis=-1)
+        return jax.random.categorical(k, jnp.log(probs), axis=-1).astype(
+            prompt_tokens.dtype
+        )
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    toks = [sample(logits[:, 0], key)]
+    out = prompt_tokens
+    for i in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        nxt = toks[-1][:, None]
+        logits, cache = model.decode_step(params, cache, nxt, s + i)
+        toks.append(sample(logits[:, 0], sub))
+    return jnp.concatenate([out] + [t[:, None] for t in toks], axis=1)

@@ -1,0 +1,56 @@
+"""Gradient compression with error feedback (1-bit-Adam / PowerSGD lineage).
+
+Params and grads are already bf16 on the wire; for cross-pod DCI links the
+next 2x comes from int8 quantization. Per-tensor symmetric scales, with an
+fp32 error-feedback accumulator so quantization noise is *recycled* into the
+next step instead of lost — the standard trick that keeps convergence
+(Seide et al. 2014; Tang et al. 2021).
+
+Used by ``make_train_step(grad_compression="int8")``: gradients are
+quantized after microbatch accumulation (i.e., what would cross the slow
+inter-pod links in the hierarchical reduce), dequantized for the optimizer,
+and the residual is carried.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any  # fp32, same structure as grads
+
+
+def init_error_feedback(params) -> ErrorFeedback:
+    return ErrorFeedback(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+class _QPair(NamedTuple):
+    """Distinct type so tree.map's is_leaf can't collide with model pytrees
+    (which legitimately contain plain tuples, e.g. RG-LRU group stacks)."""
+
+    deq: Any
+    res: Any
+
+
+def _quantize_one(g: jax.Array, r: jax.Array) -> _QPair:
+    """int8-quantize (g + residual); return (dequantized, new residual)."""
+    x = g.astype(jnp.float32) + r
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return _QPair(deq, x - deq)
+
+
+def compress_grads(grads, ef: ErrorFeedback) -> tuple[Any, ErrorFeedback]:
+    """Quantize every gradient tensor to int8 (simulated wire format) with
+    error feedback. Returns (dequantized grads, updated feedback state)."""
+    out = jax.tree.map(_quantize_one, grads, ef.residual)
+    is_pair = lambda x: isinstance(x, _QPair)
+    deq = jax.tree.map(lambda o: o.deq, out, is_leaf=is_pair)
+    res = jax.tree.map(lambda o: o.res, out, is_leaf=is_pair)
+    return deq, ErrorFeedback(residual=res)

@@ -1,0 +1,179 @@
+"""Optimizers: AdamW and Adafactor (factored second moments).
+
+Pure-pytree implementations (no optax dependency). Adafactor is selected for
+the 1T-parameter Kimi-K2 config: factored row/column second-moment statistics
+cost O(rows + cols) instead of O(rows * cols) and no fp32 master copy is
+kept — the difference between fitting in HBM and not (EXPERIMENTS.md §Memory).
+
+All state tensors inherit the parameter's sharding (same shape), so ZeRO-style
+optimizer-state sharding falls out of the param PartitionSpecs for free.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+class _Upd(NamedTuple):
+    """Per-leaf update bundle — a distinct type so tree.map's is_leaf can
+    stop exactly here (model params may legitimately contain plain tuples,
+    e.g. the RG-LRU group stacks)."""
+
+    p: Any
+    a: Any
+    b: Any
+
+
+class AdafactorState(NamedTuple):
+    vr: Any     # row statistics (or full v for <2D params)
+    vc: Any     # col statistics (or None-like zeros)
+    step: jax.Array
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / max(warmup, 1)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ------------------------------- AdamW -------------------------------------
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        update = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return _Upd(p_new, m_new, v_new)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    is_upd = lambda x: isinstance(x, _Upd)
+    new_params = jax.tree.map(lambda o: o.p, out, is_leaf=is_upd)
+    new_m = jax.tree.map(lambda o: o.a, out, is_leaf=is_upd)
+    new_v = jax.tree.map(lambda o: o.b, out, is_leaf=is_upd)
+    return new_params, AdamWState(m=new_m, v=new_v, step=step)
+
+
+# ------------------------------ Adafactor ----------------------------------
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(
+        vr=jax.tree.map(vr, params),
+        vc=jax.tree.map(vc, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def adafactor_update(
+    params,
+    grads,
+    state: AdafactorState,
+    lr,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** -decay  # increasing decay schedule (Shazeer & Stern)
+
+    def upd(p, g, vr, vc):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p):
+            vr_new = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc_new = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            r = vr_new / jnp.maximum(jnp.mean(vr_new, axis=-1, keepdims=True), eps)
+            precond = g32 / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc_new)[..., None, :])
+        else:
+            vr_new = beta * vr + (1 - beta) * g2
+            vc_new = vc
+            precond = g32 / jnp.sqrt(vr_new)
+        # update clipping (RMS <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(jnp.square(precond)) + 1e-12)
+        precond = precond / jnp.maximum(1.0, rms / clip_threshold)
+        p_new = (p.astype(jnp.float32) - lr * precond).astype(p.dtype)
+        return _Upd(p_new, vr_new, vc_new)
+
+    out = jax.tree.map(upd, params, grads, state.vr, state.vc)
+    is_upd = lambda x: isinstance(x, _Upd)
+    new_params = jax.tree.map(lambda o: o.p, out, is_leaf=is_upd)
+    new_vr = jax.tree.map(lambda o: o.a, out, is_leaf=is_upd)
+    new_vc = jax.tree.map(lambda o: o.b, out, is_leaf=is_upd)
+    return new_params, AdafactorState(vr=new_vr, vc=new_vc, step=step)
+
+
+def init_opt(cfg, params):
+    if cfg.optimizer == "adafactor":
+        return adafactor_init(params)
+    return adamw_init(params)
+
+
+def apply_opt(cfg, params, grads, state, lr):
+    if cfg.optimizer == "adafactor":
+        return adafactor_update(params, grads, state, lr)
+    return adamw_update(params, grads, state, lr)

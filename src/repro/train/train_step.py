@@ -1,0 +1,94 @@
+"""Train-step builder: microbatched gradient accumulation + optimizer apply.
+
+Gradients accumulate in float32 across ``cfg.num_microbatches`` sequential
+microbatches (a ``lax.scan``), which bounds peak activation memory for the
+large configs (the MoE dispatch buffer in particular scales with tokens per
+microbatch). Parameters/activations are bf16, so the gradient reduce-scatter
+traffic GSPMD emits is already 2-byte compressed on the wire; fp32 master
+accumulation lives only in the (sharded) optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import (
+    apply_opt,
+    clip_by_global_norm,
+    cosine_schedule,
+    init_opt,
+)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+    ef: Any = None  # ErrorFeedback residuals when grad compression is on
+
+
+def init_state(model, key, grad_compression: str | None = None) -> TrainState:
+    from repro.train.compression import init_error_feedback
+
+    params = model.init(key)
+    return TrainState(
+        params=params,
+        opt=init_opt(model.cfg, params),
+        step=jnp.zeros((), jnp.int32),
+        ef=init_error_feedback(params) if grad_compression else None,
+    )
+
+
+def make_train_step(
+    model,
+    base_lr: float = 3e-4,
+    warmup: int = 2000,
+    total_steps: int = 100_000,
+    max_grad_norm: float = 1.0,
+    grad_compression: str | None = None,
+):
+    """Build ``train_step(state, batch) -> (state, metrics)``.
+
+    ``batch`` leaves have leading dim ``global_batch``; it is split into
+    ``cfg.num_microbatches`` microbatches scanned sequentially.
+    """
+    cfg = model.cfg
+    n_micro = max(cfg.num_microbatches, 1)
+
+    def split_micro(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    def train_step(state: TrainState, batch: dict):
+        micro = jax.tree.map(split_micro, batch)
+
+        def micro_step(acc, mb):
+            loss, grads = jax.value_and_grad(model.loss_fn)(state.params, mb)
+            grads32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            acc_g, acc_loss = acc
+            return (jax.tree.map(jnp.add, acc_g, grads32), acc_loss + loss), None
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+        )
+        (gsum, lsum), _ = jax.lax.scan(micro_step, (zero, jnp.zeros(())), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        loss = lsum / n_micro
+
+        new_ef = state.ef
+        if grad_compression == "int8":
+            # int8 wire format for the cross-pod reduce, with error feedback
+            from repro.train.compression import compress_grads
+
+            grads, new_ef = compress_grads(grads, state.ef)
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = cosine_schedule(state.step, base_lr, warmup, total_steps)
+        new_params, new_opt = apply_opt(cfg, state.params, grads, state.opt, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(new_params, new_opt, state.step + 1, new_ef), metrics
+
+    return train_step

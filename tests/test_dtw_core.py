@@ -1,0 +1,214 @@
+"""Core DTW stack: paper-example values, oracle equivalence, properties."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    dtw,
+    dtw_matrix,
+    ea_pruned_dtw,
+    ea_pruned_dtw_banded,
+    ea_pruned_dtw_batch,
+    envelope,
+    lb_keogh_pair,
+    lb_kim_fl,
+    pruned_dtw,
+    cascade_keogh_cumulative,
+)
+from repro.core.ea_pruned_dtw_np import (
+    EATrace,
+    dtw_naive,
+    dtw_rows,
+    ea_pruned_dtw as ea_np,
+    pruned_dtw_usp,
+    pruned_left,
+)
+
+S_PAPER = np.array([3, 1, 4, 4, 1, 1], dtype=float)
+T_PAPER = np.array([1, 3, 2, 1, 2, 2], dtype=float)
+EPS = 1e-9
+
+
+class TestPaperExample:
+    """Values and abandon behaviour from the paper's running example."""
+
+    def test_dtw_value_is_9(self):
+        assert dtw_naive(S_PAPER, T_PAPER) == 9.0
+        assert dtw_rows(S_PAPER, T_PAPER) == 9.0
+        assert float(dtw(S_PAPER, T_PAPER)) == 9.0
+
+    def test_matrix_corner(self):
+        m = dtw_matrix(S_PAPER, T_PAPER)
+        assert float(m[-1, -1]) == 9.0
+        assert float(m[1, 1]) == 4.0  # cost(3,1) = 4
+
+    def test_no_abandon_at_ub9(self):
+        # Fig 3a / 4a: ub = DTW = 9 -> completes, returns 9
+        assert ea_np(S_PAPER, T_PAPER, 9.0) == 9.0
+        assert float(ea_pruned_dtw(S_PAPER, T_PAPER, 9.0)) == 9.0
+
+    def test_abandon_at_ub6_row5(self):
+        # Fig 4b: EAPrunedDTW abandons at the blue cell in row 5
+        tr = EATrace()
+        assert ea_np(S_PAPER, T_PAPER, 6.0, trace=tr) == math.inf
+        assert tr.abandoned_at_row == 5
+        _, info = ea_pruned_dtw(S_PAPER, T_PAPER, 6.0, with_info=True)
+        assert int(info.rows) == 5
+
+    def test_pruned_left_matches(self):
+        assert pruned_left(S_PAPER, T_PAPER, 9.0) == 9.0
+        assert pruned_left(S_PAPER, T_PAPER, 6.0) == math.inf
+
+
+@pytest.mark.parametrize("n,m", [(16, 16), (40, 33), (7, 25), (1, 9)])
+def test_oracle_equivalence_random(n, m):
+    rng = np.random.default_rng(n * 100 + m)
+    for _ in range(10):
+        s, t = rng.normal(size=n), rng.normal(size=m)
+        li, co = (s, t) if n >= m else (t, s)
+        d = dtw_naive(s, t)
+        assert abs(float(dtw(li, co)) - d) < 1e-8
+        for ub, exp in [(d * 0.5, math.inf), (d * (1 + EPS), d), (d * 1.5, d)]:
+            got = float(ea_pruned_dtw(li, co, ub))
+            ref = ea_np(li, co, ub)
+            assert (got == exp == ref) or (abs(got - exp) < 1e-8 and abs(ref - exp) < 1e-8)
+            gp = float(pruned_dtw(li, co, ub))
+            rp = pruned_dtw_usp(li, co, ub)
+            assert (gp == exp == rp) or (abs(gp - exp) < 1e-8 and abs(rp - exp) < 1e-8)
+
+
+@pytest.mark.parametrize("n,w", [(32, 4), (32, 16), (48, 0), (64, 63)])
+def test_windowed_and_banded(n, w):
+    rng = np.random.default_rng(n * 7 + w)
+    for _ in range(8):
+        s, t = rng.normal(size=n), rng.normal(size=n)
+        d = dtw_naive(s, t, window=w)
+        cases = [(d * 0.5, math.inf), (d * (1 + EPS), d)] if math.isfinite(d) else [(1.0, math.inf)]
+        for ub, exp in cases:
+            full = float(ea_pruned_dtw(s, t, ub, window=w))
+            band = float(
+                ea_pruned_dtw_banded(s, t, ub, window=w, band_width=min(n, 2 * w + 1))
+            )
+            ref = ea_np(s, t, ub, window=w)
+            for got in (full, band, ref):
+                assert (got == exp) or abs(got - exp) < 1e-8, (got, exp, ub, w)
+
+
+def test_cb_tightening_contract():
+    rng = np.random.default_rng(3)
+    n, w = 40, 5
+    for _ in range(10):
+        q, c = rng.normal(size=n), rng.normal(size=n)
+        u, low = envelope(jnp.asarray(q), w)
+        cb = np.asarray(cascade_keogh_cumulative(jnp.asarray(c), u, low))
+        d = dtw_naive(q, c, window=w)
+        for ub, exp in [(d * 0.5, math.inf), (d * (1 + EPS), d)]:
+            gj = float(ea_pruned_dtw(q, c, ub, window=w, cb=jnp.asarray(cb)))
+            gn = ea_np(q, c, ub, window=w, cb=cb)
+            gb = float(ea_pruned_dtw_banded(q, c, ub, window=w, cb=jnp.asarray(cb)))
+            for got in (gj, gn, gb):
+                assert (got == exp) or abs(got - exp) < 1e-8
+
+
+def test_batched_matches_single():
+    rng = np.random.default_rng(4)
+    n, w, k = 48, 6, 12
+    q = rng.normal(size=n)
+    cands = rng.normal(size=(k, n))
+    ds = np.array([dtw_naive(q, c, window=w) for c in cands])
+    ub = float(np.median(ds))
+    out = np.asarray(
+        ea_pruned_dtw_batch(jnp.asarray(q), jnp.asarray(cands), ub, window=w)
+    )
+    for i in range(k):
+        if ds[i] <= ub * (1 - 1e-12):
+            assert abs(out[i] - ds[i]) < 1e-8
+        elif ds[i] > ub * (1 + 1e-12):
+            assert math.isinf(out[i])
+
+
+def test_multivariate_dtw():
+    rng = np.random.default_rng(5)
+    n, dims = 20, 3
+    s, t = rng.normal(size=(n, dims)), rng.normal(size=(n, dims))
+    m = np.full((n + 1, n + 1), np.inf)
+    m[0, 0] = 0
+    for i in range(1, n + 1):
+        for j in range(1, n + 1):
+            c = float(((s[i - 1] - t[j - 1]) ** 2).sum())
+            m[i, j] = c + min(m[i - 1, j], m[i, j - 1], m[i - 1, j - 1])
+    assert abs(float(dtw(s, t)) - m[n, n]) < 1e-8
+    assert abs(float(ea_pruned_dtw(s, t, m[n, n] * (1 + EPS))) - m[n, n]) < 1e-8
+
+
+# ------------------------- property-based tests ----------------------------
+
+series = st.lists(
+    st.floats(min_value=-10, max_value=10, allow_nan=False), min_size=2, max_size=24
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(series)
+def test_dtw_self_distance_zero(xs):
+    s = np.asarray(xs)
+    assert dtw_naive(s, s) == 0.0
+    # EA with ub=0 must keep the tie (strictness: never abandon ties)
+    assert ea_np(s, s, 0.0) == 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(series, series)
+def test_dtw_symmetry(xs, ys):
+    s, t = np.asarray(xs), np.asarray(ys)
+    assert abs(dtw_naive(s, t) - dtw_naive(t, s)) < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(series, st.integers(min_value=0, max_value=30))
+def test_window_monotonicity(xs, w):
+    s = np.asarray(xs)
+    rng = np.random.default_rng(len(xs))
+    t = rng.normal(size=len(s))
+    d_small = dtw_naive(s, t, window=w)
+    d_big = dtw_naive(s, t, window=w + 3)
+    assert d_big <= d_small + 1e-9  # wider window can only help
+
+
+@settings(max_examples=30, deadline=None)
+@given(series, series, st.floats(min_value=0.05, max_value=4.0))
+def test_ea_contract(xs, ys, frac):
+    """EA returns exact DTW below ub and +inf above (away from ties)."""
+    s, t = np.asarray(xs), np.asarray(ys)
+    d = dtw_naive(s, t)
+    ub = d * frac
+    got = ea_np(s, t, ub)
+    if d < ub * (1 - 1e-12):
+        assert abs(got - d) < 1e-9
+    elif d > ub * (1 + 1e-12):
+        assert got == math.inf
+
+
+@settings(max_examples=30, deadline=None)
+@given(series, st.integers(min_value=0, max_value=12))
+def test_lb_validity(xs, w):
+    s = np.asarray(xs)
+    rng = np.random.default_rng(w + len(xs))
+    t = rng.normal(size=len(s))
+    d = dtw_naive(s, t, window=w)
+    assert float(lb_keogh_pair(jnp.asarray(s), jnp.asarray(t), w)) <= d + 1e-6
+    assert float(lb_kim_fl(jnp.asarray(s), jnp.asarray(t))) <= d + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(series, st.integers(min_value=0, max_value=12))
+def test_envelope_bounds(xs, w):
+    q = jnp.asarray(np.asarray(xs))
+    u, low = envelope(q, w)
+    assert bool(jnp.all(u >= q)) and bool(jnp.all(low <= q))
+    u2, l2 = envelope(q, w + 2)
+    assert bool(jnp.all(u2 >= u)) and bool(jnp.all(l2 <= low))

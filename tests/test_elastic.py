@@ -1,0 +1,123 @@
+"""Elasticity + multi-pod semantics (subprocess, 8 fake devices)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(code: str):
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=540, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_elastic_reshard_preserves_values():
+    """Shrink the data axis 4 -> 2: state values bit-identical after move."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, numpy as np
+from repro.configs import ARCHS
+from repro.models.registry import build
+from repro.distributed.fault_tolerance import elastic_reshard
+from repro.distributed.sharding import make_state_specs, named
+from repro.train.train_step import init_state
+
+cfg = ARCHS["mistral-nemo-12b"].reduced()
+model = build(cfg)
+old_mesh = jax.make_mesh((4, 2), ("data", "model"))
+# node failure: rebuild over the surviving half of the data axis
+new_mesh = jax.sharding.Mesh(old_mesh.devices[:2], ("data", "model"))
+state = jax.device_put(init_state(model, jax.random.PRNGKey(0)),
+                       named(old_mesh, make_state_specs(model, old_mesh)))
+before = np.asarray(jax.device_get(state.params["final_norm"]))
+wq_before = np.asarray(jax.device_get(state.params["layers"]["attn"]["wq"]))
+state2 = elastic_reshard(state, old_mesh, new_mesh,
+                         lambda m: make_state_specs(model, m))
+after = np.asarray(jax.device_get(state2.params["final_norm"]))
+wq_after = np.asarray(jax.device_get(state2.params["layers"]["attn"]["wq"]))
+assert np.array_equal(before, after)
+assert np.array_equal(wq_before, wq_after)
+assert len(state2.params["layers"]["attn"]["wq"].sharding.device_set) == 4
+print("ELASTIC OK")
+"""
+    assert "ELASTIC OK" in _run(code)
+
+
+def test_multipod_training_semantics():
+    """(pod, data, model) mesh: train steps run; loss matches single mesh."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, numpy as np
+from repro.configs import ARCHS
+from repro.models.registry import build
+from repro.data.lm import TokenStream
+from repro.distributed.sharding import make_state_specs, make_batch_specs, named
+from repro.train.train_step import init_state, make_train_step
+
+cfg = ARCHS["mamba2-130m"].reduced()
+model = build(cfg)
+stream = TokenStream(cfg.vocab, 8, 32, seed=0)
+
+def run(mesh):
+    sspecs = make_state_specs(model, mesh)
+    state = jax.device_put(init_state(model, jax.random.PRNGKey(0)), named(mesh, sspecs))
+    step = jax.jit(make_train_step(model), in_shardings=(named(mesh, sspecs), None),
+                   out_shardings=(named(mesh, sspecs), None))
+    for i in range(2):
+        batch = stream.batch_at(i)
+        bspecs = make_batch_specs({k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}, mesh)
+        batch = {k: jax.device_put(v, named(mesh, bspecs[k])) for k, v in batch.items()}
+        state, m = step(state, batch)
+    return float(m["loss"])
+
+multi = run(jax.make_mesh((2, 2, 2), ("pod", "data", "model")))
+single = run(jax.make_mesh((4, 2), ("data", "model")))
+print("LOSSES", multi, single)
+assert abs(multi - single) < 1e-4, (multi, single)
+print("MULTIPOD OK")
+"""
+    assert "MULTIPOD OK" in _run(code)
+
+
+def test_ep_moe_matches_dense():
+    """shard_map expert-parallel MoE == dense dispatch, bit-close (8 dev)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import dataclasses
+import jax, numpy as np, jax.numpy as jnp
+from repro.configs import ARCHS
+from repro.models.registry import build
+from repro.distributed import hints
+from repro.distributed.sharding import batch_axes, make_param_specs, named
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+base = dataclasses.replace(ARCHS["kimi-k2-1t-a32b"].reduced(), capacity_factor=100.0)
+rng = np.random.default_rng(0)
+toks = jnp.asarray(rng.integers(0, base.vocab, (8, 16)))
+outs = {}
+for impl in ("dense", "ep"):
+    cfg = dataclasses.replace(base, moe_impl=impl)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    params_s = jax.device_put(params, named(mesh, make_param_specs(model, mesh)))
+    hints.set_axes(batch_axes(mesh), mesh=mesh)
+    fwd = jax.jit(lambda p, t: model.forward(p, tokens=t)[0])
+    logits = fwd(params_s, jax.device_put(
+        toks, named(mesh, jax.sharding.PartitionSpec(("data",), None))))
+    outs[impl] = np.asarray(logits, dtype=np.float32)
+    hints.clear()
+err = np.max(np.abs(outs["dense"] - outs["ep"]))
+assert err < 2e-2, err
+print("EP MOE OK", err)
+"""
+    assert "EP MOE OK" in _run(code)

@@ -1,0 +1,130 @@
+"""Subsequence search: all four suite variants find the exact NN."""
+import math
+import subprocess
+import sys
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.ea_pruned_dtw_np import dtw_naive
+from repro.data.synthetic import DATASETS, make_dataset, make_queries
+from repro.search import subsequence_search, window_stats, znorm
+from repro.search.subsequence import VARIANTS
+
+
+def _brute(ref, q, length, window):
+    def zn(x):
+        return (x - x.mean()) / max(x.std(), 1e-8)
+
+    qn = zn(q)
+    best_d, best_s = math.inf, -1
+    for s in range(len(ref) - length + 1):
+        d = dtw_naive(qn, zn(ref[s : s + length]), window=window)
+        if d < best_d:
+            best_d, best_s = d, s
+    return best_s, best_d
+
+
+@pytest.fixture(scope="module")
+def problem():
+    rng = np.random.default_rng(3)
+    n, length, w = 900, 96, 9
+    ref = np.cumsum(rng.normal(size=n))
+    q = np.cumsum(rng.normal(size=length))
+    s, d = _brute(ref, q, length, w)
+    return ref, q, length, w, s, d
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_variant_finds_exact_nn(problem, variant):
+    ref, q, length, w, s, d = problem
+    res = subsequence_search(
+        jnp.asarray(ref), jnp.asarray(q), length=length, window=w,
+        variant=variant, batch=64,
+    )
+    assert int(res.best_start) == s
+    assert abs(float(res.best_dist) - d) < 1e-6
+
+
+def test_pruning_counters_ordering(problem):
+    """EA must issue <= rows/cells than PrunedDTW, which <= full DTW."""
+    ref, q, length, w, _, _ = problem
+    rows = {}
+    cells = {}
+    for variant in ("eapruned", "pruned", "full"):
+        res = subsequence_search(
+            jnp.asarray(ref), jnp.asarray(q), length=length, window=w,
+            variant=variant, batch=64,
+        )
+        rows[variant] = int(res.rows)
+        cells[variant] = int(res.cells)
+    assert rows["eapruned"] <= rows["pruned"] <= rows["full"]
+    assert cells["eapruned"] <= cells["pruned"] <= cells["full"]
+
+
+def test_lb_ordering_prunes_lanes(problem):
+    ref, q, length, w, _, _ = problem
+    with_lb = subsequence_search(
+        jnp.asarray(ref), jnp.asarray(q), length=length, window=w,
+        variant="eapruned", batch=64,
+    )
+    nolb = subsequence_search(
+        jnp.asarray(ref), jnp.asarray(q), length=length, window=w,
+        variant="eapruned_nolb", batch=64,
+    )
+    assert int(with_lb.lanes) < int(nolb.lanes)
+
+
+def test_window_stats_exact():
+    rng = np.random.default_rng(0)
+    ref = rng.normal(size=333)
+    length = 41
+    mu, sg = window_stats(jnp.asarray(ref), length)
+    for s in (0, 100, 292):
+        w = ref[s : s + length]
+        assert abs(float(mu[s]) - w.mean()) < 1e-9
+        assert abs(float(sg[s]) - w.std()) < 1e-9
+
+
+@pytest.mark.parametrize("name", DATASETS)
+def test_synthetic_datasets(name):
+    x = make_dataset(name, 5000, seed=0)
+    y = make_dataset(name, 5000, seed=0)
+    assert np.array_equal(x, y), "must be deterministic"
+    assert np.all(np.isfinite(x))
+    qs = make_queries(name, 3, 128, seed=1)
+    assert qs.shape == (3, 128) and np.all(np.isfinite(qs))
+
+
+def test_distributed_search_subprocess():
+    """shard_map search on 8 fake devices finds the same NN."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, numpy as np, jax.numpy as jnp
+jax.config.update("jax_enable_x64", True)
+from repro.search import make_distributed_search
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+rng = np.random.default_rng(3)
+ref = np.cumsum(rng.normal(size=900)); q = np.cumsum(rng.normal(size=96))
+search = make_distributed_search(mesh, ("data", "model"), length=96, window=9, batch=32)
+res = search(jnp.asarray(ref), jnp.asarray(q))
+print("RESULT", int(res.best_start), float(res.best_dist))
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=420,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")][0]
+    _, s, d = line.split()
+    rng = np.random.default_rng(3)
+    ref = np.cumsum(rng.normal(size=900))
+    q = np.cumsum(rng.normal(size=96))
+    bs, bd = _brute(ref, q, 96, 9)
+    assert int(s) == bs and abs(float(d) - bd) < 1e-5

@@ -1,0 +1,136 @@
+"""Sharding rules + HLO stats analyzer + multi-device placement subprocess."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.distributed.sharding import (
+    make_batch_specs,
+    make_cache_specs,
+    make_param_specs,
+    make_state_specs,
+)
+from repro.models.registry import build
+from repro.roofline.hlo_stats import analyze_hlo
+
+
+def _tree_specs_match(shapes, specs):
+    sl = jax.tree.leaves(shapes)
+    pl = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(sl) == len(pl)
+    for leaf, spec in zip(sl, pl):
+        assert len(tuple(spec)) <= len(leaf.shape), (leaf.shape, spec)
+
+
+def _fake_mesh():
+    """16x16 mesh over one repeated device — fine for spec math."""
+    import numpy as np
+    devs = np.array([jax.devices()[0]] * 256).reshape(16, 16)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_specs_structure(name):
+    """Specs exist for every param of the FULL config and dims divide."""
+    cfg = ARCHS[name]
+    model = build(cfg)
+    mesh = _fake_mesh()
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = make_param_specs(model, mesh)
+    _tree_specs_match(shapes, specs)
+    for leaf, spec in zip(
+        jax.tree.leaves(shapes), jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    ):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            tot = 1
+            for a in axes:
+                tot *= mesh.shape[a]
+            assert dim % tot == 0, (name, leaf.shape, spec)
+
+
+def test_state_and_cache_specs():
+    from repro.train.train_step import init_state
+
+    mesh = _fake_mesh()
+    model = build(ARCHS["kimi-k2-1t-a32b"])
+    sspecs = make_state_specs(model, mesh)
+    sshapes = jax.eval_shape(lambda k: init_state(model, k), jax.random.PRNGKey(0))
+    _tree_specs_match(sshapes.params, sspecs.params)
+    cshapes = jax.eval_shape(lambda: model.init_cache(128, 1024))
+    cspecs = make_cache_specs(model, mesh, 128, 1024)
+    _tree_specs_match(cshapes, cspecs)
+
+
+def test_batch_specs_uneven_batch_replicates():
+    mesh = _fake_mesh()
+    specs = make_batch_specs(
+        {"tokens": jax.ShapeDtypeStruct((1, 128), jnp.int32)}, mesh
+    )
+    assert tuple(specs["tokens"])[0] is None  # batch=1 cannot shard
+
+
+def test_hlo_stats_trip_counts():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        c, _ = jax.lax.scan(body, x, w)
+        return c.sum()
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((8, 64), jnp.float32),
+        jax.ShapeDtypeStruct((5, 64, 64), jnp.float32),
+    ).compile()
+    st = analyze_hlo(comp.as_text())
+    assert st["dot_flops"] == 2 * 8 * 64 * 64 * 5
+    assert st["mem_bytes"] > 0
+
+
+def test_sharded_training_subprocess():
+    """Real 8-device run: placement, FSDP+TP train steps, loss finite."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, numpy as np
+from repro.configs import ARCHS
+from repro.models.registry import build
+from repro.data.lm import TokenStream
+from repro.distributed.sharding import make_state_specs, make_batch_specs, named
+from repro.train.train_step import init_state, make_train_step
+
+cfg = ARCHS["mistral-nemo-12b"].reduced()
+model = build(cfg)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+sspecs = make_state_specs(model, mesh)
+state = jax.device_put(init_state(model, jax.random.PRNGKey(0)), named(mesh, sspecs))
+stream = TokenStream(cfg.vocab, 8, 32, seed=0)
+step = jax.jit(make_train_step(model), in_shardings=(named(mesh, sspecs), None),
+               out_shardings=(named(mesh, sspecs), None))
+for i in range(3):
+    batch = stream.batch_at(i)
+    bspecs = make_batch_specs({k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}, mesh)
+    batch = {k: jax.device_put(v, named(mesh, bspecs[k])) for k, v in batch.items()}
+    state, m = step(state, batch)
+print("LOSS", float(m["loss"]))
+assert np.isfinite(float(m["loss"]))
+# verify a param is actually sharded across devices
+leaf = state.params["layers"]["attn"]["wq"]
+assert len(leaf.sharding.device_set) > 1, leaf.sharding
+print("SHARDED OK")
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=420,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED OK" in out.stdout

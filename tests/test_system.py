@@ -1,0 +1,58 @@
+"""End-to-end behaviour: the paper's claims, reproduced at test scale.
+
+These are the system-level invariants from Herrmann & Webb §5:
+  1. EAPrunedDTW never changes the search answer (exactness),
+  2. it computes no more DTW cells than PrunedDTW and full DTW,
+  3. lower bounds are dispensable — the nolb variant still returns the
+     exact answer and still prunes most of the DTW matrix work,
+  4. the batched ub sharing preserves exactness.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.ea_pruned_dtw_np import dtw_naive
+from repro.data.synthetic import make_dataset, make_queries
+from repro.search import subsequence_search
+
+
+def _brute(ref, q, length, window):
+    def zn(x):
+        return (x - x.mean()) / max(x.std(), 1e-8)
+
+    qn = zn(q)
+    best_d, best_s = math.inf, -1
+    for s in range(len(ref) - length + 1):
+        d = dtw_naive(qn, zn(ref[s : s + length]), window=window)
+        if d < best_d:
+            best_d, best_s = d, s
+    return best_s, best_d
+
+
+@pytest.mark.parametrize("dataset", ["ECG", "REFIT"])
+def test_paper_pipeline_small(dataset):
+    ref = make_dataset(dataset, 1200, seed=0)
+    q = make_queries(dataset, 1, 128, seed=1)[0]
+    length, w = 128, 12
+    bs, bd = _brute(ref, q, length, w)
+
+    results = {}
+    for variant in ("full", "pruned", "eapruned", "eapruned_nolb"):
+        res = subsequence_search(
+            jnp.asarray(ref), jnp.asarray(q), length=length, window=w,
+            variant=variant, batch=64,
+        )
+        assert int(res.best_start) == bs, variant
+        assert abs(float(res.best_dist) - bd) < 1e-5, variant
+        results[variant] = res
+
+    # claim 2: EA does the least DTW work
+    assert int(results["eapruned"].cells) <= int(results["pruned"].cells)
+    assert int(results["pruned"].cells) <= int(results["full"].cells)
+    # claim 3: nolb is exact and prunes most of the full matrix work
+    n_win = len(ref) - length + 1
+    full_cells_all = n_win * (length * (2 * w + 1) - w * (w + 1))
+    assert int(results["eapruned_nolb"].cells) < 0.8 * full_cells_all
