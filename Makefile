@@ -1,0 +1,11 @@
+.PHONY: check test bench
+
+# Tier-1 tests + --quick benchmark smoke (writes BENCH_dtw.json).
+check:
+	./scripts/check.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run --json

@@ -3,6 +3,9 @@
 Table analogue of the paper's per-computation comparison: for matched
 (length, window, ub-tightness) settings, rows/cells issued by full DTW vs
 PrunedDTW vs EAPrunedDTW (banded), plus wall time of the batched JAX forms.
+``run_backends`` additionally compares the two dispatchable batch backends
+(banded-vmap JAX vs the Pallas kernel in interpret mode) per batch shape —
+interpret-mode wall time validates the dispatch layer, not TPU performance.
 CSV: name,us_per_call,derived (derived = rows or cells saved).
 """
 from __future__ import annotations
@@ -69,10 +72,49 @@ def run(length: int = 256, k: int = 256, window_ratio: float = 0.1, seed: int = 
     return rows
 
 
+def run_backends(
+    shapes=((64, 128), (256, 128), (64, 256)),
+    window_ratio: float = 0.1,
+    seed: int = 0,
+):
+    """dtw/backend micro-bench: vmap-JAX vs Pallas-interpret per batch shape."""
+    rows = []
+    rng = np.random.default_rng(seed)
+    for k, length in shapes:
+        w = max(int(length * window_ratio), 1)
+        q = znorm(jnp.asarray(np.cumsum(rng.normal(size=length)), jnp.float32))
+        cands = znorm(
+            jnp.asarray(np.cumsum(rng.normal(size=(k, length)), axis=1), jnp.float32)
+        )
+        d_exact = dtw_batch(jnp.broadcast_to(q, (k, length)), cands, window=w)
+        ub = float(np.quantile(np.asarray(d_exact), 0.5))
+        t_jax, d_jax = _bench(
+            lambda u=ub: ea_pruned_dtw_batch(q, cands, u, window=w, backend="jax")
+        )
+        t_pal, d_pal = _bench(
+            lambda u=ub: ea_pruned_dtw_batch(
+                q, cands, u, window=w, backend="pallas_interpret"
+            )
+        )
+        agree = bool(
+            np.array_equal(
+                np.isfinite(np.asarray(d_jax)), np.isfinite(np.asarray(d_pal))
+            )
+        )
+        rows.append(
+            (f"dtw/backend/k{k}/l{length}/jax", t_jax * 1e6, f"agree={agree}")
+        )
+        rows.append(
+            (f"dtw/backend/k{k}/l{length}/pallas_interpret", t_pal * 1e6, "")
+        )
+    return rows
+
+
 def main() -> None:
     out = []
     out += run(length=128, k=256, window_ratio=0.1)
     out += run(length=256, k=128, window_ratio=0.2)
+    out += run_backends()
     for name, us, derived in out:
         print(f"{name},{us:.1f},{derived}")
 

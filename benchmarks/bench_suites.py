@@ -5,6 +5,11 @@ queries, same references, wall-clock + pruning counters. Sizes default to
 CPU-tractable scales; ``--paper-scale`` selects the real ones (1M-point
 references, 1024-sample queries) for TPU runs.
 
+Timing measures the *counter-free fast round* (the serving default); the
+pruning counters come from one extra untimed ``with_info=True`` search so
+the paper's cells ratio is still reported. Backend and tuning knobs default
+to ``configs.SEARCH_CONFIG``.
+
 Output CSV: name,us_per_call,derived
   derived = cells_computed/cells_full (the paper's pruning-effectiveness ratio)
 """
@@ -16,6 +21,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.configs import SEARCH_CONFIG
 from repro.data.synthetic import DATASETS, make_dataset, make_queries
 from repro.search import subsequence_search
 from repro.search.subsequence import VARIANTS
@@ -29,7 +35,18 @@ def run(
     n_queries: int = 1,
     batch: int = 128,
     repeats: int = 2,
+    backend: str | None = None,
+    rows_per_step: int | None = None,
+    block_k: int | None = None,
+    row_block: int | None = None,
 ):
+    cfg = SEARCH_CONFIG
+    knobs = dict(
+        backend=backend if backend is not None else cfg.backend,
+        rows_per_step=rows_per_step if rows_per_step is not None else cfg.rows_per_step,
+        block_k=block_k if block_k is not None else cfg.block_k,
+        row_block=row_block if row_block is not None else cfg.row_block,
+    )
     rows = []
     totals = {v: 0.0 for v in VARIANTS}
     for ds in datasets:
@@ -50,18 +67,24 @@ def run(
                         # warmup / compile
                         res = subsequence_search(
                             ref, qj, length=length, window=w,
-                            variant=variant, batch=batch,
+                            variant=variant, batch=batch, **knobs,
                         )
                         jax.block_until_ready(res.best_dist)
                         for _ in range(repeats):
                             t0 = time.time()
                             res = subsequence_search(
                                 ref, qj, length=length, window=w,
-                                variant=variant, batch=batch,
+                                variant=variant, batch=batch, **knobs,
                             )
                             jax.block_until_ready(res.best_dist)
                             dt_best = min(dt_best, time.time() - t0)
-                        cells += int(res.cells)
+                        # untimed stats round for the pruning counters
+                        stats = subsequence_search(
+                            ref, qj, length=length, window=w,
+                            variant=variant, batch=batch, with_info=True,
+                            **knobs,
+                        )
+                        cells += int(stats.cells)
                         best = (int(res.best_start), float(res.best_dist))
                     name = f"suite/{ds}/l{length}/r{ratio}/{variant}"
                     ratio_cells = cells / (full_cells * len(queries))

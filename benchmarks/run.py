@@ -3,27 +3,60 @@
 Prints ``name,us_per_call,derived`` CSV:
   * suite/*       — paper Fig. 5 analogue (four suites x dataset x l x w)
   * dtw/*         — per-computation EA/Pruned/full work + time comparison
+  * dtw/backend/* — batch-backend dispatch comparison (vmap vs Pallas-interpret)
   * kernel/*      — Pallas kernel harness checks (interpret mode)
   * roofline/*    — dry-run-derived roofline terms per (arch x shape)
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-roofline]
+``--json`` additionally writes a ``BENCH_dtw.json`` artifact so the perf
+trajectory stays machine-readable across PRs: per-suite ``us_per_call`` and
+``cells_ratio``, plus every dtw/* micro-bench row.
+
+Usage: PYTHONPATH=src python -m benchmarks.run
+         [--quick] [--skip-roofline] [--json [PATH]]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+def _suite_record(name: str, us: float, derived: str) -> dict:
+    rec = {"name": name, "us_per_call": round(us, 1)}
+    for part in str(derived).split(";"):
+        if "=" in part:
+            key, val = part.split("=", 1)
+            try:
+                rec[key] = float(val)
+            except ValueError:
+                rec[key] = val
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument(
+        "--json", nargs="?", const="BENCH_dtw.json", default=None,
+        metavar="PATH",
+        help="also write a machine-readable artifact (default BENCH_dtw.json)",
+    )
     args = ap.parse_args()
 
     from benchmarks import bench_dtw_micro, bench_kernels, bench_suites
+
+    import jax
+
+    # quick-scale and full-scale runs are different workloads; the meta block
+    # keeps cross-PR comparisons scoped to like-for-like artifacts
+    artifact = {
+        "meta": {"quick": bool(args.quick), "backend": jax.default_backend()},
+        "suites": [], "dtw": [], "roofline": [],
+    }
 
     print("name,us_per_call,derived")
     if args.quick:
@@ -33,9 +66,15 @@ def main() -> None:
         rows = bench_suites.run()
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
+        artifact["suites"].append(_suite_record(name, us, derived))
 
-    for name, us, derived in bench_dtw_micro.run(length=128, k=128, window_ratio=0.1):
+    micro = bench_dtw_micro.run(length=128, k=128, window_ratio=0.1)
+    micro += bench_dtw_micro.run_backends(
+        shapes=((64, 128),) if args.quick else ((64, 128), (256, 128), (64, 256))
+    )
+    for name, us, derived in micro:
         print(f"{name},{us:.1f},{derived}", flush=True)
+        artifact["dtw"].append(_suite_record(name, us, derived))
 
     bench_kernels.main()
 
@@ -58,6 +97,16 @@ def main() -> None:
                 f"useful={c['useful_ratio']:.3f}",
                 flush=True,
             )
+            artifact["roofline"].append(
+                {"name": name, "bound_us": round(bound_us, 1),
+                 "bound": c["dominant"],
+                 "roofline_fraction": c["roofline_fraction"]}
+            )
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

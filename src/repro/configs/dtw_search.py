@@ -2,7 +2,27 @@
 
 Not one of the 40 assigned LM cells — this is the configuration the
 benchmarks and the distributed-search dry-run use (reference length x query
-length x window ratio, as in Herrmann & Webb §5)."""
+length x window ratio, as in Herrmann & Webb §5).
+
+Backend/tuning knobs (threaded through ``subsequence_search`` →
+``core.batch.ea_pruned_dtw_batch``, see ``core.backend`` for the dispatch
+rules):
+
+  ``backend``       — ``"auto"`` resolves to the Pallas kernel on TPU and
+                      the banded-vmap JAX path elsewhere; force with
+                      ``"pallas"`` / ``"pallas_interpret"`` / ``"jax"`` or
+                      the ``REPRO_DTW_BACKEND`` env var.
+  ``band_width``    — DP band columns per row; ``None`` = smallest
+                      lane-aligned width covering ``2*window + 1``.
+  ``rows_per_step`` — JAX backend: DP rows per while_loop iteration
+                      (amortizes vmap'd loop control; abandon granularity
+                      coarsens to the block).
+  ``block_k``       — Pallas backend: candidate lanes per grid block; the
+                      whole block must abandon before its remaining row
+                      blocks are skipped.
+  ``row_block``     — Pallas backend: DP rows per sequential grid step; the
+                      early-exit check runs once per row block.
+"""
 from dataclasses import dataclass
 
 
@@ -14,6 +34,11 @@ class SearchConfig:
     window_ratio: float = 0.1        # paper: 0.1 .. 0.5
     batch: int = 256                 # candidates per shared-ub round
     variant: str = "eapruned"
+    backend: str = "auto"            # DTW batch backend (core.backend)
+    band_width: int | None = None    # None = lane-aligned 2*window+1
+    rows_per_step: int = 1           # JAX backend loop-unroll knob
+    block_k: int = 8                 # Pallas candidate lanes per block
+    row_block: int = 128             # Pallas rows per sequential grid step
 
     @property
     def window(self) -> int:

@@ -4,10 +4,13 @@ Public API:
   dtw, dtw_batch                — exact DTW (scan formulation)
   ea_pruned_dtw                 — EAPrunedDTW, full-row vectorized
   ea_pruned_dtw_banded          — EAPrunedDTW, O(n·band) banded hot path
-  ea_pruned_dtw_batch           — batched banded EA (search unit of work)
+  ea_pruned_dtw_batch           — batched banded EA (search unit of work),
+                                  backend-dispatched (see core.backend)
+  resolve_backend, BACKENDS     — Pallas-vs-JAX backend selection
   pruned_dtw                    — PrunedDTW baseline (row-min abandon)
   envelope, lb_keogh, lb_kim_fl — lower bounds
 """
+from repro.core.backend import BACKENDS, resolve_backend
 from repro.core.batch import ea_pruned_dtw_batch, ea_search_round
 from repro.core.common import BIG
 from repro.core.dtw import dtw, dtw_batch, dtw_matrix
@@ -22,6 +25,7 @@ from repro.core.lower_bounds import (
 from repro.core.pruned_dtw import pruned_dtw
 
 __all__ = [
+    "BACKENDS",
     "BIG",
     "EAInfo",
     "cascade_keogh_cumulative",
@@ -37,4 +41,5 @@ __all__ = [
     "lb_keogh_pair",
     "lb_kim_fl",
     "pruned_dtw",
+    "resolve_backend",
 ]

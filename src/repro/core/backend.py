@@ -1,0 +1,61 @@
+"""Backend dispatch for the batched EAPrunedDTW hot path.
+
+One question, answered in one place: *which implementation evaluates a batch
+of candidates?* Two real backends exist:
+
+  ``pallas`` — the TPU kernel (``kernels.ops.dtw_ea``): a banded
+      ``(candidate_blocks, row_blocks)`` grid with the DP carry in VMEM and a
+      block-level early-exit flag. Rows advance in lockstep across the lanes
+      of a block, so abandon granularity is the block — coarser than the JAX
+      path but with none of vmap's per-lane while_loop degradation. On
+      non-TPU platforms the same kernel runs in interpret mode (Python
+      execution of the kernel body) — correct everywhere, fast only on TPU.
+
+  ``jax`` — ``core.ea_pruned_dtw.ea_pruned_dtw_banded`` under ``vmap``: a
+      per-lane banded ``lax.while_loop``. Under vmap every lane steps until
+      the slowest lane of the whole batch finishes, with per-lane
+      dynamic-slice realignment each row. This is the portable CPU/GPU
+      fallback and the float64 reference (the kernel is float32).
+
+Selection order:
+
+  1. explicit ``backend=`` argument (``"pallas"``, ``"pallas_interpret"``,
+     ``"jax"``, ``"auto"``),
+  2. the ``REPRO_DTW_BACKEND`` environment variable (same values) when the
+     argument is ``None`` / ``"auto"`` is passed through it,
+  3. platform default: ``pallas`` on TPU, ``jax`` elsewhere.
+
+``pallas_interpret`` forces interpret mode on any platform — the CI path
+that exercises the kernel's exact program on CPU. Multivariate queries
+(``query.ndim > 1``) always take the ``jax`` backend; the kernel is
+univariate (the paper's workload).
+
+Caveat: the environment variable is consulted at *trace time* and is not
+part of the jit cache key. Set it before the first search call of the
+process; changing it afterwards does not retrace already-compiled programs
+(use the explicit ``backend=`` argument — a static jit arg — to switch
+backends within a process).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+BACKENDS = ("auto", "pallas", "pallas_interpret", "jax")
+ENV_VAR = "REPRO_DTW_BACKEND"
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Resolve a backend request to a concrete backend name.
+
+    ``None`` defers to ``$REPRO_DTW_BACKEND`` (default ``auto``); ``auto``
+    picks ``pallas`` on TPU and ``jax`` elsewhere. Returns one of
+    ``("pallas", "pallas_interpret", "jax")``.
+    """
+    b = backend if backend is not None else os.environ.get(ENV_VAR, "auto")
+    if b not in BACKENDS:
+        raise ValueError(f"backend {b!r} not in {BACKENDS}")
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jax"
+    return b

@@ -3,12 +3,33 @@
 The UCR suite streams candidates one at a time, tightening ``ub`` after each.
 A TPU wants thousands of independent lanes in flight, so the unit of work here
 is a *batch* of K candidates evaluated under one shared ``ub`` (DESIGN.md
-§2.4). Each lane early-abandons independently (its banded while_loop predicate
-goes false); the batch completes when every lane has abandoned or finished;
-``ub`` is then tightened with the batch minimum before the next batch.
+§2.4). Each lane early-abandons independently; the batch completes when every
+lane has abandoned or finished; ``ub`` is then tightened with the batch
+minimum before the next batch. Best-first ordering by lower bound (see
+search/cascade.py) restores most of the sequential tightening power the paper
+gets for free.
 
-Best-first ordering by lower bound (see search/cascade.py) restores most of
-the sequential tightening power the paper gets for free.
+Backend dispatch (see ``core.backend``): ``ea_pruned_dtw_batch`` is the
+single entry point every search path goes through, and it routes a batch to
+one of two implementations:
+
+  * ``backend="pallas"`` / ``"pallas_interpret"`` — the banded Pallas kernel
+    (``kernels.ops.dtw_ea``). Tuning knobs: ``band_width`` (columns per row,
+    lane-aligned default), ``block_k`` (candidate lanes per grid block — the
+    early-exit granularity), ``row_block`` (DP rows per sequential grid
+    step). ``pallas`` lowers through Mosaic on TPU and falls back to
+    interpret mode elsewhere; ``pallas_interpret`` forces interpret mode
+    (the CPU test path for the kernel program).
+  * ``backend="jax"`` — per-lane banded ``lax.while_loop`` under ``vmap``
+    (CPU/GPU fallback, float64-capable reference). Tuning knobs:
+    ``band_width``, ``rows_per_step`` (rows per loop iteration — amortizes
+    vmap'd loop-control overhead).
+
+``backend=None`` defers to ``$REPRO_DTW_BACKEND``, then the platform default
+(``pallas`` on TPU, ``jax`` elsewhere). Multivariate queries always take the
+``jax`` path. ``with_info=True`` additionally returns per-lane ``EAInfo``
+pruning counters; the default is counter-free — search fast rounds pay no
+bookkeeping.
 """
 from __future__ import annotations
 
@@ -17,10 +38,32 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.ea_pruned_dtw import ea_pruned_dtw_banded
+from repro.core.backend import resolve_backend
+from repro.core.ea_pruned_dtw import EAInfo, ea_pruned_dtw_banded
+from repro.kernels.ops import dtw_ea
 
 
-@partial(jax.jit, static_argnames=("window", "band_width", "rows_per_step"))
+@partial(
+    jax.jit,
+    static_argnames=("window", "band_width", "rows_per_step", "with_info"),
+)
+def _batch_jax(
+    query, candidates, ub, window, band_width, cb, rows_per_step, with_info
+):
+    """vmapped banded-while_loop backend (CPU/GPU fallback)."""
+    if cb is None:
+        fn = lambda c: ea_pruned_dtw_banded(
+            query, c, ub, window=window, band_width=band_width,
+            rows_per_step=rows_per_step, with_info=with_info,
+        )
+        return jax.vmap(fn)(candidates)
+    fn = lambda c, cbv: ea_pruned_dtw_banded(
+        query, c, ub, window=window, band_width=band_width, cb=cbv,
+        rows_per_step=rows_per_step, with_info=with_info,
+    )
+    return jax.vmap(fn)(candidates, cb)
+
+
 def ea_pruned_dtw_batch(
     query: jax.Array,
     candidates: jax.Array,
@@ -29,7 +72,11 @@ def ea_pruned_dtw_batch(
     band_width: int | None = None,
     cb: jax.Array | None = None,
     rows_per_step: int = 1,
-) -> jax.Array:
+    backend: str | None = None,
+    block_k: int = 8,
+    row_block: int = 128,
+    with_info: bool = False,
+):
     """Banded EAPrunedDTW of one query against K candidates, shared ``ub``.
 
     Args:
@@ -41,23 +88,43 @@ def ea_pruned_dtw_batch(
         ``2*window+1``).
       cb: optional ``(K, m)`` per-candidate cumulative LB_Keogh suffix sums
         for UCR-style threshold tightening.
+      rows_per_step: rows per while_loop iteration (``jax`` backend knob).
+      backend: ``"pallas"`` / ``"pallas_interpret"`` / ``"jax"`` / ``"auto"``;
+        ``None`` defers to ``$REPRO_DTW_BACKEND`` then the platform default.
+      block_k, row_block: Pallas grid tiling knobs.
+      with_info: also return per-lane ``EAInfo`` pruning counters.
 
-    Returns: ``(K,)`` distances; ``+inf`` where abandoned.
+    Returns: ``(K,)`` distances (``+inf`` where abandoned); with ``with_info``
+      a ``(distances, EAInfo)`` tuple of per-lane arrays.
     """
-    if cb is None:
-        fn = lambda c: ea_pruned_dtw_banded(
-            query, c, ub, window=window, band_width=band_width,
-            rows_per_step=rows_per_step,
+    resolved = resolve_backend(backend)
+    if resolved != "jax" and jnp.ndim(query) != 1:
+        resolved = "jax"  # kernel is univariate; see core.backend docstring
+    if resolved == "jax":
+        out = _batch_jax(
+            query, candidates, ub, window, band_width, cb, rows_per_step,
+            with_info,
         )
-        return jax.vmap(fn)(candidates)
-    fn = lambda c, cbv: ea_pruned_dtw_banded(
-        query, c, ub, window=window, band_width=band_width, cb=cbv,
-        rows_per_step=rows_per_step,
+        return out
+    interpret = True if resolved == "pallas_interpret" else None
+    out = dtw_ea(
+        query, candidates, ub, window, cb=cb, band_width=band_width,
+        block_k=block_k, row_block=row_block, interpret=interpret,
+        with_info=with_info,
     )
-    return jax.vmap(fn)(candidates, cb)
+    if with_info:
+        d, rows, cells = out
+        return d, EAInfo(rows=rows, cells=cells)
+    return out
 
 
-@partial(jax.jit, static_argnames=("window", "band_width"))
+@partial(
+    jax.jit,
+    static_argnames=(
+        "window", "band_width", "rows_per_step", "backend", "block_k",
+        "row_block",
+    ),
+)
 def ea_search_round(
     query: jax.Array,
     candidates: jax.Array,
@@ -67,6 +134,10 @@ def ea_search_round(
     window: int,
     band_width: int | None = None,
     cb: jax.Array | None = None,
+    rows_per_step: int = 1,
+    backend: str | None = None,
+    block_k: int = 8,
+    row_block: int = 128,
 ) -> tuple[jax.Array, jax.Array]:
     """One search round: batch EAPrunedDTW + incumbent update.
 
@@ -75,7 +146,11 @@ def ea_search_round(
     the incumbent (strict improvement only), matching the paper's strictness
     rule for early abandoning.
     """
-    d = ea_pruned_dtw_batch(query, candidates, ub, window, band_width, cb)
+    d = ea_pruned_dtw_batch(
+        query, candidates, ub, window, band_width, cb,
+        rows_per_step=rows_per_step, backend=backend, block_k=block_k,
+        row_block=row_block,
+    )
     k = jnp.argmin(d)
     dmin = d[k]
     improved = dmin < ub

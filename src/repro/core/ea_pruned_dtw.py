@@ -41,7 +41,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.common import BIG, row_scan, to_inf
+from repro.core.common import BIG, default_band_width, row_scan, to_inf
 
 
 class EAInfo(NamedTuple):
@@ -210,8 +210,7 @@ def ea_pruned_dtw_banded(
         # XLA pads the trailing dim to 128 lanes regardless, so any multiple
         # of 8 costs the same there; on CPU, rounding up to 128 quadrupled
         # the row work for w=12 (measured 131ms -> 27ms at the right width).
-        mult = 128 if jax.default_backend() == "tpu" else 8
-        band_width = min(m, -(-full // mult) * mult)
+        band_width = default_band_width(window, m)
     bw = int(band_width)
     if bw < full:
         raise ValueError(f"band_width {bw} < 2*window+1 = {full}")

@@ -10,6 +10,8 @@ matching the suite's query-vs-reference protocol.
 """
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 DATASETS = ("FoG", "Soccer", "PAMAP2", "ECG", "REFIT", "PPG")
@@ -59,8 +61,13 @@ def _bursty(rng, n):
 
 
 def make_dataset(name: str, n: int, seed: int = 0) -> np.ndarray:
-    """Long reference series for a paper-analogue dataset."""
-    rng = np.random.default_rng(hash((name, seed)) % (2**31))
+    """Long reference series for a paper-analogue dataset.
+
+    Deterministic *across processes*: the seed mixes ``zlib.crc32`` of the
+    name, not Python's per-process-salted ``hash()`` — benchmark artifacts
+    (BENCH_dtw.json) must be comparable between runs and PRs.
+    """
+    rng = np.random.default_rng((zlib.crc32(name.encode()) + 977 * seed) % (2**31))
     if name == "ECG":
         return _ecg_like(rng, n)
     if name == "PPG":

@@ -2,7 +2,8 @@
 
   dtw_band  — batched early-abandoning pruned DTW (the paper's core loop,
               TPU-tiled: candidate-parallel grid x sequential row-blocks,
-              VMEM DP carry, SMEM abandon flag)
+              banded columns with a window-following offset, VMEM DP carry,
+              SMEM abandon flag, optional rows/cells pruning counters)
   lb_keogh  — LB_Kim + LB_Keogh for every window of a reference in one pass
 
 ``ops.py`` holds the jitted wrappers (interpret=True on CPU, Mosaic on TPU);

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: batched early-abandoning pruned DTW.
+"""Pallas TPU kernel: batched early-abandoning pruned DTW, banded columns.
 
 TPU-native shape of EAPrunedDTW (DESIGN.md §2): a grid of
 ``(candidate_blocks, row_blocks)`` programs. The candidate dimension is
@@ -6,10 +6,32 @@ embarrassingly parallel (``dimension_semantics[0] = "parallel"``); the row
 dimension is sequential ("arbitrary") with the DP carry living in VMEM
 scratch across grid steps.
 
+Banded column mode (the serving hot path, mirroring
+``core.ea_pruned_dtw.ea_pruned_dtw_banded``): instead of full-width ``m``
+rows, each row step computes only a ``band_width`` slice of columns starting
+at the *window-following* offset ``lo(i) = clip(i - window, 0, m - bw)``.
+Because every lane shares the query and the Sakoe-Chiba window, ``lo`` is
+lane-uniform and a pure function of the row index, advancing by at most one
+column per row. That buys two TPU-critical properties:
+
+  * the candidate slice is a lane-uniform ``pl.ds(lo, bw)`` dynamic slice
+    (no per-lane gather), and
+  * realigning the previous row's band is a single select between the
+    unshifted band and a static shift-by-one — ``shift = lo(i) - lo(i-1)``
+    is always 0 or 1.
+
+Per-lane pruning state (``next_start``) is kept as a mask on top of the
+band, so pruning decisions are bit-identical to the full-width kernel and to
+the banded JAX reference. Work per row drops from O(m) to O(band), i.e. the
+prefix-scan doubling runs log2(band) steps instead of log2(m).
+``band_width == m`` degenerates to the original full-width kernel
+(``lo == 0`` always) and is used when ``n != m`` or the window covers the
+whole matrix.
+
 Per (block_k)-lane row step, entirely in VMEM/VREGs:
-  * cost row  ``c[k, j] = (q_i - cand[k, j])^2``            (VPU)
-  * ``d = c + min(prev, prev<<1)``                          (VPU)
-  * row recurrence via prefix-sum + cumulative-min doubling (log2(m) VPU ops)
+  * cost row  ``c[k, r] = (q_i - cand[k, lo + r])^2``        (VPU)
+  * ``d = c + min(top, left)`` with top/left from the realigned band
+  * row recurrence via prefix-sum + cumulative-min doubling (log2(band))
   * band bookkeeping: ``next_start`` per lane, abandon flags, UCR ``cb``
     threshold tightening — all vectorized mask reductions.
 
@@ -19,10 +41,14 @@ candidate block has abandoned, an SMEM flag turns all remaining row-blocks of
 that block into ``pl.when`` no-ops — the kernel-level analogue of the paper's
 border-collision early exit.
 
-The kernel computes full-width rows (the query length m is at most ~1k in the
-paper's workload, far under VMEM limits); column pruning happens at the
-banded-JAX layer, row pruning here. Validated against ``ref.py`` in
-interpret mode on CPU; written for TPU as the target.
+Optional pruning counters (``emit_info``): per-lane rows-issued and
+admissible-cells accumulators, matching ``core.ea_pruned_dtw.EAInfo``
+semantics, so ``SearchResult`` stats survive when search runs through the
+Pallas backend. The counter-free variant carries no accumulator traffic —
+the search fast round uses it by default.
+
+Validated against ``ref.py`` and the banded JAX path in interpret mode on
+CPU; written for TPU as the target.
 """
 from __future__ import annotations
 
@@ -69,49 +95,78 @@ def _dtw_ea_kernel(
     cb_ref,      # (block_k, m) cumulative LB suffix (zeros if disabled)
     # outputs
     out_ref,     # (block_k,) distances
-    # scratch
-    prev_ref,    # VMEM (block_k, m) previous-row values
-    ns_ref,      # VMEM (block_k, 1) int32 next_start per lane
-    flags_ref,   # VMEM (block_k, 2) int32: [:,0] abandoned, [:,1] ok_last
-    done_ref,    # SMEM (1,) int32: all lanes abandoned
-    *,
+    *rest,       # [rows_out, cells_out] if emit_info, then scratch
     n_rows: int,
     window: int,
     row_block: int,
+    band_width: int,
     use_cb: bool,
+    emit_info: bool,
 ):
+    if emit_info:
+        rows_out, cells_out = rest[0], rest[1]
+        rest = rest[2:]
+    prev_ref, ns_ref, flags_ref, rows_ref, cells_ref, done_ref = rest
+
     ri = pl.program_id(1)
     block_k, m = cand_ref.shape
+    bw = band_width
+    lo_max = m - bw  # 0 in full-width mode
 
     @pl.when(ri == 0)
     def _init():
-        prev_ref[...] = jnp.full((block_k, m), BIG, jnp.float32)
+        prev_ref[...] = jnp.full((block_k, bw), BIG, jnp.float32)
         ns_ref[...] = jnp.zeros((block_k, 1), jnp.int32)
         flags_ref[...] = jnp.zeros((block_k, 2), jnp.int32)
-        done_ref[0] = 0
+        if emit_info:
+            rows_ref[...] = jnp.zeros((block_k, 1), jnp.int32)
+            cells_ref[...] = jnp.zeros((block_k, 1), jnp.int32)
+        done_ref[0] = jnp.asarray(0, jnp.int32)  # literal 0 is int64 under x64
 
     @pl.when(done_ref[0] == 0)
     def _rows():
         ub = ub_ref[0]
-        cand = cand_ref[...]
-        cols = jax.lax.broadcasted_iota(jnp.int32, (block_k, m), 1)
+        rel = jax.lax.broadcasted_iota(jnp.int32, (block_k, bw), 1)
 
         def row(r, _):
             i = ri * row_block + r
             valid = i < n_rows
+            lo = jnp.clip(i - window, 0, lo_max)
+            lo_prev = jnp.clip(i - 1 - window, 0, lo_max)
+            shift = lo - lo_prev  # the window edge advances by 0 or 1
+
             q_i = q_ref[pl.ds(r, 1)]  # (1,)
+            cand = cand_ref[:, pl.ds(lo, bw)]
             c = (q_i[0] - cand) ** 2
 
+            cols = lo + rel
+            hi = jnp.minimum(m - 1, i + window)
             ns = ns_ref[...]  # (block_k, 1)
-            in_win = jnp.abs(cols - i) <= window
-            exists = jnp.logical_and(cols >= ns, in_win)
-
-            border = jnp.where(i == 0, 0.0, BIG)
-            prev = prev_ref[...]
-            prev_sh = jnp.concatenate(
-                [jnp.full((block_k, 1), border, jnp.float32), prev[:, :-1]], axis=1
+            exists = jnp.logical_and(
+                jnp.logical_and(cols >= ns, cols >= i - window), cols <= hi
             )
-            d = c + jnp.minimum(prev, prev_sh)
+
+            # Realign the previous row's band from offset lo_prev to lo.
+            prev = prev_ref[...]
+            big_col = jnp.full((block_k, 1), BIG, jnp.float32)
+            # top[r]  = prev-row value at col lo + r      (shift left by shift)
+            top = jnp.where(
+                shift == 1,
+                jnp.concatenate([prev[:, 1:], big_col], axis=1),
+                prev,
+            )
+            # left[r] = prev-row value at col lo + r - 1  (shift by shift - 1)
+            border = jnp.where(i == 0, 0.0, BIG)  # virtual corner at (-1, -1)
+            left = jnp.where(
+                shift == 1,
+                prev,
+                jnp.concatenate(
+                    [jnp.full((block_k, 1), border, jnp.float32), prev[:, :-1]],
+                    axis=1,
+                ),
+            )
+
+            d = c + jnp.minimum(top, left)
             d = jnp.where(exists, d, BIG)
             p = _prefix_sum(c)
             curr = p + _prefix_min(d - p)
@@ -141,12 +196,25 @@ def _dtw_ea_kernel(
                 newly_dead, jnp.ones_like(ns), flags_ref[:, 0:1]
             )
             is_last = i == n_rows - 1
-            ok_last = jnp.logical_and(le[:, m - 1 :], jnp.logical_and(upd, is_last))
+            ok_last = jnp.logical_and(
+                jnp.any(jnp.logical_and(le, cols == m - 1), axis=1, keepdims=True),
+                jnp.logical_and(upd, is_last),
+            )
             flags_ref[:, 1:2] = jnp.where(
                 jnp.logical_and(valid, is_last),
                 ok_last.astype(jnp.int32),
                 flags_ref[:, 1:2],
             )
+            if emit_info:
+                # EAInfo semantics: the abandoning row is counted too.
+                issued = jnp.logical_and(alive, valid)
+                rows_ref[...] = rows_ref[...] + issued.astype(jnp.int32)
+                n_exist = jnp.sum(
+                    exists.astype(jnp.int32), axis=1, keepdims=True
+                ).astype(jnp.int32)
+                cells_ref[...] = (
+                    cells_ref[...] + jnp.where(issued, n_exist, 0)
+                ).astype(jnp.int32)
             return 0
 
         jax.lax.fori_loop(0, row_block, row, 0, unroll=False)
@@ -157,5 +225,9 @@ def _dtw_ea_kernel(
     @pl.when(ri == pl.num_programs(1) - 1)
     def _finish():
         ok = jnp.logical_and(flags_ref[:, 0] == 0, flags_ref[:, 1] == 1)
-        last = prev_ref[:, m - 1]
+        lo_fin = min(max(n_rows - 1 - window, 0), lo_max)  # static
+        last = prev_ref[:, (m - 1) - lo_fin]
         out_ref[...] = jnp.where(ok, last, jnp.inf)
+        if emit_info:
+            rows_out[...] = rows_ref[:, 0]
+            cells_out[...] = cells_ref[:, 0]

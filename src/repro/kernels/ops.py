@@ -2,6 +2,20 @@
 
 ``interpret`` defaults to True on CPU backends (kernel body executed in
 Python for validation) and False on TPU (real Mosaic lowering).
+
+Backend dispatch: ``dtw_ea`` is the Pallas side of the
+``core.backend`` dispatch layer — similarity search reaches it through
+``core.batch.ea_pruned_dtw_batch(backend="pallas"|"pallas_interpret")``
+rather than calling it directly. ``backend="pallas"`` lowers through Mosaic
+on TPU (and falls back to interpret mode elsewhere); ``"pallas_interpret"``
+forces interpret mode everywhere (the CPU test/CI path). The banded column
+mode (``band_width``) mirrors ``core.ea_pruned_dtw.ea_pruned_dtw_banded``:
+``band_width=None`` picks the smallest lane-aligned width covering
+``2*window + 1`` columns; band mode requires ``n == m`` (subsequence-search
+shape) and silently widens to full rows otherwise. ``with_info=True``
+additionally returns per-lane ``(rows, cells)`` pruning counters
+(``EAInfo`` semantics) at the cost of two int32 accumulators per lane —
+the search fast round runs counter-free.
 """
 from __future__ import annotations
 
@@ -12,8 +26,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.common import default_band_width
 from repro.kernels.dtw_band import _dtw_ea_kernel
 from repro.kernels.lb_keogh import _lb_kernel
+
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
 def _default_interpret() -> bool:
@@ -22,7 +41,9 @@ def _default_interpret() -> bool:
 
 @partial(
     jax.jit,
-    static_argnames=("window", "block_k", "row_block", "interpret"),
+    static_argnames=(
+        "window", "band_width", "block_k", "row_block", "interpret", "with_info"
+    ),
 )
 def dtw_ea(
     query: jax.Array,
@@ -30,11 +51,13 @@ def dtw_ea(
     ub: jax.Array,
     window: int,
     cb: jax.Array | None = None,
+    band_width: int | None = None,
     block_k: int = 8,
     row_block: int = 128,
     interpret: bool | None = None,
-) -> jax.Array:
-    """Batched early-abandoning pruned DTW (Pallas kernel).
+    with_info: bool = False,
+):
+    """Batched early-abandoning pruned DTW (Pallas kernel, banded columns).
 
     Args:
       query: ``(n,)`` z-normalized query (rows of the DP).
@@ -43,7 +66,14 @@ def dtw_ea(
       window: Sakoe-Chiba window (use ``>= m`` for unconstrained).
       cb: optional ``(K, m)`` cumulative LB_Keogh suffix sums (UCR
         tightening); ``None`` disables.
-    Returns: ``(K,)`` float32 distances, ``+inf`` where abandoned.
+      band_width: static band columns per row. ``None`` picks the smallest
+        lane-aligned width covering ``2*window + 1`` (full width when
+        ``n != m`` — band mode needs the square subsequence-search shape).
+      block_k: candidate lanes per grid block (the parallel grid dim).
+      row_block: DP rows per sequential grid step (early-exit granularity).
+      with_info: also return per-lane ``(rows, cells)`` int32 counters.
+    Returns: ``(K,)`` float32 distances, ``+inf`` where abandoned; with
+      ``with_info`` a ``(dists, rows, cells)`` tuple.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -52,6 +82,15 @@ def dtw_ea(
     n = query.shape[0]
     k, m = candidates.shape
     window = int(min(window, m))
+
+    if band_width is None:
+        band_width = default_band_width(window, m) if n == m else m
+    bw = int(min(band_width, m))
+    full = min(2 * window + 1, m)
+    if bw < full:
+        raise ValueError(f"band_width {bw} < 2*window+1 = {full}")
+    if bw < m and n != m:
+        raise ValueError("banded dtw_ea requires equal lengths (n == m)")
 
     use_cb = cb is not None
     if cb is None:
@@ -73,8 +112,19 @@ def dtw_ea(
         n_rows=n,
         window=window,
         row_block=row_block,
+        band_width=bw,
         use_cb=use_cb,
+        emit_info=with_info,
     )
+    lane_spec = pl.BlockSpec((block_k,), lambda ci, ri: (ci,))
+    out_specs = [lane_spec]
+    out_shape = [jax.ShapeDtypeStruct((k_pad,), jnp.float32)]
+    if with_info:
+        out_specs += [lane_spec, lane_spec]
+        out_shape += [
+            jax.ShapeDtypeStruct((k_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((k_pad,), jnp.int32),
+        ]
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -84,15 +134,17 @@ def dtw_ea(
             pl.BlockSpec((block_k, m), lambda ci, ri: (ci, 0)),
             pl.BlockSpec((block_k, m), lambda ci, ri: (ci, 0)),
         ],
-        out_specs=pl.BlockSpec((block_k,), lambda ci, ri: (ci,)),
-        out_shape=jax.ShapeDtypeStruct((k_pad,), jnp.float32),
+        out_specs=out_specs if with_info else out_specs[0],
+        out_shape=out_shape if with_info else out_shape[0],
         scratch_shapes=[
-            pltpu.VMEM((block_k, m), jnp.float32),
+            pltpu.VMEM((block_k, bw), jnp.float32),
             pltpu.VMEM((block_k, 1), jnp.int32),
             pltpu.VMEM((block_k, 2), jnp.int32),
+            pltpu.VMEM((block_k, 1), jnp.int32),
+            pltpu.VMEM((block_k, 1), jnp.int32),
             pltpu.SMEM((1,), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -102,6 +154,9 @@ def dtw_ea(
         candidates,
         cb_arr,
     )
+    if with_info:
+        d, rows, cells = out
+        return d[:k], rows[:k], cells[:k]
     return out[:k]
 
 
@@ -156,7 +211,7 @@ def lb_keogh_all_windows(
         ],
         out_specs=pl.BlockSpec((chunk,), lambda ci: (ci,)),
         out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

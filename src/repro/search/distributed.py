@@ -27,6 +27,22 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """Version-compat shard_map: new jax exposes ``jax.shard_map`` with a
+    ``check_vma`` flag; older releases have ``jax.experimental.shard_map``
+    with ``check_rep``. Both checks are disabled — the banded-EA while_loop
+    carries mix device-varying and replicated values."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
 from repro.core.batch import ea_pruned_dtw_batch
 from repro.core.common import BIG
 from repro.core.lower_bounds import _lb_keogh_terms, envelope, lb_keogh, lb_kim_fl
@@ -67,11 +83,19 @@ def make_distributed_search(
     batch: int = 64,
     band_width: int | None = None,
     chunk: int = 2048,
+    backend: str | None = None,
+    rows_per_step: int = 1,
+    block_k: int = 8,
+    row_block: int = 128,
 ):
     """Build a jitted distributed search fn for a given mesh/shape config.
 
     Returns ``search_fn(ref, query) -> DistSearchResult``. ``ref`` must have
     static length; the number of windows is padded to the mesh size.
+
+    ``backend`` / ``rows_per_step`` / ``block_k`` / ``row_block`` select and
+    tune the per-device DTW batch implementation exactly as in
+    ``core.batch.ea_pruned_dtw_batch`` — every device runs the same backend.
     """
     n_shards = 1
     for a in axis_names:
@@ -120,7 +144,9 @@ def make_distributed_search(
             terms = _lb_keogh_terms(cand, u, low)
             cb = jnp.flip(jnp.cumsum(jnp.flip(terms, -1), -1), -1)
             d = ea_pruned_dtw_batch(
-                query_n, cand, st.ub, window=window, band_width=band_width, cb=cb
+                query_n, cand, st.ub, window=window, band_width=band_width,
+                cb=cb, rows_per_step=rows_per_step, backend=backend,
+                block_k=block_k, row_block=row_block,
             )
             # lanes that are padding, or rounds past this device's work,
             # must not contribute
@@ -167,14 +193,11 @@ def make_distributed_search(
         valid = starts < n_win
         starts = jnp.minimum(starts, n_win - 1)
 
-        shard = jax.shard_map(
+        shard = _shard_map(
             local_search,
             mesh=mesh,
             in_specs=(spec_rep, spec_rep, spec_sharded, spec_sharded),
             out_specs=(spec_rep, spec_rep, spec_rep),
-            # the banded-EA while_loop carries mix device-varying and
-            # replicated values; skip the static VMA consistency check
-            check_vma=False,
         )
         best_d, best_s, rounds = shard(ref, query_n, starts, valid)
         return DistSearchResult(

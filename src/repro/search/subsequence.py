@@ -14,6 +14,17 @@ Four variants, mirroring the paper's four suites (§5):
 The search is one jitted program: cascade → best-first batches inside a
 ``lax.while_loop`` that stops when the next batch's smallest lower bound can
 no longer beat the incumbent (``ub``). Batches share ``ub`` (DESIGN.md §2.4).
+
+Rounds come in two flavours. The default is the *counter-free fast round*:
+distances only, no pruning bookkeeping — the hot path pays nothing for stats
+it isn't asked for. ``with_info=True`` switches every round to the *stats
+round*, which also accumulates the paper's rows/cells pruning counters into
+``SearchResult`` (counter fields are ``-1`` when not collected). The
+EAPrunedDTW batches are routed through ``core.batch.ea_pruned_dtw_batch``,
+so ``backend=`` (pallas kernel vs banded-vmap JAX) and the tuning knobs
+(``rows_per_step``, ``block_k``, ``row_block``, ``band_width``) thread all
+the way down; defaults for the paper workload live in
+``configs/dtw_search.py``.
 """
 from __future__ import annotations
 
@@ -26,7 +37,6 @@ import jax.numpy as jnp
 from repro.core.batch import ea_pruned_dtw_batch
 from repro.core.common import BIG
 from repro.core.dtw import dtw
-from repro.core.ea_pruned_dtw import ea_pruned_dtw_banded
 from repro.core.lower_bounds import _lb_keogh_terms, envelope
 from repro.core.pruned_dtw import pruned_dtw
 from repro.search.cascade import cascade
@@ -41,14 +51,18 @@ class SearchResult(NamedTuple):
     rounds: jax.Array       # batch rounds executed
     lanes: jax.Array        # candidate lanes evaluated (rounds * batch)
     lb_pruned: jax.Array    # candidates never evaluated thanks to LB ordering
-    rows: jax.Array         # DTW rows issued across all lanes
-    cells: jax.Array        # admissible DTW cells across all lanes
+    rows: jax.Array         # DTW rows issued across all lanes (-1: fast round)
+    cells: jax.Array        # admissible DTW cells across all lanes (-1: fast)
 
 
-def _batch_distances(variant, query_n, cand, ub, window, band_width, cb):
+def _batch_distances(
+    variant, query_n, cand, ub, window, band_width, cb, knobs
+):
+    """Counter-free fast round: distances only, no pruning bookkeeping."""
     if variant == "eapruned" or variant == "eapruned_nolb":
         return ea_pruned_dtw_batch(
-            query_n, cand, ub, window=window, band_width=band_width, cb=cb
+            query_n, cand, ub, window=window, band_width=band_width, cb=cb,
+            **knobs,
         )
     if variant == "pruned":
         fn = lambda c: pruned_dtw(query_n, c, ub, window=window)
@@ -59,26 +73,20 @@ def _batch_distances(variant, query_n, cand, ub, window, band_width, cb):
     raise ValueError(f"unknown variant {variant!r}")
 
 
-def _batch_info(variant, query_n, cand, ub, window, band_width, cb):
-    """Distances + (rows, cells) pruning counters for the batch."""
+def _batch_stats(variant, query_n, cand, ub, window, band_width, cb, knobs):
+    """Stats round: distances + (rows, cells) pruning counters."""
     if variant in ("eapruned", "eapruned_nolb"):
-        fn = lambda c, cbv: ea_pruned_dtw_banded(
-            query_n, c, ub, window=window, band_width=band_width,
-            with_info=True, cb=cbv,
+        d, info = ea_pruned_dtw_batch(
+            query_n, cand, ub, window=window, band_width=band_width, cb=cb,
+            with_info=True, **knobs,
         )
-        if cb is None:
-            d, info = jax.vmap(lambda c: ea_pruned_dtw_banded(
-                query_n, c, ub, window=window, band_width=band_width, with_info=True
-            ))(cand)
-        else:
-            d, info = jax.vmap(fn)(cand, cb)
         return d, jnp.sum(info.rows), jnp.sum(info.cells)
     if variant == "pruned":
         d, info = jax.vmap(
             lambda c: pruned_dtw(query_n, c, ub, window=window, with_info=True)
         )(cand)
         return d, jnp.sum(info.rows), jnp.sum(info.cells)
-    d = _batch_distances(variant, query_n, cand, ub, window, band_width, cb)
+    d = _batch_distances(variant, query_n, cand, ub, window, band_width, cb, knobs)
     m = query_n.shape[-1]
     k = cand.shape[0]
     # full DTW issues every in-window cell
@@ -88,7 +96,10 @@ def _batch_info(variant, query_n, cand, ub, window, band_width, cb):
 
 @partial(
     jax.jit,
-    static_argnames=("length", "window", "variant", "batch", "band_width", "chunk"),
+    static_argnames=(
+        "length", "window", "variant", "batch", "band_width", "chunk",
+        "with_info", "backend", "rows_per_step", "block_k", "row_block",
+    ),
 )
 def subsequence_search(
     ref: jax.Array,
@@ -99,6 +110,11 @@ def subsequence_search(
     batch: int = 64,
     band_width: int | None = None,
     chunk: int = 4096,
+    with_info: bool = False,
+    backend: str | None = None,
+    rows_per_step: int = 1,
+    block_k: int = 8,
+    row_block: int = 128,
 ) -> SearchResult:
     """Locate the closest z-normalized window of ``ref`` to ``query``.
 
@@ -109,8 +125,17 @@ def subsequence_search(
       window: Sakoe-Chiba warping window in samples (static).
       variant: one of ``VARIANTS``.
       batch: candidates per shared-ub round (static).
+      with_info: collect rows/cells pruning counters (stats rounds). The
+        default fast rounds leave ``SearchResult.rows``/``.cells`` at ``-1``.
+      backend: DTW batch backend (see ``core.backend``); ``None`` = auto.
+      rows_per_step: JAX-backend while_loop rows per iteration.
+      block_k, row_block: Pallas-backend grid tiling.
     """
     assert variant in VARIANTS, variant
+    knobs = dict(
+        rows_per_step=rows_per_step, backend=backend, block_k=block_k,
+        row_block=row_block,
+    )
     ref = jnp.asarray(ref)
     query_n = znorm(jnp.asarray(query)[:length])
     n_win = ref.shape[0] - length + 1
@@ -155,9 +180,15 @@ def subsequence_search(
         if use_cb:
             terms = _lb_keogh_terms(cand, u, low)
             cb = jnp.flip(jnp.cumsum(jnp.flip(terms, -1), -1), -1)
-        d, rows, cells = _batch_info(
-            variant, query_n, cand, st.ub, window, band_width, cb
-        )
+        if with_info:
+            d, rows, cells = _batch_stats(
+                variant, query_n, cand, st.ub, window, band_width, cb, knobs
+            )
+        else:
+            d = _batch_distances(
+                variant, query_n, cand, st.ub, window, band_width, cb, knobs
+            )
+            rows = cells = jnp.asarray(0)
         d = jnp.where(jnp.isfinite(lbs), d, jnp.inf)  # padding lanes
         k = jnp.argmin(d)
         dmin = d[k]
@@ -180,12 +211,13 @@ def subsequence_search(
         cells=jnp.asarray(0),
     )
     st = jax.lax.while_loop(cond, body, st0)
+    no_info = jnp.asarray(-1)
     return SearchResult(
         best_start=st.best,
         best_dist=st.ub,
         rounds=st.r,
         lanes=st.lanes,
         lb_pruned=jnp.asarray(n_win) - jnp.minimum(st.lanes, n_win),
-        rows=st.rows,
-        cells=st.cells,
+        rows=st.rows if with_info else no_info,
+        cells=st.cells if with_info else no_info,
     )

@@ -3,7 +3,53 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    # Tiny deterministic fallback so the suite runs from a clean checkout
+    # (hypothesis is in requirements-dev.txt but not baked into the image).
+    # Same shape as the hypothesis API surface used below; examples are drawn
+    # from a seeded rng, so runs are reproducible rather than adversarial.
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False):
+            return _Strategy(lambda r: float(r.uniform(min_value, max_value)))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def lists(elem, min_size, max_size):
+            return _Strategy(
+                lambda r: [
+                    elem.draw(r)
+                    for _ in range(int(r.integers(min_size, max_size + 1)))
+                ]
+            )
+
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(*strategies):
+        def deco(f):
+            def wrapper():
+                rng = np.random.default_rng(0)
+                for _ in range(25):
+                    f(*(s.draw(rng) for s in strategies))
+
+            # no functools.wraps: pytest would follow __wrapped__ to the
+            # original signature and treat the strategy args as fixtures
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+
+        return deco
 
 import jax.numpy as jnp
 

@@ -57,7 +57,7 @@ def test_pruning_counters_ordering(problem):
     for variant in ("eapruned", "pruned", "full"):
         res = subsequence_search(
             jnp.asarray(ref), jnp.asarray(q), length=length, window=w,
-            variant=variant, batch=64,
+            variant=variant, batch=64, with_info=True,
         )
         rows[variant] = int(res.rows)
         cells[variant] = int(res.cells)
