@@ -1,15 +1,17 @@
 """Benchmark entry point. One section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV:
-  * suite/*       — paper Fig. 5 analogue (four suites x dataset x l x w)
-  * dtw/*         — per-computation EA/Pruned/full work + time comparison
-  * dtw/backend/* — batch-backend dispatch comparison (vmap vs Pallas-interpret)
-  * kernel/*      — Pallas kernel harness checks (interpret mode)
-  * roofline/*    — dry-run-derived roofline terms per (arch x shape)
+  * suite/*        — paper Fig. 5 analogue (four suites x dataset x l x w);
+                     suite/SPEEDUP/* rows carry the headline ratios
+  * search/multiq/* — one multi_query_search call vs Q sequential searches
+  * dtw/*          — per-computation EA/Pruned/full work + time comparison
+  * dtw/backend/*  — batch-backend dispatch comparison (vmap vs Pallas-interpret)
+  * kernel/*       — Pallas kernel harness checks (interpret mode)
+  * roofline/*     — dry-run-derived roofline terms per (arch x shape)
 
 ``--json`` additionally writes a ``BENCH_dtw.json`` artifact so the perf
 trajectory stays machine-readable across PRs: per-suite ``us_per_call`` and
-``cells_ratio``, plus every dtw/* micro-bench row.
+``cells_ratio``, the ``multiq`` suite, plus every dtw/* micro-bench row.
 
 Usage: PYTHONPATH=src python -m benchmarks.run
          [--quick] [--skip-roofline] [--json [PATH]]
@@ -47,7 +49,12 @@ def main() -> None:
     )
     args = ap.parse_args()
 
-    from benchmarks import bench_dtw_micro, bench_kernels, bench_suites
+    from benchmarks import (
+        bench_dtw_micro,
+        bench_kernels,
+        bench_multiq,
+        bench_suites,
+    )
 
     import jax
 
@@ -55,7 +62,7 @@ def main() -> None:
     # keeps cross-PR comparisons scoped to like-for-like artifacts
     artifact = {
         "meta": {"quick": bool(args.quick), "backend": jax.default_backend()},
-        "suites": [], "dtw": [], "roofline": [],
+        "suites": [], "multiq": [], "dtw": [], "roofline": [],
     }
 
     print("name,us_per_call,derived")
@@ -67,6 +74,14 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
         artifact["suites"].append(_suite_record(name, us, derived))
+
+    if args.quick:
+        mq_rows = bench_multiq.run(ref_len=8_000, pairs=5)
+    else:
+        mq_rows = bench_multiq.run()
+    for name, us, derived in mq_rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+        artifact["multiq"].append(_suite_record(name, us, derived))
 
     micro = bench_dtw_micro.run(length=128, k=128, window_ratio=0.1)
     micro += bench_dtw_micro.run_backends(

@@ -22,6 +22,16 @@ rules):
                       blocks are skipped.
   ``row_block``     — Pallas backend: DP rows per sequential grid step; the
                       early-exit check runs once per row block.
+
+Multi-query serving knobs (``search.multi.multi_query_search``):
+
+  ``n_queries``     — queries per multi-query workload; one launch carries
+                      ``n_queries * batch`` flattened (query x candidate)
+                      lanes per round with a per-lane ``ub`` vector.
+  ``warm_start``    — best-LB candidates per query full-DP'd in a prepass
+                      dispatch to seed per-query incumbents; helps the
+                      Pallas backend's block early exit, off for the vmap
+                      backend (see ``multi_query_search``).
 """
 from dataclasses import dataclass
 
@@ -39,6 +49,8 @@ class SearchConfig:
     rows_per_step: int = 1           # JAX backend loop-unroll knob
     block_k: int = 8                 # Pallas candidate lanes per block
     row_block: int = 128             # Pallas rows per sequential grid step
+    n_queries: int = 8               # multi-query workload size (search.multi)
+    warm_start: int = 0              # multi-query incumbent-seeding prepass
 
     @property
     def window(self) -> int:

@@ -5,13 +5,20 @@ Public API:
   ea_pruned_dtw                 — EAPrunedDTW, full-row vectorized
   ea_pruned_dtw_banded          — EAPrunedDTW, O(n·band) banded hot path
   ea_pruned_dtw_batch           — batched banded EA (search unit of work),
-                                  backend-dispatched (see core.backend)
+                                  backend-dispatched (see core.backend),
+                                  scalar or per-lane ub
+  ea_pruned_dtw_multi_batch     — Q queries' rounds flattened to one
+                                  (Q x K)-lane dispatch, per-lane ub vector
   resolve_backend, BACKENDS     — Pallas-vs-JAX backend selection
   pruned_dtw                    — PrunedDTW baseline (row-min abandon)
   envelope, lb_keogh, lb_kim_fl — lower bounds
 """
 from repro.core.backend import BACKENDS, resolve_backend
-from repro.core.batch import ea_pruned_dtw_batch, ea_search_round
+from repro.core.batch import (
+    ea_pruned_dtw_batch,
+    ea_pruned_dtw_multi_batch,
+    ea_search_round,
+)
 from repro.core.common import BIG
 from repro.core.dtw import dtw, dtw_batch, dtw_matrix
 from repro.core.ea_pruned_dtw import EAInfo, ea_pruned_dtw, ea_pruned_dtw_banded
@@ -35,6 +42,7 @@ __all__ = [
     "ea_pruned_dtw",
     "ea_pruned_dtw_banded",
     "ea_pruned_dtw_batch",
+    "ea_pruned_dtw_multi_batch",
     "ea_search_round",
     "envelope",
     "lb_keogh",

@@ -30,11 +30,13 @@ that exercises the kernel's exact program on CPU. Multivariate queries
 (``query.ndim > 1``) always take the ``jax`` backend; the kernel is
 univariate (the paper's workload).
 
-Caveat: the environment variable is consulted at *trace time* and is not
-part of the jit cache key. Set it before the first search call of the
-process; changing it afterwards does not retrace already-compiled programs
-(use the explicit ``backend=`` argument — a static jit arg — to switch
-backends within a process).
+Every public entry point (``ea_pruned_dtw_batch``, ``ea_search_round``,
+``subsequence_search``, ``multi_query_search``) resolves the environment
+variable in its un-jitted wrapper, so the resolved name becomes the static
+``backend`` argument of the jitted program: changing ``REPRO_DTW_BACKEND``
+between calls correctly retraces. Only ``make_distributed_search`` /
+``make_distributed_multi_search`` pin the backend once, at closure-build
+time.
 """
 from __future__ import annotations
 

@@ -1,35 +1,47 @@
 """Batched EAPrunedDTW — the TPU-native unit of similarity-search work.
 
 The UCR suite streams candidates one at a time, tightening ``ub`` after each.
-A TPU wants thousands of independent lanes in flight, so the unit of work here
-is a *batch* of K candidates evaluated under one shared ``ub`` (DESIGN.md
-§2.4). Each lane early-abandons independently; the batch completes when every
-lane has abandoned or finished; ``ub`` is then tightened with the batch
-minimum before the next batch. Best-first ordering by lower bound (see
-search/cascade.py) restores most of the sequential tightening power the paper
-gets for free.
+A TPU wants thousands of independent lanes in flight, so the unit of work
+here is a *batch* of lanes evaluated in one dispatch (DESIGN.md §2.4). Each
+lane early-abandons independently against **its own** upper bound; the batch
+completes when every lane has abandoned or finished; incumbents are then
+tightened with the batch minima before the next batch. Best-first ordering
+by lower bound (see search/cascade.py) restores most of the sequential
+tightening power the paper gets for free.
 
-Backend dispatch (see ``core.backend``): ``ea_pruned_dtw_batch`` is the
-single entry point every search path goes through, and it routes a batch to
-one of two implementations:
+Two batch shapes share one kernel program:
+
+  * ``ea_pruned_dtw_batch`` — one query against ``K`` candidates. ``ub`` may
+    be a scalar (shared, the PR-1 behaviour) or a ``(K,)`` per-lane vector.
+  * ``ea_pruned_dtw_multi_batch`` — ``Q`` queries against their own
+    ``(Q, K, m)`` candidate rounds, flattened to a ``(Q × K)`` lane set and
+    evaluated in **one** launch with a ``(Q, K)`` per-lane ``ub``. This is
+    the multi-query serving primitive: no per-query launches, no per-query
+    recompilation, and finished queries ride along as dead lanes (negative
+    ``ub`` sentinel) that abandon on row 0.
+
+Backend dispatch (see ``core.backend``): both entry points route to one of
+two implementations:
 
   * ``backend="pallas"`` / ``"pallas_interpret"`` — the banded Pallas kernel
-    (``kernels.ops.dtw_ea``). Tuning knobs: ``band_width`` (columns per row,
-    lane-aligned default), ``block_k`` (candidate lanes per grid block — the
-    early-exit granularity), ``row_block`` (DP rows per sequential grid
-    step). ``pallas`` lowers through Mosaic on TPU and falls back to
-    interpret mode elsewhere; ``pallas_interpret`` forces interpret mode
-    (the CPU test path for the kernel program).
+    (``kernels.ops.dtw_ea`` / ``dtw_ea_multi``). Tuning knobs: ``band_width``
+    (columns per row, lane-aligned default), ``block_k`` (candidate lanes per
+    grid block — the early-exit granularity), ``row_block`` (DP rows per
+    sequential grid step). ``pallas`` lowers through Mosaic on TPU and falls
+    back to interpret mode elsewhere; ``pallas_interpret`` forces interpret
+    mode (the CPU test path for the kernel program).
   * ``backend="jax"`` — per-lane banded ``lax.while_loop`` under ``vmap``
-    (CPU/GPU fallback, float64-capable reference). Tuning knobs:
+    (CPU/GPU fallback, float64-capable reference), with ``ub`` vmapped per
+    lane so the semantics match the kernel exactly. Tuning knobs:
     ``band_width``, ``rows_per_step`` (rows per loop iteration — amortizes
     vmap'd loop-control overhead).
 
 ``backend=None`` defers to ``$REPRO_DTW_BACKEND``, then the platform default
-(``pallas`` on TPU, ``jax`` elsewhere). Multivariate queries always take the
-``jax`` path. ``with_info=True`` additionally returns per-lane ``EAInfo``
-pruning counters; the default is counter-free — search fast rounds pay no
-bookkeeping.
+(``pallas`` on TPU, ``jax`` elsewhere); the env var is re-read on every
+(un-jitted) call, so changing it between calls takes effect. Multivariate
+queries always take the ``jax`` path. ``with_info=True`` additionally
+returns per-lane ``EAInfo`` pruning counters; the default is counter-free —
+search fast rounds pay no bookkeeping.
 """
 from __future__ import annotations
 
@@ -40,7 +52,7 @@ import jax.numpy as jnp
 
 from repro.core.backend import resolve_backend
 from repro.core.ea_pruned_dtw import EAInfo, ea_pruned_dtw_banded
-from repro.kernels.ops import dtw_ea
+from repro.kernels.ops import dtw_ea, dtw_ea_multi
 
 
 @partial(
@@ -50,18 +62,75 @@ from repro.kernels.ops import dtw_ea
 def _batch_jax(
     query, candidates, ub, window, band_width, cb, rows_per_step, with_info
 ):
-    """vmapped banded-while_loop backend (CPU/GPU fallback)."""
+    """vmapped banded-while_loop backend (CPU/GPU fallback), per-lane ub."""
+    ub_lanes = jnp.broadcast_to(jnp.asarray(ub), candidates.shape[:1])
     if cb is None:
-        fn = lambda c: ea_pruned_dtw_banded(
-            query, c, ub, window=window, band_width=band_width,
+        fn = lambda c, u: ea_pruned_dtw_banded(
+            query, c, u, window=window, band_width=band_width,
             rows_per_step=rows_per_step, with_info=with_info,
         )
-        return jax.vmap(fn)(candidates)
-    fn = lambda c, cbv: ea_pruned_dtw_banded(
-        query, c, ub, window=window, band_width=band_width, cb=cbv,
+        return jax.vmap(fn)(candidates, ub_lanes)
+    fn = lambda c, u, cbv: ea_pruned_dtw_banded(
+        query, c, u, window=window, band_width=band_width, cb=cbv,
         rows_per_step=rows_per_step, with_info=with_info,
     )
-    return jax.vmap(fn)(candidates, cb)
+    return jax.vmap(fn)(candidates, ub_lanes, cb)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("window", "band_width", "rows_per_step", "with_info"),
+)
+def _multi_jax(
+    queries, candidates, ub, window, band_width, cb, rows_per_step, with_info
+):
+    """Multi-query jax backend: per-lane batches over the query axis.
+
+    On CPU the query axis runs under ``lax.map`` so each query's lanes get
+    their *own* while_loop trip count — under a fused ``vmap`` every lane
+    would step until the slowest lane of the slowest query (measured ~20%
+    inflation on mixed-tightness workloads), and a finished query's dead
+    lanes would be re-masked every iteration instead of exiting after one.
+    On accelerators the fused vmap keeps all ``Q × K`` lanes in flight (the
+    lockstep cost is what the hardware wants; the Pallas backend is the
+    preferred path there anyway).
+    """
+    ub_lanes = jnp.broadcast_to(jnp.asarray(ub), candidates.shape[:2])
+
+    def _mapped(fn, ops):
+        # lax.cond skips the whole while_loop for an all-dead query — the
+        # finished-query fast path the round loop relies on. Counter rounds
+        # always run for real: a dead lane issues its abandoning row
+        # (EAInfo semantics), which the skipped branch could not report.
+        if with_info:
+            return jax.lax.map(lambda t: fn(*t), ops)
+        out_sd = jax.eval_shape(fn, *jax.tree.map(lambda x: x[0], ops))
+
+        def dead():
+            return jax.tree.map(
+                lambda sd: jnp.full(sd.shape, jnp.inf, sd.dtype), out_sd
+            )
+
+        return jax.lax.map(
+            lambda t: jax.lax.cond(
+                jnp.any(t[2] >= 0), lambda: fn(*t), dead
+            ),
+            ops,
+        )
+
+    if cb is None:
+        fn = lambda q, cs, us: _batch_jax(
+            q, cs, us, window, band_width, None, rows_per_step, with_info
+        )
+        if jax.default_backend() == "cpu":
+            return _mapped(fn, (queries, candidates, ub_lanes))
+        return jax.vmap(fn)(queries, candidates, ub_lanes)
+    fn = lambda q, cs, us, cbs: _batch_jax(
+        q, cs, us, window, band_width, cbs, rows_per_step, with_info
+    )
+    if jax.default_backend() == "cpu":
+        return _mapped(fn, (queries, candidates, ub_lanes, cb))
+    return jax.vmap(fn)(queries, candidates, ub_lanes, cb)
 
 
 def ea_pruned_dtw_batch(
@@ -77,12 +146,13 @@ def ea_pruned_dtw_batch(
     row_block: int = 128,
     with_info: bool = False,
 ):
-    """Banded EAPrunedDTW of one query against K candidates, shared ``ub``.
+    """Banded EAPrunedDTW of one query against K candidates.
 
     Args:
       query: ``(m,)`` or ``(m, dims)``.
       candidates: ``(K, m[, dims])``.
-      ub: scalar upper bound shared by the whole batch.
+      ub: scalar upper bound shared by the whole batch, or ``(K,)`` per-lane
+        upper bounds (each lane abandons against its own).
       window: Sakoe-Chiba window.
       band_width: static band columns per row (defaults to lane-aligned
         ``2*window+1``).
@@ -118,6 +188,58 @@ def ea_pruned_dtw_batch(
     return out
 
 
+def ea_pruned_dtw_multi_batch(
+    queries: jax.Array,
+    candidates: jax.Array,
+    ub: jax.Array,
+    window: int,
+    band_width: int | None = None,
+    cb: jax.Array | None = None,
+    rows_per_step: int = 1,
+    backend: str | None = None,
+    block_k: int = 8,
+    row_block: int = 128,
+    with_info: bool = False,
+):
+    """Banded EAPrunedDTW of Q queries against their own candidate rounds.
+
+    The flattened ``(Q × K)`` lane set is evaluated in one dispatch: one
+    Pallas launch with a query-block grid dimension, or one nested-vmap JAX
+    program — no per-query launches or recompiles.
+
+    Args:
+      queries: ``(Q, m)`` z-normalized queries (multivariate multi-query is
+        not supported — route per query through ``ea_pruned_dtw_batch``).
+      candidates: ``(Q, K, m)`` candidate windows per query.
+      ub: per-lane upper bounds — scalar, ``(Q, 1)`` or ``(Q, K)``
+        (broadcast to ``(Q, K)``). Negative entries are dead-lane sentinels:
+        those lanes abandon on row 0 (how finished queries ride along).
+      window, band_width, cb, rows_per_step, backend, block_k, row_block,
+        with_info: as in ``ea_pruned_dtw_batch`` (``cb`` is ``(Q, K, m)``).
+
+    Returns: ``(Q, K)`` distances (``+inf`` where abandoned); with
+      ``with_info`` a ``(distances, EAInfo)`` tuple of ``(Q, K)`` arrays.
+    """
+    if jnp.ndim(queries) != 2:
+        raise ValueError("multi-query batch requires (Q, m) univariate queries")
+    resolved = resolve_backend(backend)
+    if resolved == "jax":
+        return _multi_jax(
+            queries, candidates, ub, window, band_width, cb, rows_per_step,
+            with_info,
+        )
+    interpret = True if resolved == "pallas_interpret" else None
+    out = dtw_ea_multi(
+        queries, candidates, ub, window, cb=cb, band_width=band_width,
+        block_k=block_k, row_block=row_block, interpret=interpret,
+        with_info=with_info,
+    )
+    if with_info:
+        d, rows, cells = out
+        return d, EAInfo(rows=rows, cells=cells)
+    return out
+
+
 @partial(
     jax.jit,
     static_argnames=(
@@ -125,6 +247,23 @@ def ea_pruned_dtw_batch(
         "row_block",
     ),
 )
+def _ea_search_round_impl(
+    query, candidates, ub, best_idx, cand_idx, window, band_width, cb,
+    rows_per_step, backend, block_k, row_block,
+):
+    d = ea_pruned_dtw_batch(
+        query, candidates, ub, window, band_width, cb,
+        rows_per_step=rows_per_step, backend=backend, block_k=block_k,
+        row_block=row_block,
+    )
+    k = jnp.argmin(d)
+    dmin = d[k]
+    improved = dmin < ub
+    new_ub = jnp.where(improved, dmin, ub)
+    new_best = jnp.where(improved, cand_idx[k], best_idx)
+    return new_ub, new_best
+
+
 def ea_search_round(
     query: jax.Array,
     candidates: jax.Array,
@@ -145,15 +284,12 @@ def ea_search_round(
     bookkeeping across rounds). Returns updated ``(ub, best_idx)``. Ties keep
     the incumbent (strict improvement only), matching the paper's strictness
     rule for early abandoning.
+
+    The backend is resolved here, outside jit, so ``$REPRO_DTW_BACKEND`` is
+    re-read on every call and becomes the static ``backend`` argument of the
+    jitted round (changing the env var between calls correctly retraces).
     """
-    d = ea_pruned_dtw_batch(
-        query, candidates, ub, window, band_width, cb,
-        rows_per_step=rows_per_step, backend=backend, block_k=block_k,
-        row_block=row_block,
+    return _ea_search_round_impl(
+        query, candidates, ub, best_idx, cand_idx, window, band_width, cb,
+        rows_per_step, resolve_backend(backend), block_k, row_block,
     )
-    k = jnp.argmin(d)
-    dmin = d[k]
-    improved = dmin < ub
-    new_ub = jnp.where(improved, dmin, ub)
-    new_best = jnp.where(improved, cand_idx[k], best_idx)
-    return new_ub, new_best

@@ -1,14 +1,16 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
   dtw_band  — batched early-abandoning pruned DTW (the paper's core loop,
-              TPU-tiled: candidate-parallel grid x sequential row-blocks,
+              TPU-tiled: query/candidate-parallel grid x sequential
+              row-blocks, flattened (Q x K) lanes with a per-lane ub vector,
               banded columns with a window-following offset, VMEM DP carry,
               SMEM abandon flag, optional rows/cells pruning counters)
   lb_keogh  — LB_Kim + LB_Keogh for every window of a reference in one pass
 
-``ops.py`` holds the jitted wrappers (interpret=True on CPU, Mosaic on TPU);
+``ops.py`` holds the jitted wrappers (interpret=True on CPU, Mosaic on TPU):
+``dtw_ea_multi`` is the multi-query launch, ``dtw_ea`` its Q = 1 form;
 ``ref.py`` the pure-jnp oracles the tests sweep against.
 """
-from repro.kernels.ops import dtw_ea, lb_keogh_all_windows
+from repro.kernels.ops import dtw_ea, dtw_ea_multi, lb_keogh_all_windows
 
-__all__ = ["dtw_ea", "lb_keogh_all_windows"]
+__all__ = ["dtw_ea", "dtw_ea_multi", "lb_keogh_all_windows"]

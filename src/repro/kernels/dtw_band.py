@@ -1,18 +1,35 @@
 """Pallas TPU kernel: batched early-abandoning pruned DTW, banded columns.
 
 TPU-native shape of EAPrunedDTW (DESIGN.md §2): a grid of
-``(candidate_blocks, row_blocks)`` programs. The candidate dimension is
-embarrassingly parallel (``dimension_semantics[0] = "parallel"``); the row
-dimension is sequential ("arbitrary") with the DP carry living in VMEM
-scratch across grid steps.
+``(query_blocks, candidate_blocks, row_blocks)`` programs. The query and
+candidate dimensions are embarrassingly parallel
+(``dimension_semantics[:2] = ("parallel", "parallel")``); the row dimension
+is sequential ("arbitrary") with the DP carry living in VMEM scratch across
+grid steps.
+
+Multi-query lane layout: one launch evaluates a flattened ``(Q × K)`` lane
+set. Lanes are laid out query-major — candidate block ``ci`` of query ``qi``
+lives at flattened block row ``qi * num_cand_blocks + ci`` — so each grid
+program still sees a plain ``(block_k, m)`` VMEM tile whose lanes all share
+one query and one envelope, while the grid's leading dimension walks the Q
+distinct queries. ``Q == 1`` degenerates to the single-query kernel of PR 1.
+
+Per-lane upper bounds: ``ub`` is a ``(block_k, 1)`` VMEM vector per block —
+every lane carries its own incumbent. That is what turns the kernel into a
+multi-query serving primitive: lanes belonging to different queries (or to
+padding) abandon against their own thresholds, and a lane whose ``ub`` is
+negative (the padding / finished-query sentinel) dies on its first row
+without holding the block's early-exit flag hostage. The UCR ``cb``
+threshold-tightening slab is likewise per-lane (``(block_k, m)``), so the
+per-row threshold ``ub[lane] - cb[lane, i + w + 1]`` is fully vectorized.
 
 Banded column mode (the serving hot path, mirroring
 ``core.ea_pruned_dtw.ea_pruned_dtw_banded``): instead of full-width ``m``
 rows, each row step computes only a ``band_width`` slice of columns starting
 at the *window-following* offset ``lo(i) = clip(i - window, 0, m - bw)``.
-Because every lane shares the query and the Sakoe-Chiba window, ``lo`` is
-lane-uniform and a pure function of the row index, advancing by at most one
-column per row. That buys two TPU-critical properties:
+Because every lane of a block shares its query and the Sakoe-Chiba window,
+``lo`` is lane-uniform and a pure function of the row index, advancing by at
+most one column per row. That buys two TPU-critical properties:
 
   * the candidate slice is a lane-uniform ``pl.ds(lo, bw)`` dynamic slice
     (no per-lane gather), and
@@ -32,14 +49,15 @@ Per (block_k)-lane row step, entirely in VMEM/VREGs:
   * cost row  ``c[k, r] = (q_i - cand[k, lo + r])^2``        (VPU)
   * ``d = c + min(top, left)`` with top/left from the realigned band
   * row recurrence via prefix-sum + cumulative-min doubling (log2(band))
-  * band bookkeeping: ``next_start`` per lane, abandon flags, UCR ``cb``
-    threshold tightening — all vectorized mask reductions.
+  * band bookkeeping: ``next_start`` per lane, per-lane abandon flags, UCR
+    ``cb`` threshold tightening — all vectorized mask reductions against the
+    per-lane ``ub`` column.
 
-Early abandoning at TPU granularity: a lane whose row has no cell under the
-threshold freezes (its updates are masked out); when *every* lane of a
+Early abandoning at TPU granularity: a lane whose row has no cell under its
+own threshold freezes (its updates are masked out); when *every* lane of a
 candidate block has abandoned, an SMEM flag turns all remaining row-blocks of
 that block into ``pl.when`` no-ops — the kernel-level analogue of the paper's
-border-collision early exit.
+border-collision early exit, at (query, candidate-block) granularity.
 
 Optional pruning counters (``emit_info``): per-lane rows-issued and
 admissible-cells accumulators, matching ``core.ea_pruned_dtw.EAInfo``
@@ -87,11 +105,10 @@ def _prefix_min(x: jax.Array) -> jax.Array:
 
 
 def _dtw_ea_kernel(
-    # scalars / small operands
-    ub_ref,      # SMEM (1,)
     # VMEM operands
-    q_ref,       # (row_block,) query slice for this row block
-    cand_ref,    # (block_k, m) candidate block
+    ub_ref,      # (block_k, 1) per-lane upper bounds
+    q_ref,       # (1, row_block) query slice for this (query, row) block
+    cand_ref,    # (block_k, m) candidate block (lanes share one query)
     cb_ref,      # (block_k, m) cumulative LB suffix (zeros if disabled)
     # outputs
     out_ref,     # (block_k,) distances
@@ -108,7 +125,7 @@ def _dtw_ea_kernel(
         rest = rest[2:]
     prev_ref, ns_ref, flags_ref, rows_ref, cells_ref, done_ref = rest
 
-    ri = pl.program_id(1)
+    ri = pl.program_id(2)
     block_k, m = cand_ref.shape
     bw = band_width
     lo_max = m - bw  # 0 in full-width mode
@@ -125,7 +142,7 @@ def _dtw_ea_kernel(
 
     @pl.when(done_ref[0] == 0)
     def _rows():
-        ub = ub_ref[0]
+        ub = ub_ref[...]  # (block_k, 1) per-lane incumbents
         rel = jax.lax.broadcasted_iota(jnp.int32, (block_k, bw), 1)
 
         def row(r, _):
@@ -135,7 +152,7 @@ def _dtw_ea_kernel(
             lo_prev = jnp.clip(i - 1 - window, 0, lo_max)
             shift = lo - lo_prev  # the window edge advances by 0 or 1
 
-            q_i = q_ref[pl.ds(r, 1)]  # (1,)
+            q_i = q_ref[0, pl.ds(r, 1)]  # (1,)
             cand = cand_ref[:, pl.ds(lo, bw)]
             c = (q_i[0] - cand) ** 2
 
@@ -179,7 +196,7 @@ def _dtw_ea_kernel(
                 tail = jnp.where(i + window + 1 <= m - 1, tail, 0.0)
                 thr = ub - tail
             else:
-                thr = jnp.full((block_k, 1), ub, jnp.float32)
+                thr = ub
 
             le = jnp.logical_and(curr <= thr, exists)
             any_le = jnp.any(le, axis=1, keepdims=True)  # (block_k, 1)
@@ -222,7 +239,7 @@ def _dtw_ea_kernel(
             jnp.all(flags_ref[:, 0] == 1), jnp.int32
         ).astype(jnp.int32)
 
-    @pl.when(ri == pl.num_programs(1) - 1)
+    @pl.when(ri == pl.num_programs(2) - 1)
     def _finish():
         ok = jnp.logical_and(flags_ref[:, 0] == 0, flags_ref[:, 1] == 1)
         lo_fin = min(max(n_rows - 1 - window, 0), lo_max)  # static

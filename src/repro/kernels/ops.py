@@ -3,19 +3,31 @@
 ``interpret`` defaults to True on CPU backends (kernel body executed in
 Python for validation) and False on TPU (real Mosaic lowering).
 
-Backend dispatch: ``dtw_ea`` is the Pallas side of the
-``core.backend`` dispatch layer — similarity search reaches it through
-``core.batch.ea_pruned_dtw_batch(backend="pallas"|"pallas_interpret")``
-rather than calling it directly. ``backend="pallas"`` lowers through Mosaic
-on TPU (and falls back to interpret mode elsewhere); ``"pallas_interpret"``
-forces interpret mode everywhere (the CPU test/CI path). The banded column
-mode (``band_width``) mirrors ``core.ea_pruned_dtw.ea_pruned_dtw_banded``:
-``band_width=None`` picks the smallest lane-aligned width covering
-``2*window + 1`` columns; band mode requires ``n == m`` (subsequence-search
-shape) and silently widens to full rows otherwise. ``with_info=True``
-additionally returns per-lane ``(rows, cells)`` pruning counters
-(``EAInfo`` semantics) at the cost of two int32 accumulators per lane —
-the search fast round runs counter-free.
+Backend dispatch: ``dtw_ea`` / ``dtw_ea_multi`` are the Pallas side of the
+``core.backend`` dispatch layer — similarity search reaches them through
+``core.batch.ea_pruned_dtw_batch`` / ``ea_pruned_dtw_multi_batch`` with
+``backend="pallas"|"pallas_interpret"`` rather than calling them directly.
+``backend="pallas"`` lowers through Mosaic on TPU (and falls back to
+interpret mode elsewhere); ``"pallas_interpret"`` forces interpret mode
+everywhere (the CPU test/CI path).
+
+Lane layout (multi-query): ``dtw_ea_multi`` evaluates a flattened
+``(Q × K)`` lane set in one launch. Candidates are reshaped to
+``(Q * k_pad, m)`` query-major, the grid is
+``(Q, cand_blocks, row_blocks)``, and each grid program's ``block_k`` lanes
+all belong to one query — the query/envelope tile is selected by the
+leading grid index while ``ub`` rides along as a per-lane
+``(block_k, 1)`` VMEM vector. Scalar ``ub`` broadcasts to every lane;
+padding lanes (``K`` rounded up to ``block_k``) get a ``-1`` sentinel so
+they abandon on their first row and never delay a block's early exit.
+
+The banded column mode (``band_width``) mirrors
+``core.ea_pruned_dtw.ea_pruned_dtw_banded``: ``band_width=None`` picks the
+smallest lane-aligned width covering ``2*window + 1`` columns; band mode
+requires ``n == m`` (subsequence-search shape) and silently widens to full
+rows otherwise. ``with_info=True`` additionally returns per-lane
+``(rows, cells)`` pruning counters (``EAInfo`` semantics) at the cost of two
+int32 accumulators per lane — the search fast round runs counter-free.
 """
 from __future__ import annotations
 
@@ -34,6 +46,10 @@ from repro.kernels.lb_keogh import _lb_kernel
 # jax renamed TPUCompilerParams -> CompilerParams; support both.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
+# Per-lane ub sentinel for padding / finished-query lanes: any negative
+# threshold kills the lane on row 0 (DTW costs are >= 0).
+DEAD_LANE_UB = -1.0
+
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
@@ -45,8 +61,8 @@ def _default_interpret() -> bool:
         "window", "band_width", "block_k", "row_block", "interpret", "with_info"
     ),
 )
-def dtw_ea(
-    query: jax.Array,
+def dtw_ea_multi(
+    queries: jax.Array,
     candidates: jax.Array,
     ub: jax.Array,
     window: int,
@@ -57,30 +73,34 @@ def dtw_ea(
     interpret: bool | None = None,
     with_info: bool = False,
 ):
-    """Batched early-abandoning pruned DTW (Pallas kernel, banded columns).
+    """Multi-query batched EAPrunedDTW: one launch, ``Q × K`` lanes.
 
     Args:
-      query: ``(n,)`` z-normalized query (rows of the DP).
-      candidates: ``(K, m)`` candidate windows (columns of the DP).
-      ub: scalar upper bound.
-      window: Sakoe-Chiba window (use ``>= m`` for unconstrained).
-      cb: optional ``(K, m)`` cumulative LB_Keogh suffix sums (UCR
+      queries: ``(Q, n)`` z-normalized queries (rows of the DP).
+      candidates: ``(Q, K, m)`` candidate windows per query.
+      ub: per-lane upper bounds — scalar, ``(Q, 1)`` or ``(Q, K)``
+        (broadcast to ``(Q, K)``). Lanes abandon against their own value; a
+        negative entry kills its lane on row 0 (finished-query sentinel).
+      window: Sakoe-Chiba window shared by all queries (``>= m`` for
+        unconstrained).
+      cb: optional ``(Q, K, m)`` cumulative LB_Keogh suffix sums (UCR
         tightening); ``None`` disables.
       band_width: static band columns per row. ``None`` picks the smallest
         lane-aligned width covering ``2*window + 1`` (full width when
         ``n != m`` — band mode needs the square subsequence-search shape).
-      block_k: candidate lanes per grid block (the parallel grid dim).
+      block_k: candidate lanes per grid block (a parallel grid dim).
       row_block: DP rows per sequential grid step (early-exit granularity).
       with_info: also return per-lane ``(rows, cells)`` int32 counters.
-    Returns: ``(K,)`` float32 distances, ``+inf`` where abandoned; with
-      ``with_info`` a ``(dists, rows, cells)`` tuple.
+    Returns: ``(Q, K)`` float32 distances, ``+inf`` where abandoned; with
+      ``with_info`` a ``(dists, rows, cells)`` tuple of ``(Q, K)`` arrays.
     """
     if interpret is None:
         interpret = _default_interpret()
-    query = jnp.asarray(query, jnp.float32)
+    queries = jnp.asarray(queries, jnp.float32)
     candidates = jnp.asarray(candidates, jnp.float32)
-    n = query.shape[0]
-    k, m = candidates.shape
+    nq, n = queries.shape
+    q_, k, m = candidates.shape
+    assert q_ == nq, (q_, nq)
     window = int(min(window, m))
 
     if band_width is None:
@@ -94,19 +114,29 @@ def dtw_ea(
 
     use_cb = cb is not None
     if cb is None:
-        cb_arr = jnp.zeros((k, m), jnp.float32)
+        cb_arr = jnp.zeros((nq, k, m), jnp.float32)
     else:
         cb_arr = jnp.asarray(cb, jnp.float32)
 
     k_pad = -(-k // block_k) * block_k
     n_pad = -(-n // row_block) * row_block
+    ub_arr = jnp.broadcast_to(jnp.asarray(ub, jnp.float32), (nq, k))
     if k_pad != k:
-        candidates = jnp.pad(candidates, ((0, k_pad - k), (0, 0)))
-        cb_arr = jnp.pad(cb_arr, ((0, k_pad - k), (0, 0)))
+        candidates = jnp.pad(candidates, ((0, 0), (0, k_pad - k), (0, 0)))
+        cb_arr = jnp.pad(cb_arr, ((0, 0), (0, k_pad - k), (0, 0)))
+        ub_arr = jnp.pad(
+            ub_arr, ((0, 0), (0, k_pad - k)), constant_values=DEAD_LANE_UB
+        )
     if n_pad != n:
-        query = jnp.pad(query, (0, n_pad - n))
+        queries = jnp.pad(queries, ((0, 0), (0, n_pad - n)))
 
-    grid = (k_pad // block_k, n_pad // row_block)
+    ncb = k_pad // block_k
+    grid = (nq, ncb, n_pad // row_block)
+    # query-major flattened lane set: block row qi * ncb + ci
+    cand_flat = candidates.reshape(nq * k_pad, m)
+    cb_flat = cb_arr.reshape(nq * k_pad, m)
+    ub_flat = ub_arr.reshape(nq * k_pad, 1)
+
     kernel = partial(
         _dtw_ea_kernel,
         n_rows=n,
@@ -116,23 +146,24 @@ def dtw_ea(
         use_cb=use_cb,
         emit_info=with_info,
     )
-    lane_spec = pl.BlockSpec((block_k,), lambda ci, ri: (ci,))
+    lane_block = lambda qi, ci, ri: (qi * ncb + ci,)
+    lane_spec = pl.BlockSpec((block_k,), lane_block)
     out_specs = [lane_spec]
-    out_shape = [jax.ShapeDtypeStruct((k_pad,), jnp.float32)]
+    out_shape = [jax.ShapeDtypeStruct((nq * k_pad,), jnp.float32)]
     if with_info:
         out_specs += [lane_spec, lane_spec]
         out_shape += [
-            jax.ShapeDtypeStruct((k_pad,), jnp.int32),
-            jax.ShapeDtypeStruct((k_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((nq * k_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((nq * k_pad,), jnp.int32),
         ]
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((row_block,), lambda ci, ri: (ri,)),
-            pl.BlockSpec((block_k, m), lambda ci, ri: (ci, 0)),
-            pl.BlockSpec((block_k, m), lambda ci, ri: (ci, 0)),
+            pl.BlockSpec((block_k, 1), lambda qi, ci, ri: (qi * ncb + ci, 0)),
+            pl.BlockSpec((1, row_block), lambda qi, ci, ri: (qi, ri)),
+            pl.BlockSpec((block_k, m), lambda qi, ci, ri: (qi * ncb + ci, 0)),
+            pl.BlockSpec((block_k, m), lambda qi, ci, ri: (qi * ncb + ci, 0)),
         ],
         out_specs=out_specs if with_info else out_specs[0],
         out_shape=out_shape if with_info else out_shape[0],
@@ -145,19 +176,66 @@ def dtw_ea(
             pltpu.SMEM((1,), jnp.int32),
         ],
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(
-        jnp.reshape(jnp.asarray(ub, jnp.float32), (1,)),
-        query,
-        candidates,
-        cb_arr,
+        ub_flat,
+        queries,
+        cand_flat,
+        cb_flat,
     )
     if with_info:
         d, rows, cells = out
-        return d[:k], rows[:k], cells[:k]
-    return out[:k]
+        return (
+            d.reshape(nq, k_pad)[:, :k],
+            rows.reshape(nq, k_pad)[:, :k],
+            cells.reshape(nq, k_pad)[:, :k],
+        )
+    return out.reshape(nq, k_pad)[:, :k]
+
+
+def dtw_ea(
+    query: jax.Array,
+    candidates: jax.Array,
+    ub: jax.Array,
+    window: int,
+    cb: jax.Array | None = None,
+    band_width: int | None = None,
+    block_k: int = 8,
+    row_block: int = 128,
+    interpret: bool | None = None,
+    with_info: bool = False,
+):
+    """Single-query batched EAPrunedDTW — ``dtw_ea_multi`` with ``Q = 1``.
+
+    Args:
+      query: ``(n,)`` z-normalized query (rows of the DP).
+      candidates: ``(K, m)`` candidate windows (columns of the DP).
+      ub: scalar upper bound shared by every lane, or a ``(K,)`` per-lane
+        vector.
+      window, cb, band_width, block_k, row_block, with_info: as in
+        ``dtw_ea_multi`` (``cb`` is ``(K, m)`` here).
+    Returns: ``(K,)`` float32 distances, ``+inf`` where abandoned; with
+      ``with_info`` a ``(dists, rows, cells)`` tuple.
+    """
+    ub = jnp.asarray(ub, jnp.float32)
+    out = dtw_ea_multi(
+        jnp.asarray(query)[None],
+        jnp.asarray(candidates)[None],
+        ub[None] if ub.ndim == 1 else ub,
+        window,
+        cb=None if cb is None else jnp.asarray(cb)[None],
+        band_width=band_width,
+        block_k=block_k,
+        row_block=row_block,
+        interpret=interpret,
+        with_info=with_info,
+    )
+    if with_info:
+        d, rows, cells = out
+        return d[0], rows[0], cells[0]
+    return out[0]
 
 
 @partial(

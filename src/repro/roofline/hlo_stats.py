@@ -237,12 +237,22 @@ def _analyze_comp(c: Comp) -> None:
             eq = line.find(" = ")
             res = _SHAPE_RE.search(line, eq)
             out_elems = _shape_elems(res.group(2)) if res else 0
-            # lhs operand name
+            # lhs operand: scheduled HLO prints the shape inline
+            # (``dot(f32[8,64]{1,0} %lhs, ...)``); fall back to the symbol
+            # table when only the name is present.
             args = line[line.find("(", opi) + 1 :]
-            am = re.match(r"\s*%([\w\.\-]+)", args)
+            am = re.match(
+                r"\s*(?:(\w+)\[([\d,]*)\](?:\{[^}]*\})?\s+)?%([\w\.\-]+)",
+                args,
+            )
             contraction = 1
-            if am and am.group(1) in c.symbols:
-                lhs_dims = c.symbols[am.group(1)][1]
+            lhs_dims = None
+            if am:
+                if am.group(2) is not None:
+                    lhs_dims = am.group(2)
+                elif am.group(3) in c.symbols:
+                    lhs_dims = c.symbols[am.group(3)][1]
+            if lhs_dims is not None:
                 dims = [int(x) for x in lhs_dims.split(",")] if lhs_dims else []
                 cm2 = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
                 if cm2 and cm2.group(1):

@@ -1,17 +1,27 @@
 """UCR-suite style similarity search built on EAPrunedDTW."""
 from repro.search.cascade import cascade, cascade_lower_bounds
 from repro.search.distributed import DistSearchResult, make_distributed_search
+from repro.search.multi import (
+    DistMultiSearchResult,
+    MultiSearchResult,
+    make_distributed_multi_search,
+    multi_query_search,
+)
 from repro.search.subsequence import VARIANTS, SearchResult, subsequence_search
 from repro.search.znorm import gather_norm_windows, window_stats, znorm
 
 __all__ = [
+    "DistMultiSearchResult",
     "DistSearchResult",
+    "MultiSearchResult",
     "SearchResult",
     "VARIANTS",
     "cascade",
     "cascade_lower_bounds",
     "gather_norm_windows",
+    "make_distributed_multi_search",
     "make_distributed_search",
+    "multi_query_search",
     "subsequence_search",
     "window_stats",
     "znorm",

@@ -24,7 +24,18 @@ EAPrunedDTW batches are routed through ``core.batch.ea_pruned_dtw_batch``,
 so ``backend=`` (pallas kernel vs banded-vmap JAX) and the tuning knobs
 (``rows_per_step``, ``block_k``, ``row_block``, ``band_width``) thread all
 the way down; defaults for the paper workload live in
-``configs/dtw_search.py``.
+``configs/dtw_search.py``. The backend (and ``$REPRO_DTW_BACKEND``) is
+resolved in the un-jitted wrapper on every call, so it is always a concrete
+static argument of the jitted program.
+
+Per-lane ``ub`` semantics: the batch primitive underneath accepts one upper
+bound *per lane*, not one per batch. This single-query driver always passes
+the scalar incumbent (every lane of a round shares it — the PR-1
+behaviour), but the semantics it relies on are per-lane: each lane abandons
+against its own threshold and a negative threshold kills a lane on row 0.
+``search/multi.py`` exploits exactly that to flatten Q queries' rounds into
+one ``(Q × batch)`` lane set per dispatch — see its docstring for the
+(query × candidate) lane layout.
 """
 from __future__ import annotations
 
@@ -34,6 +45,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import resolve_backend
 from repro.core.batch import ea_pruned_dtw_batch
 from repro.core.common import BIG
 from repro.core.dtw import dtw
@@ -101,7 +113,7 @@ def _batch_stats(variant, query_n, cand, ub, window, band_width, cb, knobs):
         "with_info", "backend", "rows_per_step", "block_k", "row_block",
     ),
 )
-def subsequence_search(
+def _subsequence_search_impl(
     ref: jax.Array,
     query: jax.Array,
     length: int,
@@ -220,4 +232,34 @@ def subsequence_search(
         lb_pruned=jnp.asarray(n_win) - jnp.minimum(st.lanes, n_win),
         rows=st.rows if with_info else no_info,
         cells=st.cells if with_info else no_info,
+    )
+
+
+def subsequence_search(
+    ref: jax.Array,
+    query: jax.Array,
+    length: int,
+    window: int,
+    variant: str = "eapruned",
+    batch: int = 64,
+    band_width: int | None = None,
+    chunk: int = 4096,
+    with_info: bool = False,
+    backend: str | None = None,
+    rows_per_step: int = 1,
+    block_k: int = 8,
+    row_block: int = 128,
+) -> SearchResult:
+    """Locate the closest z-normalized window of ``ref`` to ``query``.
+
+    Un-jitted entry point: resolves ``backend`` (including the
+    ``$REPRO_DTW_BACKEND`` env var, re-read every call) to a concrete name
+    that becomes a static argument of the jitted search — see
+    ``_subsequence_search_impl`` for the argument reference.
+    """
+    return _subsequence_search_impl(
+        ref, query, length=length, window=window, variant=variant,
+        batch=batch, band_width=band_width, chunk=chunk, with_info=with_info,
+        backend=resolve_backend(backend), rows_per_step=rows_per_step,
+        block_k=block_k, row_block=row_block,
     )

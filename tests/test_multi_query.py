@@ -1,0 +1,245 @@
+"""Multi-query search parity + per-lane-ub semantics across backends.
+
+The contracts under test:
+
+  * ``multi_query_search`` over Q queries returns the same ``best_start`` /
+    ``best_dist`` per query as Q independent ``subsequence_search`` calls,
+    on both the ``jax`` and ``pallas_interpret`` backends.
+  * the per-lane-``ub`` batch primitive agrees with the float64 single-query
+    reference (``ea_pruned_dtw_banded`` per lane, each lane with its own
+    ``ub``) on every (query, candidate) lane — abandon decisions and
+    surviving values.
+  * ragged per-query ``ub`` trajectories: negative sentinels kill lanes on
+    row 0, per-query seeds (``ub_init``) drive different abandon patterns,
+    and a hopeless seed makes its query abandon in round 0.
+  * ``$REPRO_DTW_BACKEND`` is re-read on every search call (the un-jitted
+    wrapper resolves it into the static backend argument, so changing the
+    env var between calls retraces).
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.batch import ea_pruned_dtw_multi_batch
+from repro.core.ea_pruned_dtw import ea_pruned_dtw_banded
+from repro.search import multi_query_search, subsequence_search
+from repro.search.znorm import znorm
+
+BACKENDS = ("jax", "pallas_interpret")
+
+
+def _mk_problem(seed=3, n_ref=900, nq=4, length=96):
+    rng = np.random.default_rng(seed)
+    ref = jnp.asarray(np.cumsum(rng.normal(size=n_ref)))
+    queries = jnp.asarray(np.cumsum(rng.normal(size=(nq, length)), axis=1))
+    return ref, queries
+
+
+def _mk_lanes(nq, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    qs = znorm(jnp.asarray(np.cumsum(rng.normal(size=(nq, n)), axis=1), jnp.float32))
+    cs = znorm(
+        jnp.asarray(np.cumsum(rng.normal(size=(nq, k, n)), axis=2), jnp.float32)
+    )
+    return qs, cs
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_multi_query_matches_sequential(backend):
+    """Q-query search == Q independent single-query searches, per query."""
+    ref, queries = _mk_problem()
+    length, w = queries.shape[1], 9
+    res = multi_query_search(
+        ref, queries, length=length, window=w, batch=64, backend=backend
+    )
+    for q in range(queries.shape[0]):
+        one = subsequence_search(
+            ref, queries[q], length=length, window=w, batch=64, backend=backend
+        )
+        assert int(res.best_start[q]) == int(one.best_start), (backend, q)
+        np.testing.assert_allclose(
+            float(res.best_dist[q]), float(one.best_dist), rtol=2e-5
+        )
+
+
+def test_multi_query_backends_agree_with_info():
+    """jax and pallas_interpret agree on results AND pruning counters."""
+    ref, queries = _mk_problem(seed=11)
+    length, w = queries.shape[1], 9
+    res = {
+        b: multi_query_search(
+            ref, queries, length=length, window=w, batch=32, backend=b,
+            with_info=True,
+        )
+        for b in BACKENDS
+    }
+    a, b = res["jax"], res["pallas_interpret"]
+    assert np.array_equal(np.asarray(a.best_start), np.asarray(b.best_start))
+    np.testing.assert_allclose(
+        np.asarray(a.best_dist), np.asarray(b.best_dist), rtol=1e-5
+    )
+    assert np.array_equal(np.asarray(a.rows), np.asarray(b.rows))
+    assert np.array_equal(np.asarray(a.cells), np.asarray(b.cells))
+    assert int(np.asarray(a.rows).min()) > 0
+
+
+@pytest.mark.parametrize("nq,k,n,w", [(3, 13, 96, 9), (2, 8, 70, 5)])
+def test_per_lane_ub_parity_float64_reference(nq, k, n, w):
+    """Every (query, candidate) lane agrees with the float64 single-query
+    reference run at that lane's own ub — abandon decisions and values."""
+    qs, cs = _mk_lanes(nq, k, n, seed=nq * 7 + k)
+    rng = np.random.default_rng(1)
+    ub = jnp.asarray(rng.uniform(2.0, 80.0, size=(nq, k)), jnp.float32)
+
+    outs = {
+        b: np.asarray(
+            ea_pruned_dtw_multi_batch(qs, cs, ub, window=w, backend=b)
+        )
+        for b in BACKENDS
+    }
+    # float64 single-query reference, one lane at a time
+    ref = np.full((nq, k), np.inf)
+    for q in range(nq):
+        for j in range(k):
+            ref[q, j] = float(
+                ea_pruned_dtw_banded(
+                    jnp.asarray(qs[q], jnp.float64),
+                    jnp.asarray(cs[q, j], jnp.float64),
+                    float(ub[q, j]),
+                    window=w,
+                )
+            )
+    for b, got in outs.items():
+        assert np.array_equal(np.isfinite(got), np.isfinite(ref)), b
+        fin = np.isfinite(ref)
+        np.testing.assert_allclose(got[fin], ref[fin], rtol=1e-4, err_msg=b)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ragged_ub_trajectories(backend):
+    """Per-lane ub raggedness: sentinels, tight and loose lanes coexist."""
+    nq, k, n, w = 3, 12, 96, 9
+    qs, cs = _mk_lanes(nq, k, n, seed=5)
+    # lane-dependent ubs: a dead-sentinel lane, a hopeless-tight lane, and a
+    # sure-finish lane in the same block
+    ub = np.full((nq, k), 50.0, np.float32)
+    ub[0, 0] = -1.0    # dead sentinel: must be +inf without work
+    ub[1, 2] = 1e-4    # tight: abandons
+    ub[2, 5] = 1e6     # loose: must finish
+    d = np.asarray(
+        ea_pruned_dtw_multi_batch(
+            qs, cs, jnp.asarray(ub), window=w, backend=backend
+        )
+    )
+    assert not np.isfinite(d[0, 0])
+    assert not np.isfinite(d[1, 2])
+    assert np.isfinite(d[2, 5])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_query_abandons_in_round_zero(backend):
+    """A hopeless ub_init seed: the query drops out of the round loop at
+    round 0 with no neighbour, while its siblings search normally."""
+    ref, queries = _mk_problem(seed=7)
+    length, w = queries.shape[1], 9
+    nq = queries.shape[0]
+    seeds = np.full((nq,), 1e30, np.float32)
+    seeds[1] = 1e-6
+    res = multi_query_search(
+        ref, queries, length=length, window=w, batch=64, backend=backend,
+        ub_init=jnp.asarray(seeds),
+    )
+    assert int(res.best_start[1]) == -1
+    assert int(res.rounds[1]) == 0
+    assert float(res.best_dist[1]) == pytest.approx(1e-6)
+    # the other queries are unaffected by their sibling's dead lanes
+    base = multi_query_search(
+        ref, queries, length=length, window=w, batch=64, backend=backend
+    )
+    for q in (0, 2, 3):
+        assert int(res.best_start[q]) == int(base.best_start[q])
+
+
+def test_warm_start_changes_work_not_results():
+    ref, queries = _mk_problem(seed=13)
+    length, w = queries.shape[1], 9
+    base = multi_query_search(
+        ref, queries, length=length, window=w, batch=64, backend="jax",
+        warm_start=0,
+    )
+    warm = multi_query_search(
+        ref, queries, length=length, window=w, batch=64, backend="jax",
+        warm_start=16,
+    )
+    assert np.array_equal(
+        np.asarray(base.best_start), np.asarray(warm.best_start)
+    )
+    np.testing.assert_allclose(
+        np.asarray(base.best_dist), np.asarray(warm.best_dist), rtol=2e-5
+    )
+    # warm incumbents can only shrink the round loop
+    assert int(np.asarray(warm.rounds).sum()) <= int(np.asarray(base.rounds).sum())
+
+
+def test_env_var_reread_between_calls(monkeypatch):
+    """REPRO_DTW_BACKEND is resolved per call in the un-jitted wrapper: the
+    backend reaching the jitted search flips when the env var flips."""
+    import repro.search.subsequence as subseq
+
+    seen = []
+    real = subseq.ea_pruned_dtw_batch
+
+    def recorder(*args, **kwargs):
+        seen.append(kwargs.get("backend"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(subseq, "ea_pruned_dtw_batch", recorder)
+    rng = np.random.default_rng(17)
+    # unique shape so each backend traces fresh through the recorder
+    ref = jnp.asarray(np.cumsum(rng.normal(size=777)))
+    q = jnp.asarray(np.cumsum(rng.normal(size=80)))
+
+    monkeypatch.setenv("REPRO_DTW_BACKEND", "jax")
+    r1 = subsequence_search(ref, q, length=80, window=8, batch=32)
+    monkeypatch.setenv("REPRO_DTW_BACKEND", "pallas_interpret")
+    r2 = subsequence_search(ref, q, length=80, window=8, batch=32)
+
+    assert "jax" in seen and "pallas_interpret" in seen, seen
+    assert int(r1.best_start) == int(r2.best_start)
+
+
+def test_distributed_multi_query_parity():
+    """Sharded (query, candidate-range) search with vectorized pmin
+    reconciliation matches the single-device answers (8 fake devices)."""
+    import subprocess
+    import sys
+
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+from repro.search import make_distributed_multi_search, subsequence_search
+rng = np.random.default_rng(7)
+ref = jnp.asarray(np.cumsum(rng.normal(size=1100)), jnp.float32)
+queries = jnp.asarray(np.cumsum(rng.normal(size=(3, 96)), axis=1), jnp.float32)
+mesh = jax.make_mesh((8,), ("d",))
+fn = make_distributed_multi_search(mesh, ("d",), length=96, window=9, batch=32, backend="jax")
+res = fn(ref, queries)
+for q in range(3):
+    one = subsequence_search(ref, queries[q], length=96, window=9, batch=32, backend="jax")
+    assert int(res.best_start[q]) == int(one.best_start), (q, res.best_start[q], one.best_start)
+    np.testing.assert_allclose(float(res.best_dist[q]), float(one.best_dist), rtol=1e-4)
+print("DIST MULTI OK")
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=420,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DIST MULTI OK" in out.stdout
