@@ -1,0 +1,135 @@
+"""search/stream: incremental ingest vs full recompute per chunk.
+
+The streaming engine's claim is that serving a live stream costs O(chunk)
+per arrival: the appendable stats + boundary-tail cascade scan only the
+newly-valid windows, and the carried incumbents make EAPrunedDTW abandon
+harder as the stream ages. The honest baseline is what a chunk-arrival loop
+looks like *without* the engine: rerun offline ``multi_query_search`` on the
+full prefix after every chunk (O(N) stats + cascade each time, incumbents
+rebuilt from scratch). Both paths see the same chunk schedule and answer
+after every chunk; the bench asserts final-answer parity with the offline
+search over the whole series before timing anything.
+
+Measurement protocol: same alternating paired scheme as ``bench_multiq``
+(recompute, stream, recompute, stream, ...) so both paths share background
+load; headline ratio is best-of vs best-of with the median per-pair ratio
+alongside. The stream path builds a fresh engine per repetition (its state
+is consumed by ingestion); construction is part of the serving cost and is
+included.
+
+CSV rows (name,us_per_call,derived):
+  search/stream/q{Q}/l{l}/c{chunk}/{backend}/recompute — best-of aggregate us
+  search/stream/q{Q}/l{l}/c{chunk}/{backend}/stream    — best-of aggregate us
+  search/stream/q{Q}/l{l}/c{chunk}/{backend}/speedup   — best-of ratio
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import make_dataset, make_queries
+from repro.search import multi_query_search
+from repro.serve import StreamSearchEngine
+
+
+def run(
+    ref_len: int = 16_000,
+    length: int = 128,
+    window_ratio: float = 0.1,
+    n_queries: int = 4,
+    batch: int = 64,
+    chunk: int = 2_000,
+    pairs: int = 5,
+    backend: str = "jax",
+    dataset: str = "ECG",
+):
+    w = max(int(length * window_ratio), 1)
+    ref = jnp.asarray(make_dataset(dataset, ref_len, seed=0), jnp.float32)
+    queries = jnp.asarray(
+        make_queries(dataset, n_queries, length, seed=1), jnp.float32
+    )
+    bounds = list(range(chunk, ref_len + 1, chunk))
+    if not bounds or bounds[-1] != ref_len:
+        bounds.append(ref_len)
+
+    def recompute():
+        # chunk-arrival loop without the engine: full offline search on the
+        # grown prefix after every chunk
+        res = None
+        for hi in bounds:
+            res = multi_query_search(
+                ref[:hi], queries, length=length, window=w, batch=batch,
+                backend=backend,
+            )
+        return res
+
+    def stream():
+        eng = StreamSearchEngine(
+            queries, length=length, window=w, batch=batch, backend=backend
+        )
+        lo = 0
+        for hi in bounds:
+            eng.ingest(ref[lo:hi])
+            lo = hi
+        return eng
+
+    # warmup/compile both paths (every prefix length and ingest shape), then
+    # check parity against the one-shot offline answer before timing
+    full = multi_query_search(
+        ref, queries, length=length, window=w, batch=batch, backend=backend
+    )
+    last = recompute()
+    eng = stream()
+    bs, bd = eng.best()
+    agree = bool(
+        np.array_equal(np.asarray(bs), np.asarray(full.best_start))
+        and np.array_equal(
+            np.asarray(last.best_start), np.asarray(full.best_start)
+        )
+    )
+    max_rel = float(
+        np.max(
+            np.abs(np.asarray(bd) - np.asarray(full.best_dist))
+            / np.maximum(np.abs(np.asarray(full.best_dist)), 1e-12)
+        )
+    )
+
+    t_rec, t_str, ratios = [], [], []
+    for _ in range(pairs):
+        t0 = time.time()
+        jax.block_until_ready(recompute().best_dist)
+        tr = time.time() - t0
+        t0 = time.time()
+        jax.block_until_ready(stream().best()[1])
+        ts = time.time() - t0
+        t_rec.append(tr)
+        t_str.append(ts)
+        ratios.append(tr / ts if ts > 0 else 0.0)
+    median_ratio = statistics.median(ratios)
+    ratio = min(t_rec) / min(t_str) if min(t_str) > 0 else 0.0
+
+    tag = f"search/stream/q{n_queries}/l{length}/c{chunk}/{backend}"
+    return [
+        (f"{tag}/recompute", min(t_rec) * 1e6,
+         f"agree={agree};chunks={len(bounds)}"),
+        (f"{tag}/stream", min(t_str) * 1e6,
+         f"agree={agree};max_rel_dist_err={max_rel:.2e}"),
+        (f"{tag}/speedup", ratio,
+         f"speedup={ratio:.4f};median_pair_ratio={median_ratio:.4f};"
+         f"pairs={pairs}"),
+    ]
+
+
+def main() -> None:
+    rows = run()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV:
   * suite/*        — paper Fig. 5 analogue (four suites x dataset x l x w);
                      suite/SPEEDUP/* rows carry the headline ratios
   * search/multiq/* — one multi_query_search call vs Q sequential searches
+  * search/stream/* — streaming engine ingest vs full recompute per chunk
   * dtw/*          — per-computation EA/Pruned/full work + time comparison
   * dtw/backend/*  — batch-backend dispatch comparison (vmap vs Pallas-interpret)
   * kernel/*       — Pallas kernel harness checks (interpret mode)
@@ -11,7 +12,8 @@ Prints ``name,us_per_call,derived`` CSV:
 
 ``--json`` additionally writes a ``BENCH_dtw.json`` artifact so the perf
 trajectory stays machine-readable across PRs: per-suite ``us_per_call`` and
-``cells_ratio``, the ``multiq`` suite, plus every dtw/* micro-bench row.
+``cells_ratio``, the ``multiq`` and ``stream`` suites, plus every dtw/*
+micro-bench row.
 
 Usage: PYTHONPATH=src python -m benchmarks.run
          [--quick] [--skip-roofline] [--json [PATH]]
@@ -53,6 +55,7 @@ def main() -> None:
         bench_dtw_micro,
         bench_kernels,
         bench_multiq,
+        bench_stream,
         bench_suites,
     )
 
@@ -62,7 +65,7 @@ def main() -> None:
     # keeps cross-PR comparisons scoped to like-for-like artifacts
     artifact = {
         "meta": {"quick": bool(args.quick), "backend": jax.default_backend()},
-        "suites": [], "multiq": [], "dtw": [], "roofline": [],
+        "suites": [], "multiq": [], "stream": [], "dtw": [], "roofline": [],
     }
 
     print("name,us_per_call,derived")
@@ -82,6 +85,14 @@ def main() -> None:
     for name, us, derived in mq_rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
         artifact["multiq"].append(_suite_record(name, us, derived))
+
+    if args.quick:
+        st_rows = bench_stream.run(ref_len=6_000, chunk=1_500, pairs=3)
+    else:
+        st_rows = bench_stream.run()
+    for name, us, derived in st_rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+        artifact["stream"].append(_suite_record(name, us, derived))
 
     micro = bench_dtw_micro.run(length=128, k=128, window_ratio=0.1)
     micro += bench_dtw_micro.run_backends(

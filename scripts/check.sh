@@ -8,19 +8,14 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
-# One known-failing seed test (LM model stack, unrelated to the DTW/search
-# path) is deselected so the gate stays meaningful; drop the line once it
-# is fixed.
-python -m pytest -x -q \
-    --deselect tests/test_elastic.py::test_ep_moe_matches_dense \
-    "$@"
+python -m pytest -x -q "$@"
 
 echo "== kernel program on CPU (pallas_interpret) =="
 # Force every backend-dispatched DTW batch through the Pallas kernel in
 # interpret mode so the exact kernel program is exercised in the local gate,
 # not just on TPU.
 REPRO_DTW_BACKEND=pallas_interpret python -m pytest -x -q \
-    tests/test_backend.py tests/test_multi_query.py
+    tests/test_backend.py tests/test_multi_query.py tests/test_streaming.py
 
 echo "== benchmark smoke (--quick) =="
 python -m benchmarks.run --quick --skip-roofline --json BENCH_dtw.json

@@ -32,6 +32,16 @@ Multi-query serving knobs (``search.multi.multi_query_search``):
                       dispatch to seed per-query incumbents; helps the
                       Pallas backend's block early exit, off for the vmap
                       backend (see ``multi_query_search``).
+
+Streaming knobs (``serve.stream.StreamSearchEngine``):
+
+  ``stream_chunk``  — reference samples per ingest; each ingest is one
+                      jitted dispatch over the newly-valid windows, so this
+                      is the latency/amortization trade (a fixed size also
+                      settles the engine into a single reused trace).
+  ``ring_capacity`` — monitoring ring over the last W raw samples
+                      (``None`` = keep no sample history; the search itself
+                      only ever needs the ``length - 1`` boundary tail).
 """
 from dataclasses import dataclass
 
@@ -51,6 +61,8 @@ class SearchConfig:
     row_block: int = 128             # Pallas rows per sequential grid step
     n_queries: int = 8               # multi-query workload size (search.multi)
     warm_start: int = 0              # multi-query incumbent-seeding prepass
+    stream_chunk: int = 8192         # samples per streaming ingest (serve.stream)
+    ring_capacity: int | None = None  # monitoring ring over last W samples
 
     @property
     def window(self) -> int:

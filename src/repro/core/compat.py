@@ -1,0 +1,30 @@
+"""Version-compat shims over moving JAX APIs.
+
+One place to absorb upstream API churn so feature modules stay clean. The
+only current inhabitant is ``shard_map``: new JAX releases expose
+``jax.shard_map`` with a ``check_vma`` flag, older releases only have
+``jax.experimental.shard_map.shard_map`` with ``check_rep``. Both callers
+(the distributed search drivers and the expert-parallel MoE) want the
+replication check disabled — their per-device loops mix device-varying and
+replicated values — so the shim bakes that in.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(fn, mesh, in_specs, out_specs):
+    """``shard_map`` with the replication/VMA check disabled, on any JAX.
+
+    New jax: ``jax.shard_map(..., check_vma=False)``. Older releases:
+    ``jax.experimental.shard_map.shard_map(..., check_rep=False)``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)

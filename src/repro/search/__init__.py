@@ -7,18 +7,30 @@ from repro.search.multi import (
     make_distributed_multi_search,
     multi_query_search,
 )
+from repro.search.streaming import IngestResult, ingest_chunk, initial_incumbents
 from repro.search.subsequence import VARIANTS, SearchResult, subsequence_search
-from repro.search.znorm import gather_norm_windows, window_stats, znorm
+from repro.search.znorm import (
+    append_window_stats,
+    clamp_sigma,
+    gather_norm_windows,
+    window_stats,
+    znorm,
+)
 
 __all__ = [
     "DistMultiSearchResult",
     "DistSearchResult",
+    "IngestResult",
     "MultiSearchResult",
     "SearchResult",
     "VARIANTS",
+    "append_window_stats",
     "cascade",
     "cascade_lower_bounds",
+    "clamp_sigma",
     "gather_norm_windows",
+    "ingest_chunk",
+    "initial_incumbents",
     "make_distributed_multi_search",
     "make_distributed_search",
     "multi_query_search",

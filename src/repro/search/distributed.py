@@ -27,23 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-
-def _shard_map(fn, mesh, in_specs, out_specs):
-    """Version-compat shard_map: new jax exposes ``jax.shard_map`` with a
-    ``check_vma`` flag; older releases have ``jax.experimental.shard_map``
-    with ``check_rep``. Both checks are disabled — the banded-EA while_loop
-    carries mix device-varying and replicated values."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(
-            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
-        )
-    from jax.experimental.shard_map import shard_map as _sm
-
-    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False)
-
 from repro.core.batch import ea_pruned_dtw_batch
+from repro.core.compat import shard_map as _shard_map
 from repro.core.common import BIG
 from repro.core.lower_bounds import _lb_keogh_terms, envelope, lb_keogh, lb_kim_fl
 from repro.search.znorm import gather_norm_windows, window_stats, znorm

@@ -66,7 +66,8 @@ from repro.core.common import BIG
 from repro.core.lower_bounds import _lb_keogh_terms, envelope
 from repro.kernels.ops import DEAD_LANE_UB
 from repro.search.cascade import cascade_lower_bounds
-from repro.search.distributed import _local_lbs, _shard_map
+from repro.core.compat import shard_map as _shard_map
+from repro.search.distributed import _local_lbs
 from repro.search.znorm import gather_norm_windows, window_stats, znorm
 
 MULTI_VARIANTS = ("eapruned", "eapruned_nolb")

@@ -1,0 +1,263 @@
+"""Streaming similarity search: per-chunk incremental ingest primitives.
+
+The offline drivers (``subsequence_search`` / ``multi_query_search``) see the
+whole reference at once. A stream delivers it in chunks, and recomputing the
+O(N) stats + cascade per chunk throws away everything the previous chunks
+taught us. This module is the incremental core the serving front-end
+(``serve/stream.py``) drives, one jitted dispatch per ingest:
+
+  * **Appendable window stats** — ``znorm.append_window_stats`` turns the
+    ``length - 1`` carried tail plus the new chunk into the mu/sigma table of
+    exactly the windows that become valid with this chunk, in O(chunk) work.
+    The ``length - 1`` windows straddling the tail/chunk boundary are
+    first-class: they appear in the ingest in which their last sample
+    arrives, so no chunking of the stream can hide a window.
+
+  * **LB cascade over new windows only** — the same LB_Kim/LB_Keogh cascade
+    as offline, vmapped over the Q standing queries, but over the O(chunk)
+    newly-valid starts instead of all N windows seen so far.
+
+  * **Carried-incumbent EAPrunedDTW rounds** — the paper's tightening trick
+    applied *in time*: each query's incumbent ``ub[q]``, carried over from
+    every previous chunk, seeds this ingest's best-first rounds through the
+    per-lane-``ub`` machinery of ``ea_pruned_dtw_multi_batch``. A stream that
+    found a good match early makes every later chunk abandon harder — the
+    exact analogue of the UCR suite carrying ``ub`` across candidates, here
+    carried across arrival time. Finished-for-this-ingest queries ride along
+    as dead lanes (negative-``ub`` sentinel), so Q standing queries cost one
+    flattened ``(Q × batch)``-lane dispatch per round regardless of how many
+    still have live candidates.
+
+Because every window is scanned exactly once (in the ingest where it becomes
+valid) against a monotone non-increasing incumbent, the final per-query
+``(distance, start)`` equals the offline search over the concatenated stream
+— for *any* chunking. ``tests/test_streaming.py`` pins that parity on both
+backends.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import resolve_backend
+from repro.core.batch import ea_pruned_dtw_multi_batch
+from repro.core.common import BIG
+from repro.core.lower_bounds import _lb_keogh_terms
+from repro.kernels.ops import DEAD_LANE_UB
+from repro.search.cascade import cascade_lower_bounds
+from repro.search.multi import MULTI_VARIANTS, _round_slicers
+from repro.search.znorm import append_window_stats, gather_norm_windows
+
+
+class IngestResult(NamedTuple):
+    """Per-ingest outcome, all arrays ``(Q,)`` over the standing queries."""
+    ub: jax.Array      # incumbents after this ingest (non-increasing)
+    best: jax.Array    # stream-coordinate start of each best-so-far (-1: none)
+    rounds: jax.Array  # batch rounds spent on this ingest
+    lanes: jax.Array   # candidate lanes submitted this ingest
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "length", "window", "variant", "batch", "band_width", "chunk_lb",
+        "backend", "rows_per_step", "block_k", "row_block",
+    ),
+)
+def _ingest_impl(
+    tail,
+    chunk,
+    queries_n,
+    u,
+    low,
+    ub0,
+    best0,
+    offset,
+    length,
+    window,
+    variant,
+    batch,
+    band_width,
+    chunk_lb,
+    backend,
+    rows_per_step,
+    block_k,
+    row_block,
+):
+    """One ingest: stats append + cascade + carried-ub rounds, jitted.
+
+    ``tail`` is the carried ``length - 1`` boundary context, ``offset`` the
+    stream coordinate of ``tail[0]`` (so local window start ``s`` in the
+    context maps to stream start ``offset + s``). Retraces per distinct
+    (tail, chunk) shape — a fixed chunk size settles into one trace.
+    """
+    assert variant in MULTI_VARIANTS, variant
+    knobs = dict(
+        rows_per_step=rows_per_step, backend=backend, block_k=block_k,
+        row_block=row_block,
+    )
+    use_lb = variant != "eapruned_nolb"
+    use_cb = variant == "eapruned"
+    nq = queries_n.shape[0]
+
+    new_tail, mu, sigma = append_window_stats(tail, chunk, length)
+    ctx = jnp.concatenate([tail, chunk])
+    k_new = ctx.shape[0] - length + 1
+    assert k_new >= 1, "ingest called with no newly-valid windows"
+
+    if use_lb:
+        lbs = jax.vmap(
+            lambda qn: cascade_lower_bounds(
+                ctx, qn, mu, sigma, length, window, chunk=chunk_lb
+            )
+        )(queries_n)                                   # (Q, k_new)
+        order = jnp.argsort(lbs, axis=1)
+        lb_sorted = jnp.take_along_axis(lbs, order, axis=1)
+    else:
+        order = jnp.broadcast_to(jnp.arange(k_new), (nq, k_new))
+        lb_sorted = jnp.zeros((nq, k_new), queries_n.dtype)
+
+    n_rounds = -(-k_new // batch)
+    pad = n_rounds * batch - k_new
+    order_p = jnp.concatenate(
+        [order, jnp.zeros((nq, pad), order.dtype)], axis=1
+    )
+    lb_p = jnp.concatenate(
+        [lb_sorted, jnp.full((nq, pad), jnp.inf, lb_sorted.dtype)], axis=1
+    )
+
+    # The carried incumbent gates round 0 exactly like a warm ``ub_init`` in
+    # the offline driver: a query whose best new lower bound cannot beat its
+    # incumbent skips this ingest entirely.
+    active0 = jnp.ones((nq,), bool)
+    if use_lb:
+        active0 = lb_p[:, 0] < ub0
+
+    slice_round, peek_lb = _round_slicers(batch)
+
+    class St(NamedTuple):
+        r: jax.Array        # (Q,) per-query round pointer
+        ub: jax.Array       # (Q,) carried incumbents
+        best: jax.Array     # (Q,) stream-coordinate best starts
+        active: jax.Array   # (Q,)
+        lanes: jax.Array    # (Q,)
+
+    def cond(st: St) -> jax.Array:
+        return jnp.any(st.active)
+
+    def body(st: St) -> St:
+        starts = slice_round(order_p, st.r)            # (Q, batch) local
+        lbs_b = slice_round(lb_p, st.r)
+        cand = jax.vmap(
+            lambda s: gather_norm_windows(ctx, s, length, mu, sigma)
+        )(starts)
+        cb = None
+        if use_cb:
+            terms = jax.vmap(_lb_keogh_terms)(cand, u, low)
+            cb = jnp.flip(jnp.cumsum(jnp.flip(terms, -1), -1), -1)
+        lane_live = jnp.logical_and(st.active[:, None], lbs_b < st.ub[:, None])
+        ub_lanes = jnp.where(
+            lane_live,
+            jnp.broadcast_to(st.ub[:, None], (nq, batch)),
+            DEAD_LANE_UB,
+        )
+        d = ea_pruned_dtw_multi_batch(
+            queries_n, cand, ub_lanes, window=window,
+            band_width=band_width, cb=cb, **knobs,
+        )
+        d = jnp.where(jnp.isfinite(lbs_b), d, jnp.inf)  # padding lanes
+        d = jnp.where(st.active[:, None], d, jnp.inf)
+        k = jnp.argmin(d, axis=1)
+        dmin = jnp.take_along_axis(d, k[:, None], axis=1)[:, 0]
+        improved = dmin < st.ub
+        ub_new = jnp.where(improved, dmin, st.ub)
+        starts_k = jnp.take_along_axis(starts, k[:, None], axis=1)[:, 0]
+        best_new = jnp.where(
+            improved, offset + starts_k.astype(st.best.dtype), st.best
+        )
+        r_new = st.r + st.active.astype(st.r.dtype)
+        more = r_new < n_rounds
+        if use_lb:
+            nxt = peek_lb(lb_p, jnp.minimum(r_new, n_rounds - 1))
+            more = jnp.logical_and(more, nxt < ub_new)
+        return St(
+            r=r_new,
+            ub=ub_new,
+            best=best_new,
+            active=jnp.logical_and(st.active, more),
+            lanes=st.lanes + st.active.astype(st.lanes.dtype) * batch,
+        )
+
+    st0 = St(
+        r=jnp.zeros((nq,), jnp.int32),
+        ub=ub0,
+        best=best0,
+        active=active0,
+        lanes=jnp.zeros((nq,), jnp.int32),
+    )
+    st = jax.lax.while_loop(cond, body, st0)
+    return new_tail, IngestResult(
+        ub=st.ub, best=st.best, rounds=st.r, lanes=st.lanes
+    )
+
+
+def ingest_chunk(
+    tail: jax.Array,
+    chunk: jax.Array,
+    queries_n: jax.Array,
+    u: jax.Array,
+    low: jax.Array,
+    ub: jax.Array,
+    best: jax.Array,
+    offset,
+    length: int,
+    window: int,
+    variant: str = "eapruned",
+    batch: int = 64,
+    band_width: int | None = None,
+    chunk_lb: int = 4096,
+    backend: str | None = None,
+    rows_per_step: int = 1,
+    block_k: int = 8,
+    row_block: int = 128,
+) -> tuple[jax.Array, IngestResult]:
+    """Advance Q standing queries over one stream chunk.
+
+    Functional core of ``serve.stream.StreamSearchEngine`` (which owns the
+    state threading and ring buffer — use it unless you are building your
+    own driver). ``backend`` is resolved here, in the un-jitted wrapper, so
+    ``$REPRO_DTW_BACKEND`` is re-read on every ingest. ``tail``/``chunk`` are raw stream samples;
+    ``queries_n``/``u``/``low`` the z-normalized queries and their envelopes
+    (fixed for the stream's lifetime); ``ub``/``best`` the carried per-query
+    incumbents; ``offset`` the stream coordinate of ``tail[0]``. The caller
+    must only invoke this when ``len(tail) + len(chunk) >= length`` (at least
+    one newly-valid window — before that, only the tail needs extending).
+
+    Returns ``(new_tail, IngestResult)``; feed ``new_tail`` and the updated
+    incumbents into the next call.
+    """
+    return _ingest_impl(
+        tail, chunk, queries_n, u, low, ub, best, offset,
+        length=length, window=window, variant=variant, batch=batch,
+        band_width=band_width, chunk_lb=chunk_lb,
+        backend=resolve_backend(backend),
+        rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
+    )
+
+
+def initial_incumbents(
+    nq: int, dtype=jnp.float32, ub_init=None
+) -> tuple[jax.Array, jax.Array]:
+    """Fresh ``(ub, best)`` incumbent vectors for Q standing queries.
+
+    ``ub_init`` optionally seeds the incumbents (scalar or ``(Q,)``) — the
+    cross-stream analogue of ``multi_query_search``'s warm seeds.
+    """
+    if ub_init is None:
+        ub = jnp.full((nq,), BIG, dtype)
+    else:
+        ub = jnp.broadcast_to(jnp.asarray(ub_init, dtype), (nq,))
+    return ub, jnp.full((nq,), -1, jnp.int32)

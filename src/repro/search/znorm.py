@@ -4,6 +4,24 @@ The UCR suite z-normalizes every candidate window of the long reference
 series. Doing that one window at a time is O(N·l); with prefix sums every
 window's mean/std comes from two table lookups, and the normalized window is
 materialized lazily only for the candidates that survive the LB cascade.
+
+Two forms of the stats table:
+
+  * ``window_stats`` — offline: one prefix-sum pass over the whole reference.
+  * ``append_window_stats`` — appendable: given the ``length - 1`` tail of
+    samples already seen and a new chunk, produce the stats of exactly the
+    windows that *become valid* with that chunk (including the windows
+    straddling the tail/chunk boundary) in O(tail + chunk) work. A stream of
+    appends therefore builds the same table as one offline pass over the
+    concatenated series — without ever touching more than the boundary
+    context. ``search/streaming.py`` drives this per ingest.
+
+Sigma handling (flat-segment audit): ``window_stats`` returns the *raw*
+standard deviation — zero for a constant window — because pruning statistics
+want the true value. Every normalization site must clamp with
+``clamp_sigma`` (``max(sigma, EPS)``) before dividing; a constant window then
+normalizes to exactly zero (``win - mu == 0``), so the LB cascade and DTW
+stay finite on flat reference segments instead of producing inf/NaN.
 """
 from __future__ import annotations
 
@@ -19,7 +37,9 @@ EPS = 1e-8
 def window_stats(ref: jax.Array, length: int) -> tuple[jax.Array, jax.Array]:
     """Mean and std of every window ``ref[s : s+length]``.
 
-    Returns ``(mu, sigma)`` of shape ``(N - length + 1,)`` each.
+    Returns ``(mu, sigma)`` of shape ``(N - length + 1,)`` each. ``sigma`` is
+    raw (unclamped): exactly zero on a constant window. Divide only through
+    ``clamp_sigma``.
     """
     n = ref.shape[0]
     p = jnp.concatenate([jnp.zeros((1,), ref.dtype), jnp.cumsum(ref)])
@@ -32,12 +52,46 @@ def window_stats(ref: jax.Array, length: int) -> tuple[jax.Array, jax.Array]:
     return mu, jnp.sqrt(var)
 
 
+def append_window_stats(
+    tail: jax.Array, chunk: jax.Array, length: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stats of the windows that become valid when ``chunk`` is appended.
+
+    ``tail`` holds the last ``min(seen, length - 1)`` samples of the stream
+    so far (empty at stream start). Returns ``(new_tail, mu_new, sigma_new)``
+    where the stats cover window starts ``seen - len(tail)`` …
+    ``seen + len(chunk) - length`` in stream coordinates — i.e. every window
+    ending inside the new chunk, including the ``length - 1`` windows
+    straddling the tail/chunk boundary — and ``new_tail`` is the context to
+    carry into the next append. Cost is O(tail + chunk) regardless of how
+    long the stream already is; the boundary-local prefix sums also avoid the
+    precision loss of differencing a billion-sample running cumsum.
+
+    Zero windows may be valid yet (stream shorter than ``length``): then the
+    stats arrays are empty and ``new_tail`` is the whole stream so far.
+    """
+    ctx = jnp.concatenate([jnp.asarray(tail), jnp.asarray(chunk)])
+    keep = min(ctx.shape[0], length - 1)
+    new_tail = ctx[ctx.shape[0] - keep :]
+    if ctx.shape[0] < length:
+        empty = jnp.zeros((0,), ctx.dtype)
+        return new_tail, empty, empty
+    mu, sigma = window_stats(ctx, length)
+    return new_tail, mu, sigma
+
+
+def clamp_sigma(sigma: jax.Array) -> jax.Array:
+    """The one sanctioned sigma clamp: keeps flat windows finite under
+    normalization (they become all-zero, their true z-normal form limit)."""
+    return jnp.maximum(sigma, EPS)
+
+
 @jax.jit
 def znorm(x: jax.Array) -> jax.Array:
     """Z-normalize along the last axis (whole-series, for queries)."""
     mu = jnp.mean(x, axis=-1, keepdims=True)
     sd = jnp.std(x, axis=-1, keepdims=True)
-    return (x - mu) / jnp.maximum(sd, EPS)
+    return (x - mu) / clamp_sigma(sd)
 
 
 @partial(jax.jit, static_argnames=("length",))
@@ -55,5 +109,5 @@ def gather_norm_windows(
     idx = starts[:, None] + jnp.arange(length)[None, :]
     win = ref[idx]
     m = mu[starts][:, None]
-    s = jnp.maximum(sigma[starts][:, None], EPS)
+    s = clamp_sigma(sigma[starts])[:, None]
     return (win - m) / s

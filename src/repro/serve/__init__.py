@@ -1,4 +1,5 @@
-"""Serving: batched prefill + decode generation loop."""
+"""Serving: batched prefill + decode generation, streaming similarity search."""
 from repro.serve.generate import generate
+from repro.serve.stream import StreamSearchEngine
 
-__all__ = ["generate"]
+__all__ = ["StreamSearchEngine", "generate"]

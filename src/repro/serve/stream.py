@@ -1,0 +1,232 @@
+"""StreamSearchEngine: standing-query similarity search over a live stream.
+
+The serving front-end of ``search/streaming.py``. Construct it with Q
+standing queries, then feed reference chunks as they arrive::
+
+    eng = StreamSearchEngine(queries, length=256, window=25)
+    for chunk in source:
+        best_start, best_dist = eng.ingest(chunk)
+
+Each ``ingest`` is one jitted dispatch that (1) extends the window-stats
+table by exactly the newly-valid windows via the appendable prefix-sum form
+(O(chunk), not O(stream)), (2) runs the LB cascade over those windows only —
+including the ``length - 1`` windows straddling the previous chunk boundary
+— and (3) drives best-first EAPrunedDTW rounds through the per-lane-``ub``
+multi-query batch, **warm-started with each query's incumbent carried over
+from all previous chunks**. That carried upper bound is the paper's
+tightening trick rotated into the time axis: the best match seen since the
+stream began makes every new candidate abandon earlier, so per-chunk work
+*decreases* as the stream ages (until a better match region arrives).
+
+Memory is O(length + Q) regardless of stream length: the engine keeps only
+the ``length - 1`` boundary tail plus per-query incumbent scalars.
+``ring_capacity=W`` adds a bounded monitoring ring over the last W raw
+samples (``recent()``), e.g. to snapshot the neighbourhood of a fresh match;
+eviction is oldest-first and never affects search results.
+
+Exactness: for any chunking of a reference series, the final per-query
+``(best_dist, best_start)`` equals offline ``multi_query_search`` /
+``subsequence_search`` over the concatenated stream (every window is scanned
+exactly once, against a monotone incumbent). The one caveat is an *exact*
+distance tie between windows in different chunks: both drivers keep the
+first strict improvement they encounter, and their scan orders differ, so
+the reported start may be the other cominimizer (the distance is identical).
+Incumbents are monotone non-increasing across ingests —
+``tests/test_streaming.py`` pins both properties on both backends.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lower_bounds import envelope
+from repro.search.multi import MULTI_VARIANTS
+from repro.search.streaming import ingest_chunk, initial_incumbents
+from repro.search.znorm import znorm
+
+
+class _Ring:
+    """Fixed-capacity ring over the last W stream samples, oldest-first."""
+
+    def __init__(self, capacity: int, dtype):
+        self.capacity = int(capacity)
+        self.buf = np.zeros((self.capacity,), dtype)
+        self.count = 0
+        self.pos = 0  # next write slot
+
+    def extend(self, x: np.ndarray) -> None:
+        x = np.asarray(x).reshape(-1)
+        if x.shape[0] >= self.capacity:
+            self.buf[:] = x[-self.capacity:]
+            self.pos = 0
+            self.count = self.capacity
+            return
+        first = min(x.shape[0], self.capacity - self.pos)
+        self.buf[self.pos : self.pos + first] = x[:first]
+        rest = x.shape[0] - first
+        if rest:
+            self.buf[:rest] = x[first:]
+        self.pos = (self.pos + x.shape[0]) % self.capacity
+        self.count = min(self.count + x.shape[0], self.capacity)
+
+    def view(self) -> np.ndarray:
+        if self.count < self.capacity:
+            return self.buf[: self.count].copy()
+        return np.concatenate([self.buf[self.pos :], self.buf[: self.pos]])
+
+
+class StreamSearchEngine:
+    """Incremental nearest-window search for Q standing queries.
+
+    Args:
+      queries: ``(Q, l)`` (or ``(l,)``) raw queries; z-normalized once here.
+      length: window/query length; ``l == length``.
+      window: Sakoe-Chiba warping window in samples.
+      variant: ``"eapruned"`` (LB cascade + cb tightening) or
+        ``"eapruned_nolb"`` (stream-order rounds, no cascade).
+      batch: candidate lanes per query per round — each round dispatches one
+        flattened ``(Q × batch)`` lane set.
+      band_width, rows_per_step, block_k, row_block: DTW batch knobs, as in
+        ``multi_query_search``.
+      chunk_lb: LB-cascade materialization chunk (memory bound, not stream
+        chunking).
+      backend: DTW batch backend; resolved (incl. ``$REPRO_DTW_BACKEND``) on
+        every ``ingest``, like the offline un-jitted wrappers.
+      ub_init: optional per-query incumbent seeds (scalar or ``(Q,)``) — warm
+        starts from a previous stream segment or a served cache.
+      ring_capacity: keep the last W raw samples for ``recent()`` monitoring
+        (bounded memory); ``None`` keeps no sample history at all.
+
+    Each distinct chunk shape compiles once; a fixed chunk size settles into
+    a single reused trace after the stream start-up (the first ingest carries
+    a shorter tail).
+    """
+
+    def __init__(
+        self,
+        queries: jax.Array,
+        length: int,
+        window: int,
+        variant: str = "eapruned",
+        batch: int = 64,
+        band_width: int | None = None,
+        chunk_lb: int = 4096,
+        backend: str | None = None,
+        rows_per_step: int = 1,
+        block_k: int = 8,
+        row_block: int = 128,
+        ub_init: jax.Array | None = None,
+        ring_capacity: int | None = None,
+    ):
+        if variant not in MULTI_VARIANTS:
+            raise ValueError(f"variant must be one of {MULTI_VARIANTS}")
+        if ring_capacity is not None and ring_capacity < 1:
+            raise ValueError("ring_capacity must be >= 1")
+        q = jnp.atleast_2d(jnp.asarray(queries))
+        self.length = int(length)
+        self.window = int(window)
+        self.variant = variant
+        self.batch = int(batch)
+        self.band_width = band_width
+        self.chunk_lb = int(chunk_lb)
+        self.backend = backend
+        self.rows_per_step = int(rows_per_step)
+        self.block_k = int(block_k)
+        self.row_block = int(row_block)
+        self.queries_n = znorm(q[:, : self.length])
+        self.u, self.low = jax.vmap(envelope, in_axes=(0, None))(
+            self.queries_n, self.window
+        )
+        self._dtype = self.queries_n.dtype
+        self._ub, self._best = initial_incumbents(
+            self.queries_n.shape[0], self._dtype, ub_init
+        )
+        self._tail = jnp.zeros((0,), self._dtype)
+        self._n_seen = 0
+        self._rounds = jnp.asarray(0, jnp.int32)
+        self._lanes = jnp.asarray(0, jnp.int32)
+        self._ring = (
+            _Ring(ring_capacity, np.dtype(self._dtype))
+            if ring_capacity is not None
+            else None
+        )
+
+    # -- state ------------------------------------------------------------
+    @property
+    def n_queries(self) -> int:
+        return int(self.queries_n.shape[0])
+
+    @property
+    def n_seen(self) -> int:
+        """Raw samples ingested since the stream began."""
+        return self._n_seen
+
+    @property
+    def n_windows(self) -> int:
+        """Candidate windows scanned so far (== offline window count)."""
+        return max(0, self._n_seen - self.length + 1)
+
+    @property
+    def rounds(self) -> int:
+        """Total batch rounds spent across all ingests (work accounting)."""
+        return int(self._rounds)
+
+    @property
+    def lanes(self) -> int:
+        """Total candidate lanes submitted across all ingests."""
+        return int(self._lanes)
+
+    def best(self) -> tuple[jax.Array, jax.Array]:
+        """Current ``(best_start, best_dist)`` per query, ``(Q,)`` each.
+
+        ``best_start`` is in stream coordinates (-1 while no window has been
+        scanned or an ``ub_init`` seed is still unbeaten); ``best_dist`` is
+        the incumbent DTW distance.
+        """
+        return self._best, self._ub
+
+    def recent(self) -> np.ndarray:
+        """The last ``ring_capacity`` raw samples, oldest first."""
+        if self._ring is None:
+            raise ValueError("engine built without ring_capacity")
+        return self._ring.view()
+
+    # -- ingest -----------------------------------------------------------
+    def ingest(self, chunk: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Feed one chunk of reference samples; returns ``self.best()``.
+
+        Scans every window whose last sample arrives with this chunk. Chunks
+        may have any (nonzero) length; windows straddling chunk boundaries
+        are handled via the carried tail.
+        """
+        chunk = jnp.asarray(chunk, self._dtype).reshape(-1)
+        if chunk.shape[0] == 0:
+            return self.best()
+        if self._ring is not None:
+            self._ring.extend(np.asarray(chunk))
+        tail_len = int(self._tail.shape[0])
+        if tail_len + int(chunk.shape[0]) < self.length:
+            # Not a full window yet: extend the boundary context only.
+            self._tail = jnp.concatenate([self._tail, chunk])
+            self._n_seen += int(chunk.shape[0])
+            return self.best()
+        offset = self._n_seen - tail_len  # stream coordinate of tail[0]
+        self._tail, res = ingest_chunk(
+            self._tail, chunk, self.queries_n, self.u, self.low,
+            self._ub, self._best, offset,
+            length=self.length, window=self.window, variant=self.variant,
+            batch=self.batch, band_width=self.band_width,
+            chunk_lb=self.chunk_lb, backend=self.backend,
+            rows_per_step=self.rows_per_step, block_k=self.block_k,
+            row_block=self.row_block,
+        )
+        self._ub, self._best = res.ub, res.best
+        # Accumulate work counters as device values: reading them eagerly
+        # would sync on every ingest and forbid overlapping the next chunk's
+        # arrival with this dispatch.
+        self._rounds = self._rounds + jnp.max(res.rounds)
+        self._lanes = self._lanes + jnp.sum(res.lanes)
+        self._n_seen += int(chunk.shape[0])
+        return self.best()

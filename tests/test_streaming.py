@@ -1,0 +1,290 @@
+"""Streaming similarity search: parity, boundaries, ring, incumbents.
+
+The contracts under test:
+
+  * ``StreamSearchEngine`` over *any* chunking of a reference series ends
+    with the same per-query ``(best_start, best_dist)`` as offline
+    ``multi_query_search`` / ``subsequence_search`` on the concatenated
+    stream, on both the ``jax`` and ``pallas_interpret`` backends.
+  * windows straddling a chunk boundary (the ``length - 1`` carried-tail
+    windows) are scanned in the ingest where their last sample arrives — a
+    match planted across a boundary is found.
+  * ``append_window_stats`` builds the same stats table as one offline
+    ``window_stats`` pass, and stays finite on constant (sigma == 0) chunks.
+  * per-query incumbents are monotone non-increasing across ingests.
+  * the monitoring ring holds exactly the last W samples, oldest first,
+    through partial fill, wrap-around, and bigger-than-capacity chunks.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.search import append_window_stats, multi_query_search, window_stats
+from repro.search import gather_norm_windows, subsequence_search
+from repro.serve import StreamSearchEngine
+
+BACKENDS = ("jax", "pallas_interpret")
+
+
+def _mk_stream(seed=3, n_ref=900, nq=4, length=96):
+    rng = np.random.default_rng(seed)
+    ref = jnp.asarray(np.cumsum(rng.normal(size=n_ref)))
+    queries = jnp.asarray(np.cumsum(rng.normal(size=(nq, length)), axis=1))
+    return ref, queries
+
+
+def _feed(eng, ref, sizes):
+    i = 0
+    for c in sizes:
+        eng.ingest(ref[i : i + c])
+        i += c
+    assert i == ref.shape[0], "chunking must cover the stream exactly"
+    return eng
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("sizes", [(300, 300, 300), (96, 1, 500, 303), (900,)])
+def test_stream_matches_offline_multi(backend, sizes):
+    """Any chunking ends exactly where offline multi-query search ends."""
+    ref, queries = _mk_stream()
+    length, w = queries.shape[1], 9
+    off = multi_query_search(
+        ref, queries, length=length, window=w, batch=64, backend=backend
+    )
+    eng = StreamSearchEngine(
+        queries, length=length, window=w, batch=64, backend=backend
+    )
+    _feed(eng, ref, sizes)
+    bs, bd = eng.best()
+    assert np.array_equal(np.asarray(bs), np.asarray(off.best_start)), sizes
+    np.testing.assert_allclose(
+        np.asarray(bd), np.asarray(off.best_dist), rtol=2e-5
+    )
+    assert eng.n_windows == int(ref.shape[0]) - length + 1
+
+
+def test_stream_matches_offline_single_query():
+    """Q == 1 engine agrees with the scalar offline driver."""
+    ref, queries = _mk_stream(seed=11, nq=1)
+    length, w = queries.shape[1], 9
+    one = subsequence_search(
+        ref, queries[0], length=length, window=w, batch=64, backend="jax"
+    )
+    eng = StreamSearchEngine(
+        queries[0], length=length, window=w, batch=64, backend="jax"
+    )
+    _feed(eng, ref, (450, 450))
+    bs, bd = eng.best()
+    assert int(bs[0]) == int(one.best_start)
+    np.testing.assert_allclose(float(bd[0]), float(one.best_dist), rtol=2e-5)
+
+
+def test_stream_nolb_variant_parity():
+    """The no-cascade variant streams to the same answer too."""
+    ref, queries = _mk_stream(seed=19, nq=2)
+    length, w = queries.shape[1], 9
+    off = multi_query_search(
+        ref, queries, length=length, window=w, batch=64, backend="jax",
+        variant="eapruned_nolb",
+    )
+    eng = StreamSearchEngine(
+        queries, length=length, window=w, batch=64, backend="jax",
+        variant="eapruned_nolb",
+    )
+    _feed(eng, ref, (128,) * 7 + (4,))
+    bs, bd = eng.best()
+    assert np.array_equal(np.asarray(bs), np.asarray(off.best_start))
+    np.testing.assert_allclose(
+        np.asarray(bd), np.asarray(off.best_dist), rtol=2e-5
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_boundary_straddling_match_found(backend):
+    """A near-copy of the query planted across a chunk boundary is found in
+    the ingest where its last sample arrives — chunks smaller than the
+    window length force *every* window to straddle appends."""
+    rng = np.random.default_rng(7)
+    length, w = 96, 9
+    q_raw = np.cumsum(rng.normal(size=length))
+    ref_np = np.cumsum(rng.normal(size=700))
+    plant = 330  # straddles the 350-boundary of 35-sample chunks
+    ref_np[plant : plant + length] = 3.0 * q_raw + 11.0  # z-norm identical
+    ref = jnp.asarray(ref_np)
+    queries = jnp.asarray(q_raw)[None, :]
+
+    eng = StreamSearchEngine(
+        queries, length=length, window=w, batch=32, backend=backend
+    )
+    found_at = None
+    for i in range(0, 700, 35):
+        bs, _ = eng.ingest(ref[i : i + 35])
+        if found_at is None and int(bs[0]) == plant:
+            found_at = i + 35
+    assert found_at is not None, "planted straddling match never found"
+    # found in the first ingest whose samples complete the planted window
+    assert found_at == plant + length + (-(plant + length) % 35)
+    off = multi_query_search(
+        ref, queries, length=length, window=w, batch=32, backend=backend
+    )
+    assert int(eng.best()[0][0]) == int(off.best_start[0]) == plant
+
+
+def test_append_window_stats_matches_offline():
+    """The appendable stats form rebuilds the offline table exactly, for a
+    chunking that exercises empty-ingest and boundary-straddle cases."""
+    rng = np.random.default_rng(23)
+    ref = jnp.asarray(rng.normal(size=400))
+    length = 64
+    mu_off, sigma_off = window_stats(ref, length)
+    tail = jnp.zeros((0,), ref.dtype)
+    mus, sigmas = [], []
+    i = 0
+    for c in (20, 30, 64, 1, 200, 85):
+        tail, mu, sigma = append_window_stats(tail, ref[i : i + c], length)
+        mus.append(np.asarray(mu))
+        sigmas.append(np.asarray(sigma))
+        i += c
+    mu_s = np.concatenate(mus)
+    sigma_s = np.concatenate(sigmas)
+    assert mu_s.shape == np.asarray(mu_off).shape
+    np.testing.assert_allclose(mu_s, np.asarray(mu_off), rtol=1e-6, atol=1e-9)
+    np.testing.assert_allclose(
+        sigma_s, np.asarray(sigma_off), rtol=1e-6, atol=1e-9
+    )
+    assert int(tail.shape[0]) == length - 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_constant_chunk_mid_stream(backend):
+    """Regression (sigma == 0 audit): a flat chunk mid-stream produces no
+    inf/NaN anywhere and parity with offline still holds."""
+    rng = np.random.default_rng(5)
+    a = np.cumsum(rng.normal(size=300))
+    flat = np.full(150, a[-1])  # constant segment: sigma == 0 windows
+    c = np.cumsum(rng.normal(size=250)) + a[-1]
+    ref = jnp.asarray(np.concatenate([a, flat, c]), jnp.float32)
+    queries = jnp.asarray(
+        np.cumsum(rng.normal(size=(3, 80)), axis=1), jnp.float32
+    )
+    off = multi_query_search(
+        ref, queries, length=80, window=8, batch=32, backend=backend
+    )
+    eng = StreamSearchEngine(
+        queries, length=80, window=8, batch=32, backend=backend
+    )
+    ub_prev = None
+    for i in range(0, 700, 175):
+        _, bd = eng.ingest(ref[i : i + 175])
+        assert np.all(np.isfinite(np.asarray(bd)))
+        if ub_prev is not None:  # incumbent monotonicity through the flat zone
+            assert np.all(np.asarray(bd) <= ub_prev)
+        ub_prev = np.asarray(bd)
+    bs, bd = eng.best()
+    assert np.array_equal(np.asarray(bs), np.asarray(off.best_start))
+    np.testing.assert_allclose(
+        np.asarray(bd), np.asarray(off.best_dist), rtol=2e-4
+    )
+
+
+def test_constant_window_normalizes_finite():
+    """A sigma == 0 window gathers to all-zeros, never inf/NaN — the clamp
+    contract between raw ``window_stats`` and every normalization site."""
+    ref = jnp.concatenate([jnp.arange(32.0), jnp.full((32,), 7.0)])
+    mu, sigma = window_stats(ref, 16)
+    assert float(jnp.min(sigma)) == 0.0  # raw, unclamped by contract
+    win = gather_norm_windows(
+        ref, jnp.arange(ref.shape[0] - 15), 16, mu, sigma
+    )
+    assert bool(jnp.all(jnp.isfinite(win)))
+    np.testing.assert_allclose(np.asarray(win[-1]), np.zeros(16))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_incumbent_monotonicity(backend):
+    """Carried incumbents never loosen across ingests."""
+    ref, queries = _mk_stream(seed=29)
+    length, w = queries.shape[1], 9
+    eng = StreamSearchEngine(
+        queries, length=length, window=w, batch=32, backend=backend
+    )
+    prev = None
+    for i in range(0, 900, 150):
+        _, bd = eng.ingest(ref[i : i + 150])
+        cur = np.asarray(bd)
+        if prev is not None:
+            assert np.all(cur <= prev), (i, cur, prev)
+        prev = cur
+
+
+def test_ub_init_seeds_carry_into_stream():
+    """A hopeless per-query seed is never beaten (best == -1); a loose seed
+    leaves its query's offline answer intact."""
+    ref, queries = _mk_stream(seed=31)
+    length, w = queries.shape[1], 9
+    off = multi_query_search(
+        ref, queries, length=length, window=w, batch=64, backend="jax"
+    )
+    seeds = np.full((queries.shape[0],), 1e30, np.float64)
+    seeds[1] = 1e-6
+    eng = StreamSearchEngine(
+        queries, length=length, window=w, batch=64, backend="jax",
+        ub_init=jnp.asarray(seeds),
+    )
+    _feed(eng, ref, (450, 450))
+    bs, bd = eng.best()
+    assert int(bs[1]) == -1
+    assert float(bd[1]) == pytest.approx(1e-6)
+    for q in (0, 2, 3):
+        assert int(bs[q]) == int(off.best_start[q])
+
+
+def test_ring_eviction():
+    """The monitoring ring always shows the last W samples, oldest first."""
+    ref = jnp.asarray(np.arange(1000, dtype=np.float64))
+    eng = StreamSearchEngine(
+        jnp.asarray(np.random.default_rng(0).normal(size=64)),
+        length=64, window=6, batch=32, backend="jax", ring_capacity=100,
+    )
+    # partial fill
+    eng.ingest(ref[:40])
+    np.testing.assert_array_equal(eng.recent(), np.arange(40.0))
+    # wrap-around across several small chunks
+    for i in range(40, 520, 60):
+        eng.ingest(ref[i : i + 60])
+    np.testing.assert_array_equal(eng.recent(), np.arange(420.0, 520.0))
+    # a chunk bigger than capacity overwrites the whole ring
+    eng.ingest(ref[520:820])
+    np.testing.assert_array_equal(eng.recent(), np.arange(720.0, 820.0))
+    assert eng.recent().shape == (100,)
+    assert eng.n_seen == 820
+
+
+def test_no_ring_raises():
+    eng = StreamSearchEngine(
+        jnp.asarray(np.random.default_rng(0).normal(size=32)),
+        length=32, window=3, batch=16, backend="jax",
+    )
+    with pytest.raises(ValueError):
+        eng.recent()
+
+
+def test_small_chunks_before_first_window():
+    """Chunks shorter than the query length only extend the tail until a
+    window completes; best stays empty meanwhile."""
+    ref, queries = _mk_stream(seed=37, n_ref=300, nq=2)
+    length, w = queries.shape[1], 9
+    eng = StreamSearchEngine(
+        queries, length=length, window=w, batch=32, backend="jax"
+    )
+    for i in range(0, 90, 30):
+        bs, _ = eng.ingest(ref[i : i + 30])
+        assert np.all(np.asarray(bs) == -1)
+        assert eng.n_windows == 0
+    _feed(eng, ref[90:], (110, 100))
+    off = multi_query_search(
+        ref, queries, length=length, window=w, batch=32, backend="jax"
+    )
+    assert np.array_equal(np.asarray(eng.best()[0]), np.asarray(off.best_start))
