@@ -1,4 +1,4 @@
-.PHONY: check test bench
+.PHONY: check test bench bench-diff
 
 # Tier-1 tests + --quick benchmark smoke (writes BENCH_dtw.json).
 check:
@@ -9,3 +9,8 @@ test:
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run --json
+
+# Rerun the quick bench and diff per-suite ratios against the committed
+# BENCH_dtw.json; exits nonzero on >20% regressions in SPEEDUP rows.
+bench-diff:
+	PYTHONPATH=src python scripts/bench_diff.py

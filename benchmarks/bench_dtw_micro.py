@@ -4,7 +4,8 @@ Table analogue of the paper's per-computation comparison: for matched
 (length, window, ub-tightness) settings, rows/cells issued by full DTW vs
 PrunedDTW vs EAPrunedDTW (banded), plus wall time of the batched JAX forms.
 ``run_backends`` additionally compares the two dispatchable batch backends
-(banded-vmap JAX vs the Pallas kernel in interpret mode) per batch shape —
+(banded-vmap JAX vs the Pallas kernel in interpret mode) across a sweep of
+batch shapes (K x l), ``block_k`` grid tilings, and multi-query ``Q`` —
 interpret-mode wall time validates the dispatch layer, not TPU performance.
 CSV: name,us_per_call,derived (derived = rows or cells saved).
 """
@@ -21,6 +22,7 @@ from repro.core import (
     dtw_batch,
     ea_pruned_dtw_banded,
     ea_pruned_dtw_batch,
+    ea_pruned_dtw_multi_batch,
     pruned_dtw,
 )
 from repro.search.znorm import znorm
@@ -76,37 +78,65 @@ def run_backends(
     shapes=((64, 128), (256, 128), (64, 256)),
     window_ratio: float = 0.1,
     seed: int = 0,
+    block_ks=(4, 8, 16),
+    qs=(1, 4),
 ):
-    """dtw/backend micro-bench: vmap-JAX vs Pallas-interpret per batch shape."""
+    """dtw/backend micro-bench: vmap-JAX vs Pallas-interpret per batch shape.
+
+    Sweeps the kernel-shape knobs that matter for the dispatch layer:
+    candidate count ``K`` x length ``l`` x ``block_k`` (lanes per grid
+    block — the early-exit granularity) x ``Q`` (queries flattened into one
+    multi-launch). ``block_k`` only shapes the Pallas grid, so the jax row
+    is emitted once per (K, l, Q) and repeated ratios track the kernel's
+    shape sweet spot in BENCH_dtw.json over time.
+    """
     rows = []
     rng = np.random.default_rng(seed)
     for k, length in shapes:
         w = max(int(length * window_ratio), 1)
-        q = znorm(jnp.asarray(np.cumsum(rng.normal(size=length)), jnp.float32))
-        cands = znorm(
-            jnp.asarray(np.cumsum(rng.normal(size=(k, length)), axis=1), jnp.float32)
-        )
-        d_exact = dtw_batch(jnp.broadcast_to(q, (k, length)), cands, window=w)
-        ub = float(np.quantile(np.asarray(d_exact), 0.5))
-        t_jax, d_jax = _bench(
-            lambda u=ub: ea_pruned_dtw_batch(q, cands, u, window=w, backend="jax")
-        )
-        t_pal, d_pal = _bench(
-            lambda u=ub: ea_pruned_dtw_batch(
-                q, cands, u, window=w, backend="pallas_interpret"
+        for nq in qs:
+            queries = znorm(
+                jnp.asarray(
+                    np.cumsum(rng.normal(size=(nq, length)), axis=1),
+                    jnp.float32,
+                )
             )
-        )
-        agree = bool(
-            np.array_equal(
-                np.isfinite(np.asarray(d_jax)), np.isfinite(np.asarray(d_pal))
+            cands = znorm(
+                jnp.asarray(
+                    np.cumsum(rng.normal(size=(nq, k, length)), axis=2),
+                    jnp.float32,
+                )
             )
-        )
-        rows.append(
-            (f"dtw/backend/k{k}/l{length}/jax", t_jax * 1e6, f"agree={agree}")
-        )
-        rows.append(
-            (f"dtw/backend/k{k}/l{length}/pallas_interpret", t_pal * 1e6, "")
-        )
+            d_exact = jax.vmap(
+                lambda qn, cs: dtw_batch(
+                    jnp.broadcast_to(qn, (k, length)), cs, window=w
+                )
+            )(queries, cands)
+            ub = jnp.quantile(d_exact, 0.5, axis=1, keepdims=True)  # (Q, 1)
+            t_jax, d_jax = _bench(
+                lambda: ea_pruned_dtw_multi_batch(
+                    queries, cands, ub, window=w, backend="jax"
+                )
+            )
+            base = f"dtw/backend/k{k}/l{length}/q{nq}"
+            rows.append((f"{base}/jax", t_jax * 1e6, ""))
+            for bk in block_ks:
+                t_pal, d_pal = _bench(
+                    lambda bk=bk: ea_pruned_dtw_multi_batch(
+                        queries, cands, ub, window=w,
+                        backend="pallas_interpret", block_k=bk,
+                    )
+                )
+                agree = bool(
+                    np.array_equal(
+                        np.isfinite(np.asarray(d_jax)),
+                        np.isfinite(np.asarray(d_pal)),
+                    )
+                )
+                rows.append(
+                    (f"{base}/bk{bk}/pallas_interpret", t_pal * 1e6,
+                     f"agree={agree}")
+                )
     return rows
 
 

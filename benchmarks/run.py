@@ -5,8 +5,11 @@ Prints ``name,us_per_call,derived`` CSV:
                      suite/SPEEDUP/* rows carry the headline ratios
   * search/multiq/* — one multi_query_search call vs Q sequential searches
   * search/stream/* — streaming engine ingest vs full recompute per chunk
+  * search/persistent/* — one-launch persistent sweep vs host round driver
+                     (both backends; dispatch counts in the speedup rows)
   * dtw/*          — per-computation EA/Pruned/full work + time comparison
-  * dtw/backend/*  — batch-backend dispatch comparison (vmap vs Pallas-interpret)
+  * dtw/backend/*  — batch-backend dispatch comparison (vmap vs
+                     Pallas-interpret) across K x l x block_k x Q shapes
   * kernel/*       — Pallas kernel harness checks (interpret mode)
   * roofline/*     — dry-run-derived roofline terms per (arch x shape)
 
@@ -55,6 +58,7 @@ def main() -> None:
         bench_dtw_micro,
         bench_kernels,
         bench_multiq,
+        bench_persistent,
         bench_stream,
         bench_suites,
     )
@@ -65,7 +69,8 @@ def main() -> None:
     # keeps cross-PR comparisons scoped to like-for-like artifacts
     artifact = {
         "meta": {"quick": bool(args.quick), "backend": jax.default_backend()},
-        "suites": [], "multiq": [], "stream": [], "dtw": [], "roofline": [],
+        "suites": [], "multiq": [], "stream": [], "persistent": [],
+        "dtw": [], "roofline": [],
     }
 
     print("name,us_per_call,derived")
@@ -94,9 +99,22 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}", flush=True)
         artifact["stream"].append(_suite_record(name, us, derived))
 
+    if args.quick:
+        # more pairs than the other quick suites: the two arms are within
+        # ~15% of each other on CPU, so the median needs the extra samples
+        # to sit above the box's timing noise
+        ps_rows = bench_persistent.run(ref_len=4_000, pairs=9)
+    else:
+        ps_rows = bench_persistent.run()
+    for name, us, derived in ps_rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+        artifact["persistent"].append(_suite_record(name, us, derived))
+
     micro = bench_dtw_micro.run(length=128, k=128, window_ratio=0.1)
     micro += bench_dtw_micro.run_backends(
-        shapes=((64, 128),) if args.quick else ((64, 128), (256, 128), (64, 256))
+        shapes=((64, 128),) if args.quick else ((64, 128), (256, 128), (64, 256)),
+        block_ks=(8, 16) if args.quick else (4, 8, 16),
+        qs=(1, 4),
     )
     for name, us, derived in micro:
         print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,139 @@
+"""Compare a fresh quick benchmark run against the committed BENCH_dtw.json.
+
+Perf PRs carry their own evidence: ``make bench-diff`` reruns the quick
+benchmark, prints per-row ratios against the committed artifact, and exits
+nonzero when any SPEEDUP row (a row whose derived fields carry a
+``speedup=`` value — the headline ratios of every suite) regresses by more
+than the threshold (default 20%). Raw ``us_per_call`` rows are reported for
+context but never gate: absolute wall time on a shared box drifts; the
+paired ratios are the stable signal.
+
+Usage:
+    python scripts/bench_diff.py [--baseline BENCH_dtw.json]
+        [--current PATH]    # skip the rerun, compare an existing artifact
+        [--threshold 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SECTIONS = ("suites", "multiq", "stream", "persistent", "dtw")
+
+
+def _index(artifact: dict) -> dict[str, dict]:
+    rows: dict[str, dict] = {}
+    for sec in SECTIONS:
+        for rec in artifact.get(sec, []):
+            rows[rec["name"]] = rec
+    return rows
+
+
+def _run_quick_bench(path: str) -> None:
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick", "--skip-roofline",
+         "--json", path],
+        check=True, cwd=root, env=env,
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_dtw.json")
+    ap.add_argument(
+        "--current", default=None,
+        help="existing artifact to compare (default: rerun the quick bench)",
+    )
+    ap.add_argument(
+        "--threshold", type=float, default=0.2,
+        help="max tolerated fractional SPEEDUP regression (default 0.2)",
+    )
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    tmp_path = None
+    try:
+        if args.current is None:
+            tmp = tempfile.NamedTemporaryFile(
+                suffix=".json", prefix="bench_diff_", delete=False
+            )
+            tmp.close()
+            tmp_path = tmp.name
+            _run_quick_bench(tmp_path)
+            current_path = tmp_path
+        else:
+            current_path = args.current
+        with open(current_path) as f:
+            cur = json.load(f)
+    finally:
+        if tmp_path is not None and os.path.exists(tmp_path):
+            os.unlink(tmp_path)
+
+    if base.get("meta", {}).get("quick") != cur.get("meta", {}).get("quick"):
+        print(
+            f"WARNING: scale mismatch — baseline quick="
+            f"{base.get('meta', {}).get('quick')} vs current quick="
+            f"{cur.get('meta', {}).get('quick')}; ratios are not"
+            " like-for-like", file=sys.stderr,
+        )
+
+    base_rows = _index(base)
+    cur_rows = _index(cur)
+    failures = []
+    print(f"{'row':60s} {'base':>10s} {'current':>10s} {'ratio':>8s}  gate")
+    for name in sorted(set(base_rows) | set(cur_rows)):
+        b, c = base_rows.get(name), cur_rows.get(name)
+        if b is None or c is None:
+            side = "baseline" if c is None else "current"
+            if c is None and "speedup" in b:
+                # a vanished SPEEDUP row is the worst regression of all — a
+                # crashed or renamed suite must not slip past the gate
+                print(
+                    f"{name:60s} {float(b['speedup']):10.2f} {'—':>10s}"
+                    f" {'—':>8s}  MISSING SPEEDUP ROW"
+                )
+                failures.append((name, float(b["speedup"]), float("nan")))
+            else:
+                print(
+                    f"{name:60s} {'—':>10s} {'—':>10s} {'—':>8s}"
+                    f"  only in {side}"
+                )
+            continue
+        gated = "speedup" in b and "speedup" in c
+        if gated:
+            bv, cv = float(b["speedup"]), float(c["speedup"])
+            ratio = cv / bv if bv > 0 else float("inf")
+            ok = cv >= bv * (1.0 - args.threshold)
+            mark = "OK" if ok else f"REGRESSION >{args.threshold:.0%}"
+            if not ok:
+                failures.append((name, bv, cv))
+        else:
+            bv, cv = float(b["us_per_call"]), float(c["us_per_call"])
+            ratio = cv / bv if bv > 0 else float("inf")
+            mark = "info"
+        print(f"{name:60s} {bv:10.2f} {cv:10.2f} {ratio:8.3f}  {mark}")
+
+    if failures:
+        print(
+            f"\nFAIL: {len(failures)} SPEEDUP row(s) regressed by more than "
+            f"{args.threshold:.0%} vs {args.baseline}:", file=sys.stderr,
+        )
+        for name, bv, cv in failures:
+            print(f"  {name}: {bv:.4f} -> {cv:.4f}", file=sys.stderr)
+        return 1
+    print(f"\nOK: no SPEEDUP row regressed by more than {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,7 +15,8 @@ echo "== kernel program on CPU (pallas_interpret) =="
 # interpret mode so the exact kernel program is exercised in the local gate,
 # not just on TPU.
 REPRO_DTW_BACKEND=pallas_interpret python -m pytest -x -q \
-    tests/test_backend.py tests/test_multi_query.py tests/test_streaming.py
+    tests/test_backend.py tests/test_multi_query.py tests/test_streaming.py \
+    tests/test_persistent.py
 
 echo "== benchmark smoke (--quick) =="
 python -m benchmarks.run --quick --skip-roofline --json BENCH_dtw.json

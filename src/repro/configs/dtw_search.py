@@ -22,6 +22,15 @@ rules):
                       blocks are skipped.
   ``row_block``     — Pallas backend: DP rows per sequential grid step; the
                       early-exit check runs once per row block.
+  ``rounds``        — search round driver: ``"host"`` loops best-first
+                      batches around the batch primitive (one dispatch and
+                      one incumbent update per round); ``"persistent"``
+                      collapses the whole sweep into a single launch with
+                      the incumbent carried across candidate blocks on
+                      device (SMEM on the Pallas backend) — O(1) dispatches,
+                      block-granular ``ub`` tightening, at the cost of
+                      gathering the full window matrix up front (see
+                      ``search.subsequence`` for the full trade-off).
 
 Multi-query serving knobs (``search.multi.multi_query_search``):
 
@@ -37,8 +46,11 @@ Streaming knobs (``serve.stream.StreamSearchEngine``):
 
   ``stream_chunk``  — reference samples per ingest; each ingest is one
                       jitted dispatch over the newly-valid windows, so this
-                      is the latency/amortization trade (a fixed size also
-                      settles the engine into a single reused trace).
+                      is the latency/amortization trade. Passed as the
+                      engine's fixed ingest shape, it also pins ONE compiled
+                      trace for the whole stream: ragged arrivals are padded
+                      (and bigger ones split) to this static shape, so not
+                      even the short final chunk retraces.
   ``ring_capacity`` — monitoring ring over the last W raw samples
                       (``None`` = keep no sample history; the search itself
                       only ever needs the ``length - 1`` boundary tail).
@@ -59,6 +71,7 @@ class SearchConfig:
     rows_per_step: int = 1           # JAX backend loop-unroll knob
     block_k: int = 8                 # Pallas candidate lanes per block
     row_block: int = 128             # Pallas rows per sequential grid step
+    rounds: str = "host"             # round driver: "host" | "persistent"
     n_queries: int = 8               # multi-query workload size (search.multi)
     warm_start: int = 0              # multi-query incumbent-seeding prepass
     stream_chunk: int = 8192         # samples per streaming ingest (serve.stream)

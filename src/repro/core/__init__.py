@@ -9,6 +9,9 @@ Public API:
                                   scalar or per-lane ub
   ea_pruned_dtw_multi_batch     — Q queries' rounds flattened to one
                                   (Q x K)-lane dispatch, per-lane ub vector
+  ea_pruned_dtw_persistent      — the whole best-first sweep in ONE dispatch
+                                  (incumbent carried across candidate blocks
+                                  on device; backend-dispatched)
   resolve_backend, BACKENDS     — Pallas-vs-JAX backend selection
   pruned_dtw                    — PrunedDTW baseline (row-min abandon)
   envelope, lb_keogh, lb_kim_fl — lower bounds
@@ -17,6 +20,7 @@ from repro.core.backend import BACKENDS, resolve_backend
 from repro.core.batch import (
     ea_pruned_dtw_batch,
     ea_pruned_dtw_multi_batch,
+    ea_pruned_dtw_persistent,
     ea_search_round,
 )
 from repro.core.common import BIG
@@ -43,6 +47,7 @@ __all__ = [
     "ea_pruned_dtw_banded",
     "ea_pruned_dtw_batch",
     "ea_pruned_dtw_multi_batch",
+    "ea_pruned_dtw_persistent",
     "ea_search_round",
     "envelope",
     "lb_keogh",

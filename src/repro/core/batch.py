@@ -46,13 +46,29 @@ search fast rounds pay no bookkeeping.
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.backend import resolve_backend
+from repro.core.common import DEAD_LANE_UB, pad_lanes_to_blocks
 from repro.core.ea_pruned_dtw import EAInfo, ea_pruned_dtw_banded
-from repro.kernels.ops import dtw_ea, dtw_ea_multi
+from repro.core.lower_bounds import cascade_keogh_cumulative
+
+
+def _kernel_ops():
+    """Deferred ``repro.kernels.ops`` import, resolved at dispatch time.
+
+    ``repro.kernels`` imports ``repro.core.common``, which triggers this
+    package's ``__init__`` — a module-level import here would close a
+    ``kernels → core → kernels`` cycle and crash any kernels-first entry
+    point (``import repro.kernels`` before ``repro.core``). Python caches
+    the module after the first call, so the per-dispatch cost is a dict hit.
+    """
+    from repro.kernels import ops
+
+    return ops
 
 
 @partial(
@@ -177,7 +193,7 @@ def ea_pruned_dtw_batch(
         )
         return out
     interpret = True if resolved == "pallas_interpret" else None
-    out = dtw_ea(
+    out = _kernel_ops().dtw_ea(
         query, candidates, ub, window, cb=cb, band_width=band_width,
         block_k=block_k, row_block=row_block, interpret=interpret,
         with_info=with_info,
@@ -229,7 +245,7 @@ def ea_pruned_dtw_multi_batch(
             with_info,
         )
     interpret = True if resolved == "pallas_interpret" else None
-    out = dtw_ea_multi(
+    out = _kernel_ops().dtw_ea_multi(
         queries, candidates, ub, window, cb=cb, band_width=band_width,
         block_k=block_k, row_block=row_block, interpret=interpret,
         with_info=with_info,
@@ -238,6 +254,181 @@ def ea_pruned_dtw_multi_batch(
         d, rows, cells = out
         return d, EAInfo(rows=rows, cells=cells)
     return out
+
+
+def block_sweep(cand, lb, starts, ub0, block_k, block_fn):
+    """Best-first sweep over ``block_k``-lane candidate blocks, carried ub.
+
+    The host-side equivalent of the persistent kernel's sequential candidate
+    grid dimension (DESIGN.md §2.5), shared by every driver that needs the
+    block-granular loop: carried incumbent as loop state, the on-device
+    cascade stop as the loop condition. Because lower bounds arrive sorted
+    and the incumbent is non-increasing, the first gated block implies every
+    later block is gated too, so exiting there visits exactly the blocks
+    the kernel runs (a gated block on the kernel side is a no-op, here it
+    is the loop exit). Incumbent updates are strict-improvement with
+    first-lane tie-breaking — the one copy of that rule on the host side.
+
+    Args:
+      cand: ``(K_pad, m)`` candidate windows, ascending-``lb`` order,
+        ``K_pad`` a multiple of ``block_k``.
+      lb: ``(K_pad,)`` sorted lower bounds (``+inf`` padding lanes).
+      starts: ``(K_pad,)`` global start per lane.
+      ub0: scalar initial incumbent.
+      block_fn: ``(cand_block, lb_block, ub) -> (block_k,)`` distances for
+        one block (``+inf`` = abandoned; padding lanes are masked here).
+
+    Returns ``(ub, best, blocks)`` scalars.
+    """
+    k_pad, m = cand.shape
+    n_blocks = k_pad // block_k
+
+    class St(NamedTuple):
+        b: jax.Array     # next block index
+        ub: jax.Array    # carried incumbent
+        best: jax.Array  # carried best start
+
+    def cond(st: St) -> jax.Array:
+        head = jax.lax.dynamic_slice(
+            lb, (jnp.minimum(st.b, n_blocks - 1) * block_k,), (1,)
+        )[0]
+        return jnp.logical_and(st.b < n_blocks, head < st.ub)
+
+    def body(st: St) -> St:
+        o = st.b * block_k
+        c = jax.lax.dynamic_slice(cand, (o, jnp.zeros_like(o)), (block_k, m))
+        lbb = jax.lax.dynamic_slice(lb, (o,), (block_k,))
+        ss = jax.lax.dynamic_slice(starts, (o,), (block_k,))
+        d = block_fn(c, lbb, st.ub)
+        d = jnp.where(jnp.isfinite(lbb), d, jnp.inf)  # padding lanes
+        j = jnp.argmin(d)
+        dmin = d[j]
+        improved = dmin < st.ub  # strict: ties keep the incumbent
+        return St(
+            b=st.b + 1,
+            ub=jnp.where(improved, dmin, st.ub),
+            best=jnp.where(improved, ss[j], st.best),
+        )
+
+    st0 = St(
+        b=jnp.asarray(0, jnp.int32),
+        ub=jnp.asarray(ub0),
+        best=jnp.asarray(-1, starts.dtype),
+    )
+    st = jax.lax.while_loop(cond, body, st0)
+    return st.ub, st.best, st.b
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "window", "band_width", "rows_per_step", "block_k", "use_cb"
+    ),
+)
+def _persistent_jax(
+    queries, candidates, lb, starts, ub_init, u, low, window, band_width,
+    rows_per_step, block_k, use_cb,
+):
+    """JAX-backend persistent sweep: ``block_sweep`` per query.
+
+    Per-lane arithmetic is ``_batch_jax`` — identical to the host round
+    driver's jax backend, so surviving distances are bit-equal.
+    """
+
+    def one(q, cand, lbq, sq, ub0, uq, lowq):
+        def block_fn(c, lbb, ub):
+            cb = None
+            if use_cb:
+                cb = cascade_keogh_cumulative(c, uq, lowq)
+            # Lane gating: a lane whose own bound reaches the incumbent is
+            # submitted dead (same sentinel the kernel writes).
+            ubl = jnp.where(lbb < ub, ub, DEAD_LANE_UB)
+            return _batch_jax(
+                q, c, ubl, window, band_width, cb, rows_per_step, False
+            )
+
+        return block_sweep(
+            cand, lbq, sq, jnp.asarray(ub0, queries.dtype), block_k, block_fn
+        )
+
+    ops = (queries, candidates, lb, starts, ub_init, u, low)
+    if jax.default_backend() == "cpu":
+        # Per-query trip counts (see _multi_jax on why lax.map here).
+        return jax.lax.map(lambda t: one(*t), ops)
+    return jax.vmap(one)(*ops)
+
+
+def ea_pruned_dtw_persistent(
+    queries: jax.Array,
+    candidates: jax.Array,
+    lb: jax.Array,
+    starts: jax.Array,
+    ub_init: jax.Array,
+    window: int,
+    band_width: int | None = None,
+    envelopes: tuple[jax.Array, jax.Array] | None = None,
+    rows_per_step: int = 1,
+    backend: str | None = None,
+    block_k: int = 8,
+    row_block: int = 128,
+):
+    """Persistent best-first EAPrunedDTW: the whole sweep in one dispatch.
+
+    The round primitives (``ea_pruned_dtw_batch`` / ``_multi_batch``) leave
+    incumbent tightening to their caller — one argmin + ``ub`` update per
+    dispatched round. This primitive internalizes the loop: candidates for
+    the *entire* best-first order come in at once, and the incumbent is
+    carried across ``block_k``-lane candidate blocks inside a single
+    dispatch (the Pallas kernel's sequential grid dimension with ``ub`` in
+    SMEM, or one jitted while_loop on the jax backend). Tightening happens
+    every ``block_k`` lanes instead of every ``batch`` lanes, and blocks
+    whose lower bounds cannot beat the carried incumbent never run.
+
+    Args:
+      queries: ``(Q, m)`` z-normalized queries.
+      candidates: ``(Q, K, m)`` windows in ascending-``lb`` order per query.
+      lb: ``(Q, K)`` sorted lower bounds; ``+inf`` marks padding lanes. Pass
+        zeros (with ``+inf`` padding) for the no-cascade variant — gating
+        then never skips a live block, and the sweep visits all of them.
+      starts: ``(Q, K)`` global window start per lane.
+      ub_init: ``(Q,)`` incumbent seeds (``BIG`` cold).
+      envelopes: optional ``(u, low)`` pair of ``(Q, m)`` query envelopes —
+        enables UCR ``cb`` threshold tightening, computed per block inside
+        the sweep (no precomputed ``(Q, K, m)`` cb slab exists anywhere).
+      window, band_width, rows_per_step, backend, block_k, row_block: as in
+        ``ea_pruned_dtw_multi_batch``.
+
+    Returns: ``(best_dist, best_start, blocks)`` — ``(Q,)`` each; ``blocks``
+      counts candidate blocks actually evaluated (the work metric; the
+      dispatch count is 1 by construction).
+    """
+    if jnp.ndim(queries) != 2:
+        raise ValueError("persistent sweep requires (Q, m) univariate queries")
+    use_cb = envelopes is not None
+    u, low = envelopes if use_cb else (None, None)
+    resolved = resolve_backend(backend)
+    if resolved == "jax":
+        nq, m = queries.shape
+        dt = queries.dtype
+        lb_arr, starts_arr, candidates = pad_lanes_to_blocks(
+            block_k, jnp.asarray(lb, dt), jnp.asarray(starts), candidates
+        )
+        if u is None:
+            u_arr = jnp.zeros((nq, m), dt)
+            low_arr = jnp.zeros((nq, m), dt)
+        else:
+            u_arr, low_arr = jnp.asarray(u, dt), jnp.asarray(low, dt)
+        return _persistent_jax(
+            queries, candidates, lb_arr, starts_arr,
+            jnp.asarray(ub_init, dt), u_arr, low_arr,
+            window, band_width, rows_per_step, block_k, use_cb,
+        )
+    interpret = True if resolved == "pallas_interpret" else None
+    return _kernel_ops().dtw_ea_persistent(
+        queries, candidates, lb, starts, ub_init, window, u=u, low=low,
+        use_cb=use_cb, band_width=band_width, block_k=block_k,
+        row_block=row_block, interpret=interpret,
+    )
 
 
 @partial(

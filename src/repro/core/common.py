@@ -13,6 +13,32 @@ import jax.numpy as jnp
 
 BIG = 1.0e30  # pruned-cell sentinel (finite stand-in for +inf)
 
+# Per-lane ub sentinel for padding / LB-gated / finished-query lanes: any
+# negative threshold kills the lane on row 0 (DTW costs are >= 0). The ONE
+# definition — the Pallas kernels, the jax backends, and every search
+# driver must agree on it, or lane gating diverges between backends.
+DEAD_LANE_UB = -1.0
+
+
+def pad_lanes_to_blocks(block_k: int, lb, starts, candidates=None):
+    """Pad the lane axis to a ``block_k`` multiple, the one shared rule.
+
+    Padding lanes get ``+inf`` lower bounds — the marker that block gating,
+    lane gating, and the padding-lane distance mask all key on — and zero
+    starts/windows. ``lb``/``starts`` are ``(..., K)``; ``candidates``
+    optional ``(..., K, m)``. Returns the (possibly unchanged) triple.
+    """
+    k = lb.shape[-1]
+    k_pad = -(-k // block_k) * block_k
+    if k_pad == k:
+        return lb, starts, candidates
+    pw = [(0, 0)] * (lb.ndim - 1) + [(0, k_pad - k)]
+    lb = jnp.pad(lb, pw, constant_values=jnp.inf)
+    starts = jnp.pad(starts, pw)
+    if candidates is not None:
+        candidates = jnp.pad(candidates, pw + [(0, 0)])
+    return lb, starts, candidates
+
 
 def default_band_width(window: int, m: int) -> int:
     """Smallest lane-aligned band covering ``2*window + 1`` columns.

@@ -8,9 +8,16 @@
   lb_keogh  — LB_Kim + LB_Keogh for every window of a reference in one pass
 
 ``ops.py`` holds the jitted wrappers (interpret=True on CPU, Mosaic on TPU):
-``dtw_ea_multi`` is the multi-query launch, ``dtw_ea`` its Q = 1 form;
+``dtw_ea_multi`` is the multi-query launch, ``dtw_ea`` its Q = 1 form, and
+``dtw_ea_persistent`` the one-launch-per-search persistent form (sequential
+candidate grid dimension, incumbent carried in SMEM scratch);
 ``ref.py`` the pure-jnp oracles the tests sweep against.
 """
-from repro.kernels.ops import dtw_ea, dtw_ea_multi, lb_keogh_all_windows
+from repro.kernels.ops import (
+    dtw_ea,
+    dtw_ea_multi,
+    dtw_ea_persistent,
+    lb_keogh_all_windows,
+)
 
-__all__ = ["dtw_ea", "dtw_ea_multi", "lb_keogh_all_windows"]
+__all__ = ["dtw_ea", "dtw_ea_multi", "dtw_ea_persistent", "lb_keogh_all_windows"]

@@ -65,6 +65,19 @@ semantics, so ``SearchResult`` stats survive when search runs through the
 Pallas backend. The counter-free variant carries no accumulator traffic —
 the search fast round uses it by default.
 
+Persistent search mode (DESIGN.md §2.5): ``_dtw_ea_persistent_kernel``
+collapses the *entire* best-first sweep of a search into one launch. The
+candidate-block grid dimension turns sequential (``"arbitrary"``), the shared
+incumbent ``ub`` lives in SMEM scratch and is min-reduced from each block's
+surviving lane distances before the next block is gated, and a block whose
+precomputed lower bound cannot beat the carried incumbent becomes a
+``pl.when`` no-op on device — the cascade stop condition without returning
+to the host. The UCR ``cb`` suffix is computed as a per-block kernel
+prologue (LB_Keogh terms + reverse cumsum from the query envelope), so the
+host neither materializes nor streams a ``cb`` slab. One launch per search,
+O(1) dispatches instead of O(rounds), with ``ub`` tightening at candidate-
+block granularity instead of round granularity.
+
 Validated against ``ref.py`` and the banded JAX path in interpret mode on
 CPU; written for TPU as the target.
 """
@@ -75,13 +88,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-BIG = 1.0e30
+from repro.core.common import BIG, DEAD_LANE_UB
+from repro.core.lower_bounds import _lb_keogh_terms
 
 
 def _shift_right(x: jax.Array, off: int, fill: float) -> jax.Array:
     """Shift last axis right by ``off`` lanes, filling with ``fill``."""
     pad = jnp.full(x.shape[:-1] + (off,), fill, x.dtype)
     return jnp.concatenate([pad, x[..., :-off]], axis=-1)
+
+
+def _shift_left(x: jax.Array, off: int, fill: float) -> jax.Array:
+    """Shift last axis left by ``off`` lanes, filling with ``fill``."""
+    pad = jnp.full(x.shape[:-1] + (off,), fill, x.dtype)
+    return jnp.concatenate([x[..., off:], pad], axis=-1)
 
 
 def _prefix_sum(x: jax.Array) -> jax.Array:
@@ -94,6 +114,16 @@ def _prefix_sum(x: jax.Array) -> jax.Array:
     return x
 
 
+def _suffix_sum(x: jax.Array) -> jax.Array:
+    """Inclusive suffix sum along the last axis (reverse-cumsum, doubling)."""
+    n = x.shape[-1]
+    off = 1
+    while off < n:
+        x = x + _shift_left(x, off, 0.0)
+        off *= 2
+    return x
+
+
 def _prefix_min(x: jax.Array) -> jax.Array:
     """Inclusive prefix min along the last axis (doubling)."""
     n = x.shape[-1]
@@ -102,6 +132,121 @@ def _prefix_min(x: jax.Array) -> jax.Array:
         x = jnp.minimum(x, _shift_right(x, off, jnp.inf))
         off *= 2
     return x
+
+
+def _dp_row(
+    i,
+    q_i,          # (1,) query sample for DP row ``i``
+    cand_ref,     # (block_k, m) candidate block
+    prev_ref,     # (block_k, bw) previous-row band scratch
+    ns_ref,       # (block_k, 1) per-lane next_start scratch
+    flags_ref,    # (block_k, 2) per-lane [abandoned, ok_last] scratch
+    ub,           # (block_k, 1) per-lane thresholds (fixed for the block)
+    cb_ref,       # (block_k, m) cumulative LB suffix (read iff use_cb)
+    rel,          # (block_k, bw) column iota
+    rows_ref,     # (block_k, 1) rows counter scratch (used iff emit_info)
+    cells_ref,    # (block_k, 1) cells counter scratch (used iff emit_info)
+    *,
+    n_rows: int,
+    window: int,
+    band_width: int,
+    use_cb: bool,
+    emit_info: bool,
+):
+    """One banded DP row, shared by the round and persistent kernels.
+
+    Mutates the per-block scratch refs in place; a lane whose row has no
+    cell under its own threshold freezes (abandon flag), and padding rows
+    (``i >= n_rows``) are no-ops.
+    """
+    block_k, m = cand_ref.shape
+    bw = band_width
+    lo_max = m - bw  # 0 in full-width mode
+
+    valid = i < n_rows
+    lo = jnp.clip(i - window, 0, lo_max)
+    lo_prev = jnp.clip(i - 1 - window, 0, lo_max)
+    shift = lo - lo_prev  # the window edge advances by 0 or 1
+
+    cand = cand_ref[:, pl.ds(lo, bw)]
+    c = (q_i[0] - cand) ** 2
+
+    cols = lo + rel
+    hi = jnp.minimum(m - 1, i + window)
+    ns = ns_ref[...]  # (block_k, 1)
+    exists = jnp.logical_and(
+        jnp.logical_and(cols >= ns, cols >= i - window), cols <= hi
+    )
+
+    # Realign the previous row's band from offset lo_prev to lo.
+    prev = prev_ref[...]
+    big_col = jnp.full((block_k, 1), BIG, jnp.float32)
+    # top[r]  = prev-row value at col lo + r      (shift left by shift)
+    top = jnp.where(
+        shift == 1,
+        jnp.concatenate([prev[:, 1:], big_col], axis=1),
+        prev,
+    )
+    # left[r] = prev-row value at col lo + r - 1  (shift by shift - 1)
+    border = jnp.where(i == 0, 0.0, BIG)  # virtual corner at (-1, -1)
+    left = jnp.where(
+        shift == 1,
+        prev,
+        jnp.concatenate(
+            [jnp.full((block_k, 1), border, jnp.float32), prev[:, :-1]],
+            axis=1,
+        ),
+    )
+
+    d = c + jnp.minimum(top, left)
+    d = jnp.where(exists, d, BIG)
+    p = _prefix_sum(c)
+    curr = p + _prefix_min(d - p)
+    curr = jnp.minimum(curr, BIG)
+    curr = jnp.where(exists, curr, BIG)
+
+    if use_cb:
+        jcb = jnp.minimum(i + window + 1, m - 1)
+        tail = cb_ref[:, pl.ds(jcb, 1)]  # (block_k, 1)
+        tail = jnp.where(i + window + 1 <= m - 1, tail, 0.0)
+        thr = ub - tail
+    else:
+        thr = ub
+
+    le = jnp.logical_and(curr <= thr, exists)
+    any_le = jnp.any(le, axis=1, keepdims=True)  # (block_k, 1)
+    alive = flags_ref[:, 0:1] == 0
+    upd = jnp.logical_and(jnp.logical_and(alive, any_le), valid)
+
+    ns_new = jnp.min(jnp.where(le, cols, m), axis=1, keepdims=True)
+    ns_ref[...] = jnp.where(upd, ns_new.astype(jnp.int32), ns)
+    prev_ref[...] = jnp.where(upd, curr, prev)
+    newly_dead = jnp.logical_and(
+        alive, jnp.logical_and(jnp.logical_not(any_le), valid)
+    )
+    flags_ref[:, 0:1] = jnp.where(
+        newly_dead, jnp.ones_like(ns), flags_ref[:, 0:1]
+    )
+    is_last = i == n_rows - 1
+    ok_last = jnp.logical_and(
+        jnp.any(jnp.logical_and(le, cols == m - 1), axis=1, keepdims=True),
+        jnp.logical_and(upd, is_last),
+    )
+    flags_ref[:, 1:2] = jnp.where(
+        jnp.logical_and(valid, is_last),
+        ok_last.astype(jnp.int32),
+        flags_ref[:, 1:2],
+    )
+    if emit_info:
+        # EAInfo semantics: the abandoning row is counted too.
+        issued = jnp.logical_and(alive, valid)
+        rows_ref[...] = rows_ref[...] + issued.astype(jnp.int32)
+        n_exist = jnp.sum(
+            exists.astype(jnp.int32), axis=1, keepdims=True
+        ).astype(jnp.int32)
+        cells_ref[...] = (
+            cells_ref[...] + jnp.where(issued, n_exist, 0)
+        ).astype(jnp.int32)
 
 
 def _dtw_ea_kernel(
@@ -146,92 +291,13 @@ def _dtw_ea_kernel(
         rel = jax.lax.broadcasted_iota(jnp.int32, (block_k, bw), 1)
 
         def row(r, _):
-            i = ri * row_block + r
-            valid = i < n_rows
-            lo = jnp.clip(i - window, 0, lo_max)
-            lo_prev = jnp.clip(i - 1 - window, 0, lo_max)
-            shift = lo - lo_prev  # the window edge advances by 0 or 1
-
-            q_i = q_ref[0, pl.ds(r, 1)]  # (1,)
-            cand = cand_ref[:, pl.ds(lo, bw)]
-            c = (q_i[0] - cand) ** 2
-
-            cols = lo + rel
-            hi = jnp.minimum(m - 1, i + window)
-            ns = ns_ref[...]  # (block_k, 1)
-            exists = jnp.logical_and(
-                jnp.logical_and(cols >= ns, cols >= i - window), cols <= hi
+            _dp_row(
+                ri * row_block + r, q_ref[0, pl.ds(r, 1)], cand_ref,
+                prev_ref, ns_ref, flags_ref, ub, cb_ref, rel,
+                rows_ref, cells_ref,
+                n_rows=n_rows, window=window, band_width=bw,
+                use_cb=use_cb, emit_info=emit_info,
             )
-
-            # Realign the previous row's band from offset lo_prev to lo.
-            prev = prev_ref[...]
-            big_col = jnp.full((block_k, 1), BIG, jnp.float32)
-            # top[r]  = prev-row value at col lo + r      (shift left by shift)
-            top = jnp.where(
-                shift == 1,
-                jnp.concatenate([prev[:, 1:], big_col], axis=1),
-                prev,
-            )
-            # left[r] = prev-row value at col lo + r - 1  (shift by shift - 1)
-            border = jnp.where(i == 0, 0.0, BIG)  # virtual corner at (-1, -1)
-            left = jnp.where(
-                shift == 1,
-                prev,
-                jnp.concatenate(
-                    [jnp.full((block_k, 1), border, jnp.float32), prev[:, :-1]],
-                    axis=1,
-                ),
-            )
-
-            d = c + jnp.minimum(top, left)
-            d = jnp.where(exists, d, BIG)
-            p = _prefix_sum(c)
-            curr = p + _prefix_min(d - p)
-            curr = jnp.minimum(curr, BIG)
-            curr = jnp.where(exists, curr, BIG)
-
-            if use_cb:
-                jcb = jnp.minimum(i + window + 1, m - 1)
-                tail = cb_ref[:, pl.ds(jcb, 1)]  # (block_k, 1)
-                tail = jnp.where(i + window + 1 <= m - 1, tail, 0.0)
-                thr = ub - tail
-            else:
-                thr = ub
-
-            le = jnp.logical_and(curr <= thr, exists)
-            any_le = jnp.any(le, axis=1, keepdims=True)  # (block_k, 1)
-            alive = flags_ref[:, 0:1] == 0
-            upd = jnp.logical_and(jnp.logical_and(alive, any_le), valid)
-
-            ns_new = jnp.min(jnp.where(le, cols, m), axis=1, keepdims=True)
-            ns_ref[...] = jnp.where(upd, ns_new.astype(jnp.int32), ns)
-            prev_ref[...] = jnp.where(upd, curr, prev)
-            newly_dead = jnp.logical_and(
-                alive, jnp.logical_and(jnp.logical_not(any_le), valid)
-            )
-            flags_ref[:, 0:1] = jnp.where(
-                newly_dead, jnp.ones_like(ns), flags_ref[:, 0:1]
-            )
-            is_last = i == n_rows - 1
-            ok_last = jnp.logical_and(
-                jnp.any(jnp.logical_and(le, cols == m - 1), axis=1, keepdims=True),
-                jnp.logical_and(upd, is_last),
-            )
-            flags_ref[:, 1:2] = jnp.where(
-                jnp.logical_and(valid, is_last),
-                ok_last.astype(jnp.int32),
-                flags_ref[:, 1:2],
-            )
-            if emit_info:
-                # EAInfo semantics: the abandoning row is counted too.
-                issued = jnp.logical_and(alive, valid)
-                rows_ref[...] = rows_ref[...] + issued.astype(jnp.int32)
-                n_exist = jnp.sum(
-                    exists.astype(jnp.int32), axis=1, keepdims=True
-                ).astype(jnp.int32)
-                cells_ref[...] = (
-                    cells_ref[...] + jnp.where(issued, n_exist, 0)
-                ).astype(jnp.int32)
             return 0
 
         jax.lax.fori_loop(0, row_block, row, 0, unroll=False)
@@ -248,3 +314,138 @@ def _dtw_ea_kernel(
         if emit_info:
             rows_out[...] = rows_ref[:, 0]
             cells_out[...] = cells_ref[:, 0]
+
+
+def _dtw_ea_persistent_kernel(
+    # operands
+    ub_init_ref,  # (Q,) SMEM per-query initial incumbents
+    q_ref,        # (1, row_block) query slice for this (query, row) block
+    cand_ref,     # (block_k, m) candidate block, best-first order
+    lb_ref,       # (block_k, 1) per-lane sorted lower bounds (+inf padding)
+    starts_ref,   # (block_k, 1) int32 global window start per lane
+    u_ref,        # (1, m) query envelope upper (read iff use_cb)
+    low_ref,      # (1, m) query envelope lower (read iff use_cb)
+    # outputs (one slot per query)
+    dist_ref,     # (1,) best distance (== ub_init when unbeaten)
+    idx_ref,      # (1,) best window start (-1 when unbeaten)
+    blocks_ref,   # (1,) candidate blocks actually evaluated
+    # scratch
+    prev_ref, ns_ref, flags_ref, ubv_ref, cb_ref,
+    done_ref, ub_s, best_s, blocks_s,
+    *,
+    n_rows: int,
+    window: int,
+    row_block: int,
+    band_width: int,
+    use_cb: bool,
+):
+    """Whole best-first search in one launch (DESIGN.md §2.5).
+
+    Grid ``(Q, cand_blocks, row_blocks)`` with the candidate dimension
+    *sequential*: the incumbent ``ub_s`` (and the running best start /
+    block counter) live in SMEM scratch and are carried across candidate
+    blocks, re-initialized from ``ub_init`` whenever a query's sweep starts
+    (``ci == ri == 0``), so a core that serves several queries of a parallel
+    query dimension never leaks state between them.
+
+    Per candidate block:
+      * gate: a block none of whose lanes' lower bounds beat the carried
+        incumbent is a no-op (``done`` set at ``ri == 0``) — the on-device
+        cascade stop. Lane-level gating rides the same comparison: a lane
+        whose own bound reaches ``ub`` gets the dead-lane sentinel.
+      * prologue (``use_cb``): the UCR ``cb`` suffix is built in VMEM from
+        the candidate tile and the query envelope (LB_Keogh terms + suffix
+        sum) instead of being streamed from HBM.
+      * rows: the shared ``_dp_row`` banded recurrence, per-lane abandon.
+      * epilogue (last row block): surviving lane distances are min-reduced
+        into ``ub_s`` with first-lane tie-breaking; strict improvement only,
+        matching the host round driver's incumbent update.
+    """
+    qi = pl.program_id(0)
+    ci = pl.program_id(1)
+    ri = pl.program_id(2)
+    block_k, m = cand_ref.shape
+    bw = band_width
+    lo_max = m - bw
+
+    @pl.when(jnp.logical_and(ci == 0, ri == 0))
+    def _init_query():
+        ub_s[0] = ub_init_ref[qi]
+        best_s[0] = jnp.asarray(-1, jnp.int32)
+        blocks_s[0] = jnp.asarray(0, jnp.int32)
+
+    @pl.when(ri == 0)
+    def _init_block():
+        prev_ref[...] = jnp.full((block_k, bw), BIG, jnp.float32)
+        ns_ref[...] = jnp.zeros((block_k, 1), jnp.int32)
+        flags_ref[...] = jnp.zeros((block_k, 2), jnp.int32)
+        # Block + lane gating against the carried incumbent. Lower bounds
+        # arrive sorted, so "any lane live" == "head lane live", but the
+        # any() form is order-independent.
+        ub_cur = ub_s[0]
+        live = lb_ref[...] < ub_cur  # (block_k, 1)
+        ubv_ref[...] = jnp.where(live, ub_cur, DEAD_LANE_UB)
+        skip = jnp.logical_not(jnp.any(live))
+        done_ref[0] = skip.astype(jnp.int32)
+        blocks_s[0] = blocks_s[0] + jnp.logical_not(skip).astype(jnp.int32)
+        if use_cb:
+            @pl.when(jnp.logical_not(skip))
+            def _cb_prologue():
+                # (1, m) envelope broadcasts over the block's lanes. The
+                # suffix sum runs in tree order (log-depth doubling) rather
+                # than the host drivers' sequential cumsum — cb rounding
+                # only shifts abandon thresholds by an ulp, which cannot
+                # change the winner (DESIGN.md §2.2/§2.5).
+                terms = _lb_keogh_terms(cand_ref[...], u_ref[...], low_ref[...])
+                cb_ref[...] = _suffix_sum(terms)
+
+    @pl.when(done_ref[0] == 0)
+    def _rows():
+        ub = ubv_ref[...]
+        rel = jax.lax.broadcasted_iota(jnp.int32, (block_k, bw), 1)
+
+        def row(r, _):
+            _dp_row(
+                ri * row_block + r, q_ref[0, pl.ds(r, 1)], cand_ref,
+                prev_ref, ns_ref, flags_ref, ub, cb_ref, rel,
+                None, None,
+                n_rows=n_rows, window=window, band_width=bw,
+                use_cb=use_cb, emit_info=False,
+            )
+            return 0
+
+        jax.lax.fori_loop(0, row_block, row, 0, unroll=False)
+        done_ref[0] = jnp.asarray(
+            jnp.all(flags_ref[:, 0] == 1), jnp.int32
+        ).astype(jnp.int32)
+
+    @pl.when(ri == pl.num_programs(2) - 1)
+    def _block_epilogue():
+        # Min-reduce this block's surviving distances into the incumbent.
+        # A gated block left flags at zero (ok_last == 0), so it contributes
+        # nothing — the same no-op the host loop's stop condition implies.
+        ok = jnp.logical_and(flags_ref[:, 0:1] == 0, flags_ref[:, 1:2] == 1)
+        lo_fin = min(max(n_rows - 1 - window, 0), lo_max)  # static
+        last = prev_ref[:, (m - 1) - lo_fin : (m - 1) - lo_fin + 1]
+        d = jnp.where(ok, last, jnp.inf)  # (block_k, 1)
+        dmin = jnp.min(d)
+        improved = dmin < ub_s[0]  # strict: ties keep the incumbent
+
+        @pl.when(improved)
+        def _tighten():
+            lane = jax.lax.broadcasted_iota(jnp.int32, (block_k, 1), 0)
+            k = jnp.min(jnp.where(d == dmin, lane, block_k))  # first argmin
+            ub_s[0] = dmin
+            best_s[0] = jnp.sum(
+                jnp.where(lane == k, starts_ref[...], 0), dtype=jnp.int32
+            )
+
+    @pl.when(
+        jnp.logical_and(
+            ci == pl.num_programs(1) - 1, ri == pl.num_programs(2) - 1
+        )
+    )
+    def _emit():
+        dist_ref[...] = jnp.full((1,), ub_s[0], jnp.float32)
+        idx_ref[...] = jnp.full((1,), best_s[0], jnp.int32)
+        blocks_ref[...] = jnp.full((1,), blocks_s[0], jnp.int32)

@@ -38,17 +38,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.common import default_band_width
-from repro.kernels.dtw_band import _dtw_ea_kernel
+from repro.core.common import (
+    DEAD_LANE_UB,
+    default_band_width,
+    pad_lanes_to_blocks,
+)
+from repro.kernels.dtw_band import _dtw_ea_kernel, _dtw_ea_persistent_kernel
 from repro.kernels.lb_keogh import _lb_kernel
 
 
 # jax renamed TPUCompilerParams -> CompilerParams; support both.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
-
-# Per-lane ub sentinel for padding / finished-query lanes: any negative
-# threshold kills the lane on row 0 (DTW costs are >= 0).
-DEAD_LANE_UB = -1.0
 
 
 def _default_interpret() -> bool:
@@ -236,6 +236,154 @@ def dtw_ea(
         d, rows, cells = out
         return d[0], rows[0], cells[0]
     return out[0]
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "window", "use_cb", "band_width", "block_k", "row_block", "interpret"
+    ),
+)
+def dtw_ea_persistent(
+    queries: jax.Array,
+    candidates: jax.Array,
+    lb: jax.Array,
+    starts: jax.Array,
+    ub_init: jax.Array,
+    window: int,
+    u: jax.Array | None = None,
+    low: jax.Array | None = None,
+    use_cb: bool = False,
+    band_width: int | None = None,
+    block_k: int = 8,
+    row_block: int = 128,
+    interpret: bool | None = None,
+):
+    """Whole best-first EAPrunedDTW search in ONE launch per query set.
+
+    The persistent form of ``dtw_ea_multi`` (DESIGN.md §2.5): instead of the
+    host looping best-first rounds around kernel dispatches, the candidate
+    dimension of the grid turns sequential and the incumbent is carried in
+    SMEM scratch across candidate blocks — tightened by each block's
+    surviving minimum and gating the next block's lower bound on device.
+    Candidates must arrive pre-gathered in best-first (ascending-``lb``)
+    order; gating correctness only needs ``lb`` to be a true lower bound,
+    but the on-device cascade stop is only as good as the ordering.
+
+    Args:
+      queries: ``(Q, n)`` z-normalized queries.
+      candidates: ``(Q, K, m)`` z-normalized windows, best-first per query.
+      lb: ``(Q, K)`` ascending per-lane lower bounds (``+inf`` marks padding
+        lanes — they never run).
+      starts: ``(Q, K)`` int32 global window start of each lane (the value
+        reported back for the winning lane).
+      ub_init: ``(Q,)`` initial incumbents (``BIG`` for a cold start; a warm
+        seed that no candidate beats is returned unchanged with start -1).
+      window: Sakoe-Chiba window shared by all queries.
+      u, low: ``(Q, m)`` query envelopes — required when ``use_cb`` (the cb
+        suffix is computed as a kernel prologue; no host-side cb slab).
+      use_cb: UCR threshold tightening on/off.
+      band_width, block_k, row_block, interpret: as in ``dtw_ea_multi``.
+
+    Returns: ``(best_dist, best_start, blocks)`` of shapes ``(Q,)`` —
+      float32 incumbent distances, int32 winning window starts (-1 when the
+      seed was never beaten), int32 count of candidate blocks that actually
+      ran (the block-granular work metric; dispatches are 1 by construction).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    queries = jnp.asarray(queries, jnp.float32)
+    candidates = jnp.asarray(candidates, jnp.float32)
+    nq, n = queries.shape
+    q_, k, m = candidates.shape
+    assert q_ == nq, (q_, nq)
+    window = int(min(window, m))
+
+    if band_width is None:
+        band_width = default_band_width(window, m) if n == m else m
+    bw = int(min(band_width, m))
+    full = min(2 * window + 1, m)
+    if bw < full:
+        raise ValueError(f"band_width {bw} < 2*window+1 = {full}")
+    if bw < m and n != m:
+        raise ValueError("banded dtw_ea requires equal lengths (n == m)")
+    if use_cb and (u is None or low is None):
+        raise ValueError("use_cb requires the query envelopes (u, low)")
+
+    n_pad = -(-n // row_block) * row_block
+    lb_arr, starts_arr, candidates = pad_lanes_to_blocks(
+        block_k, jnp.asarray(lb, jnp.float32),
+        jnp.asarray(starts, jnp.int32), candidates,
+    )
+    k_pad = candidates.shape[1]
+    if n_pad != n:
+        queries = jnp.pad(queries, ((0, 0), (0, n_pad - n)))
+    if u is None:
+        u_arr = jnp.zeros((nq, m), jnp.float32)
+        low_arr = jnp.zeros((nq, m), jnp.float32)
+    else:
+        u_arr = jnp.asarray(u, jnp.float32)
+        low_arr = jnp.asarray(low, jnp.float32)
+
+    ncb = k_pad // block_k
+    grid = (nq, ncb, n_pad // row_block)
+    cand_flat = candidates.reshape(nq * k_pad, m)
+    lb_flat = lb_arr.reshape(nq * k_pad, 1)
+    starts_flat = starts_arr.reshape(nq * k_pad, 1)
+
+    kernel = partial(
+        _dtw_ea_persistent_kernel,
+        n_rows=n,
+        window=window,
+        row_block=row_block,
+        band_width=bw,
+        use_cb=use_cb,
+    )
+    lane2 = lambda shape: pl.BlockSpec(shape, lambda qi, ci, ri: (qi * ncb + ci, 0))
+    q_spec = pl.BlockSpec((1,), lambda qi, ci, ri: (qi,))
+    dist, idx, blocks = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # ub_init (Q,)
+            pl.BlockSpec((1, row_block), lambda qi, ci, ri: (qi, ri)),
+            lane2((block_k, m)),                              # candidates
+            lane2((block_k, 1)),                              # lb
+            lane2((block_k, 1)),                              # starts
+            pl.BlockSpec((1, m), lambda qi, ci, ri: (qi, 0)),  # envelope u
+            pl.BlockSpec((1, m), lambda qi, ci, ri: (qi, 0)),  # envelope low
+        ],
+        out_specs=[q_spec, q_spec, q_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq,), jnp.float32),
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, bw), jnp.float32),   # prev band
+            pltpu.VMEM((block_k, 1), jnp.int32),      # next_start
+            pltpu.VMEM((block_k, 2), jnp.int32),      # flags
+            pltpu.VMEM((block_k, 1), jnp.float32),    # per-lane thresholds
+            pltpu.VMEM((block_k, m), jnp.float32),    # cb prologue slab
+            pltpu.SMEM((1,), jnp.int32),              # block done flag
+            pltpu.SMEM((1,), jnp.float32),            # carried incumbent
+            pltpu.SMEM((1,), jnp.int32),              # carried best start
+            pltpu.SMEM((1,), jnp.int32),              # live-block counter
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        jnp.asarray(ub_init, jnp.float32),
+        queries,
+        cand_flat,
+        lb_flat,
+        starts_flat,
+        u_arr,
+        low_arr,
+    )
+    return dist, idx, blocks
 
 
 @partial(

@@ -30,7 +30,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.batch import ea_pruned_dtw_batch
 from repro.core.compat import shard_map as _shard_map
 from repro.core.common import BIG
-from repro.core.lower_bounds import _lb_keogh_terms, envelope, lb_keogh, lb_kim_fl
+from repro.core.lower_bounds import cascade_keogh_cumulative, envelope, lb_keogh, lb_kim_fl
 from repro.search.znorm import gather_norm_windows, window_stats, znorm
 
 
@@ -126,8 +126,7 @@ def make_distributed_search(
             lb = jax.lax.dynamic_slice(lb_p, (st.r * batch,), (batch,))
             local_more = jnp.logical_and(st.r < n_rounds, lb[0] < st.ub)
             cand = gather_norm_windows(ref, s, length, mu, sigma)
-            terms = _lb_keogh_terms(cand, u, low)
-            cb = jnp.flip(jnp.cumsum(jnp.flip(terms, -1), -1), -1)
+            cb = cascade_keogh_cumulative(cand, u, low)
             d = ea_pruned_dtw_batch(
                 query_n, cand, st.ub, window=window, band_width=band_width,
                 cb=cb, rows_per_step=rows_per_step, backend=backend,

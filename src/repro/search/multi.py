@@ -41,6 +41,15 @@ reachable distance abandons its entire round-0 batch and drops out with
 ``best_start == -1`` — the serving analogue of the paper's "ub from a
 previous query" trick.
 
+``rounds="persistent"`` (DESIGN.md §2.5) replaces the per-round dispatches
+with ONE launch for the whole workload: every query's full best-first
+candidate order is gathered once, the kernel grid keeps the query dimension
+parallel, and each query's incumbent is carried in SMEM across the now
+*sequential* candidate-block dimension — tightened every ``block_k`` lanes
+and gating LB-pruned blocks on device. Same per-query results, O(1)
+dispatches, at the cost of materializing the ``(Q, N, l)`` window tensor up
+front.
+
 The distributed variant (``make_distributed_multi_search``) shards the
 (query, candidate-range) work items across the mesh: candidate ranges are
 sharded contiguously (each device owns a slice of every query's windows, so
@@ -61,13 +70,13 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.backend import resolve_backend
-from repro.core.batch import ea_pruned_dtw_multi_batch
-from repro.core.common import BIG
-from repro.core.lower_bounds import _lb_keogh_terms, envelope
-from repro.kernels.ops import DEAD_LANE_UB
+from repro.core.batch import ea_pruned_dtw_multi_batch, ea_pruned_dtw_persistent
+from repro.core.common import BIG, DEAD_LANE_UB, pad_lanes_to_blocks
+from repro.core.lower_bounds import cascade_keogh_cumulative, envelope
 from repro.search.cascade import cascade_lower_bounds
 from repro.core.compat import shard_map as _shard_map
 from repro.search.distributed import _local_lbs
+from repro.search.subsequence import ROUND_DRIVERS
 from repro.search.znorm import gather_norm_windows, window_stats, znorm
 
 MULTI_VARIANTS = ("eapruned", "eapruned_nolb")
@@ -113,7 +122,7 @@ def _round_slicers(batch: int):
     static_argnames=(
         "length", "window", "variant", "batch", "band_width", "chunk",
         "with_info", "backend", "rows_per_step", "block_k", "row_block",
-        "warm_start",
+        "warm_start", "rounds",
     ),
 )
 def _multi_query_search_impl(
@@ -132,6 +141,7 @@ def _multi_query_search_impl(
     block_k,
     row_block,
     warm_start,
+    rounds,
 ):
     assert variant in MULTI_VARIANTS, variant
     knobs = dict(
@@ -160,6 +170,43 @@ def _multi_query_search_impl(
         lb_sorted = jnp.zeros((nq, n_win), queries_n.dtype)
 
     u, low = jax.vmap(envelope, in_axes=(0, None))(queries_n, window)
+
+    if rounds == "persistent":
+        # One launch for the whole workload: grid (Q, cand_blocks,
+        # row_blocks) with the query dimension parallel and a per-query
+        # incumbent carried across the sequential candidate dimension
+        # (SMEM on the Pallas backend, mapped while_loops on jax). The
+        # query-major lane layout is unchanged from the host rounds.
+        assert not with_info, "persistent mode is counter-free"
+        if ub_init is None:
+            ub0 = jnp.full((nq,), BIG, queries_n.dtype)
+        else:
+            ub0 = jnp.broadcast_to(
+                jnp.asarray(ub_init, queries_n.dtype), (nq,)
+            )
+        lb_p, order_p, _ = pad_lanes_to_blocks(block_k, lb_sorted, order)
+        cand_all = jax.vmap(
+            lambda s: gather_norm_windows(ref, s, length, mu, sigma)
+        )(order_p)                                     # (Q, k_pad, l)
+        bd, bs, blocks = ea_pruned_dtw_persistent(
+            queries_n, cand_all, lb_p, order_p, ub0, window=window,
+            band_width=band_width,
+            envelopes=(u, low) if use_cb else None, **knobs,
+        )
+        # visited blocks are a best-first prefix per query, so only the
+        # final padded block can hold non-candidates — clamp to n_win
+        lanes = jnp.minimum(blocks * block_k, n_win).astype(jnp.int32)
+        no_info = jnp.full((nq,), -1)
+        return MultiSearchResult(
+            best_start=bs,
+            best_dist=bd,
+            rounds=jnp.ones((nq,), jnp.int32),  # dispatches: one launch
+            lanes=lanes,
+            lb_pruned=n_win - lanes,
+            rows=no_info,
+            cells=no_info,
+        )
+
     n_rounds = -(-n_win // batch)
     pad = n_rounds * batch - n_win
     order_p = jnp.concatenate(
@@ -248,8 +295,7 @@ def _multi_query_search_impl(
         )(starts)                                      # (Q, batch, l)
         cb = None
         if use_cb:
-            terms = jax.vmap(_lb_keogh_terms)(cand, u, low)
-            cb = jnp.flip(jnp.cumsum(jnp.flip(terms, -1), -1), -1)
+            cb = jax.vmap(cascade_keogh_cumulative)(cand, u, low)
         # Flattened (Q x batch) lane set, per-lane ub. Three per-lane cases
         # the scalar-ub driver cannot express: finished queries submit dead
         # lanes; within an active query's batch, lanes whose own lower bound
@@ -343,6 +389,7 @@ def multi_query_search(
     row_block: int = 128,
     ub_init: jax.Array | None = None,
     warm_start: int = 0,
+    rounds: str = "host",
 ) -> MultiSearchResult:
     """Nearest z-normalized window of ``ref`` for each of Q queries.
 
@@ -377,15 +424,29 @@ def multi_query_search(
         work, not results: it helps the Pallas backend's block-level early
         exit (round-0 blocks can die early instead of running full DPs) but
         adds prepass lanes the vmap backend cannot recoup — leave it off on
-        CPU.
+        CPU. A host-rounds knob: ignored by the persistent driver, whose
+        incumbent already tightens every ``block_k`` lanes from block 0.
+      rounds: ``"host"`` (per-round dispatches, the default) or
+        ``"persistent"`` — the whole Q-query sweep in one launch with
+        per-query incumbents carried in SMEM across candidate blocks (see
+        ``search.subsequence`` module docstring for the trade-offs).
+        Counter-free: combine with ``with_info`` is rejected.
 
     Returns: ``MultiSearchResult`` of per-query ``(Q,)`` arrays.
     """
+    if rounds not in ROUND_DRIVERS:
+        raise ValueError(f"rounds {rounds!r} not in {ROUND_DRIVERS}")
+    if rounds == "persistent" and with_info:
+        raise ValueError(
+            "rounds='persistent' is counter-free; use the host driver for "
+            "with_info stats rounds"
+        )
     return _multi_query_search_impl(
         ref, queries, ub_init, length=length, window=window, variant=variant,
         batch=batch, band_width=band_width, chunk=chunk, with_info=with_info,
         backend=resolve_backend(backend), rows_per_step=rows_per_step,
         block_k=block_k, row_block=row_block, warm_start=warm_start,
+        rounds=rounds,
     )
 
 
@@ -478,8 +539,7 @@ def make_distributed_multi_search(
             cand = jax.vmap(
                 lambda ss: gather_norm_windows(ref, ss, length, mu, sigma)
             )(s)
-            terms = jax.vmap(_lb_keogh_terms)(cand, u, low)
-            cb = jnp.flip(jnp.cumsum(jnp.flip(terms, -1), -1), -1)
+            cb = jax.vmap(cascade_keogh_cumulative)(cand, u, low)
             # Dead-lane sentinel for finished (query, range) items and for
             # lanes whose own lower bound already reaches the incumbent
             # (lane-level LB gating, as in the single-host driver).

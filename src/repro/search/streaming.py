@@ -6,10 +6,12 @@ O(N) stats + cascade per chunk throws away everything the previous chunks
 taught us. This module is the incremental core the serving front-end
 (``serve/stream.py``) drives, one jitted dispatch per ingest:
 
-  * **Appendable window stats** — ``znorm.append_window_stats`` turns the
-    ``length - 1`` carried tail plus the new chunk into the mu/sigma table of
-    exactly the windows that become valid with this chunk, in O(chunk) work.
-    The ``length - 1`` windows straddling the tail/chunk boundary are
+  * **Boundary-local window stats** — one ``znorm.window_stats`` prefix-sum
+    pass over the ``length - 1`` carried tail plus the new chunk yields the
+    mu/sigma table of exactly the windows that become valid with this
+    chunk, in O(chunk) work (the appendable form ``append_window_stats``
+    wraps the same pass for callers that also want the carried tail). The
+    ``length - 1`` windows straddling the tail/chunk boundary are
     first-class: they appear in the ingest in which their last sample
     arrives, so no chunking of the stream can hide a window.
 
@@ -33,6 +35,17 @@ valid) against a monotone non-increasing incumbent, the final per-query
 ``(distance, start)`` equals the offline search over the concatenated stream
 — for *any* chunking. ``tests/test_streaming.py`` pins that parity on both
 backends.
+
+Fixed-shape ingest (``pad_to``): the raw form retraces per distinct
+``(tail, chunk)`` shape — a ragged final chunk, or any mixed-size schedule,
+costs a fresh compile. With ``pad_to`` set, every ingest is canonicalized to
+one static shape: the carried tail rides in a right-aligned
+``(length - 1,)`` buffer with a dynamic ``tail_len``, the chunk in a
+``(pad_to,)`` buffer with a dynamic ``chunk_len``, and the windows that do
+not really exist (garbage prefix of the tail buffer, padding suffix of the
+chunk buffer) are masked with ``+inf`` lower bounds so they ride the rounds
+as dead lanes. One trace then serves the whole stream — start-up, steady
+state, and the short final chunk alike.
 """
 from __future__ import annotations
 
@@ -44,12 +57,11 @@ import jax.numpy as jnp
 
 from repro.core.backend import resolve_backend
 from repro.core.batch import ea_pruned_dtw_multi_batch
-from repro.core.common import BIG
-from repro.core.lower_bounds import _lb_keogh_terms
-from repro.kernels.ops import DEAD_LANE_UB
+from repro.core.common import BIG, DEAD_LANE_UB
+from repro.core.lower_bounds import cascade_keogh_cumulative
 from repro.search.cascade import cascade_lower_bounds
 from repro.search.multi import MULTI_VARIANTS, _round_slicers
-from repro.search.znorm import append_window_stats, gather_norm_windows
+from repro.search.znorm import gather_norm_windows, window_stats
 
 
 class IngestResult(NamedTuple):
@@ -60,51 +72,40 @@ class IngestResult(NamedTuple):
     lanes: jax.Array   # candidate lanes submitted this ingest
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "length", "window", "variant", "batch", "band_width", "chunk_lb",
-        "backend", "rows_per_step", "block_k", "row_block",
-    ),
-)
-def _ingest_impl(
-    tail,
-    chunk,
+def _ingest_core(
+    ctx,
+    valid,
     queries_n,
     u,
     low,
     ub0,
     best0,
-    offset,
+    offset0,
+    *,
     length,
     window,
     variant,
     batch,
     band_width,
     chunk_lb,
-    backend,
-    rows_per_step,
-    block_k,
-    row_block,
+    knobs,
 ):
-    """One ingest: stats append + cascade + carried-ub rounds, jitted.
+    """Shared cascade + carried-ub round loop over the windows of ``ctx``.
 
-    ``tail`` is the carried ``length - 1`` boundary context, ``offset`` the
-    stream coordinate of ``tail[0]`` (so local window start ``s`` in the
-    context maps to stream start ``offset + s``). Retraces per distinct
-    (tail, chunk) shape — a fixed chunk size settles into one trace.
+    ``valid`` masks which of the ``len(ctx) - length + 1`` window starts
+    really exist — all of them on the raw path; the fixed-shape path masks
+    the tail-buffer garbage prefix and the chunk-buffer padding suffix.
+    Invalid windows get ``+inf`` lower bounds and ride the rounds as dead
+    lanes. ``offset0`` is the stream coordinate of ``ctx[0]`` (may be
+    negative on the fixed-shape path while the tail buffer is not yet
+    full — only invalid starts map below zero).
     """
     assert variant in MULTI_VARIANTS, variant
-    knobs = dict(
-        rows_per_step=rows_per_step, backend=backend, block_k=block_k,
-        row_block=row_block,
-    )
     use_lb = variant != "eapruned_nolb"
     use_cb = variant == "eapruned"
     nq = queries_n.shape[0]
 
-    new_tail, mu, sigma = append_window_stats(tail, chunk, length)
-    ctx = jnp.concatenate([tail, chunk])
+    mu, sigma = window_stats(ctx, length)
     k_new = ctx.shape[0] - length + 1
     assert k_new >= 1, "ingest called with no newly-valid windows"
 
@@ -114,11 +115,15 @@ def _ingest_impl(
                 ctx, qn, mu, sigma, length, window, chunk=chunk_lb
             )
         )(queries_n)                                   # (Q, k_new)
+        lbs = jnp.where(valid[None, :], lbs, jnp.inf)
         order = jnp.argsort(lbs, axis=1)
         lb_sorted = jnp.take_along_axis(lbs, order, axis=1)
     else:
         order = jnp.broadcast_to(jnp.arange(k_new), (nq, k_new))
-        lb_sorted = jnp.zeros((nq, k_new), queries_n.dtype)
+        lb_sorted = jnp.broadcast_to(
+            jnp.where(valid, 0.0, jnp.inf).astype(queries_n.dtype),
+            (nq, k_new),
+        )
 
     n_rounds = -(-k_new // batch)
     pad = n_rounds * batch - k_new
@@ -156,8 +161,7 @@ def _ingest_impl(
         )(starts)
         cb = None
         if use_cb:
-            terms = jax.vmap(_lb_keogh_terms)(cand, u, low)
-            cb = jnp.flip(jnp.cumsum(jnp.flip(terms, -1), -1), -1)
+            cb = jax.vmap(cascade_keogh_cumulative)(cand, u, low)
         lane_live = jnp.logical_and(st.active[:, None], lbs_b < st.ub[:, None])
         ub_lanes = jnp.where(
             lane_live,
@@ -176,7 +180,7 @@ def _ingest_impl(
         ub_new = jnp.where(improved, dmin, st.ub)
         starts_k = jnp.take_along_axis(starts, k[:, None], axis=1)[:, 0]
         best_new = jnp.where(
-            improved, offset + starts_k.astype(st.best.dtype), st.best
+            improved, offset0 + starts_k.astype(st.best.dtype), st.best
         )
         r_new = st.r + st.active.astype(st.r.dtype)
         more = r_new < n_rounds
@@ -199,8 +203,110 @@ def _ingest_impl(
         lanes=jnp.zeros((nq,), jnp.int32),
     )
     st = jax.lax.while_loop(cond, body, st0)
-    return new_tail, IngestResult(
-        ub=st.ub, best=st.best, rounds=st.r, lanes=st.lanes
+    return IngestResult(ub=st.ub, best=st.best, rounds=st.r, lanes=st.lanes)
+
+
+_INGEST_STATICS = (
+    "length", "window", "variant", "batch", "band_width", "chunk_lb",
+    "backend", "rows_per_step", "block_k", "row_block",
+)
+
+
+@partial(jax.jit, static_argnames=_INGEST_STATICS)
+def _ingest_impl(
+    tail,
+    chunk,
+    queries_n,
+    u,
+    low,
+    ub0,
+    best0,
+    offset,
+    length,
+    window,
+    variant,
+    batch,
+    band_width,
+    chunk_lb,
+    backend,
+    rows_per_step,
+    block_k,
+    row_block,
+):
+    """One raw-shape ingest: stats + cascade + carried-ub rounds, jitted.
+
+    ``tail`` is the carried ``length - 1`` boundary context, ``offset`` the
+    stream coordinate of ``tail[0]`` (so local window start ``s`` in the
+    context maps to stream start ``offset + s``). Retraces per distinct
+    (tail, chunk) shape — a fixed chunk size settles into one trace, but a
+    ragged final chunk costs a fresh compile; see ``pad_to`` on
+    ``ingest_chunk`` for the fixed-shape form that never retraces.
+    """
+    knobs = dict(
+        rows_per_step=rows_per_step, backend=backend, block_k=block_k,
+        row_block=row_block,
+    )
+    ctx = jnp.concatenate([tail, chunk])
+    keep = min(ctx.shape[0], length - 1)
+    new_tail = ctx[ctx.shape[0] - keep :]
+    k_new = ctx.shape[0] - length + 1
+    res = _ingest_core(
+        ctx, jnp.ones((k_new,), bool), queries_n, u, low, ub0, best0, offset,
+        length=length, window=window, variant=variant, batch=batch,
+        band_width=band_width, chunk_lb=chunk_lb, knobs=knobs,
+    )
+    return new_tail, res
+
+
+@partial(jax.jit, static_argnames=_INGEST_STATICS)
+def _ingest_impl_padded(
+    tail_buf,
+    tail_len,
+    chunk_buf,
+    chunk_len,
+    queries_n,
+    u,
+    low,
+    ub0,
+    best0,
+    offset0,
+    length,
+    window,
+    variant,
+    batch,
+    band_width,
+    chunk_lb,
+    backend,
+    rows_per_step,
+    block_k,
+    row_block,
+):
+    """Fixed-shape ingest: one trace for any mix of real chunk lengths.
+
+    ``tail_buf`` is a ``(length - 1,)`` buffer whose *last* ``tail_len``
+    entries are the real carried samples (right-aligned so the real region
+    ``[length - 1 - tail_len, length - 1 + chunk_len)`` of the concatenated
+    context is contiguous); ``chunk_buf`` is a ``(pad_to,)`` buffer whose
+    first ``chunk_len`` entries are the real chunk. ``tail_len``/
+    ``chunk_len`` are *dynamic* scalars — shapes never change, so mixed
+    chunk sizes (start-up, steady state, ragged final chunk) reuse one
+    compiled program. Windows touching buffer padding are masked invalid.
+    """
+    knobs = dict(
+        rows_per_step=rows_per_step, backend=backend, block_k=block_k,
+        row_block=row_block,
+    )
+    ctx = jnp.concatenate([tail_buf, chunk_buf])
+    k_buf = ctx.shape[0] - length + 1
+    starts = jnp.arange(k_buf)
+    lo = (length - 1) - tail_len
+    valid = jnp.logical_and(
+        starts >= lo, starts + length <= (length - 1) + chunk_len
+    )
+    return _ingest_core(
+        ctx, valid, queries_n, u, low, ub0, best0, offset0,
+        length=length, window=window, variant=variant, batch=batch,
+        band_width=band_width, chunk_lb=chunk_lb, knobs=knobs,
     )
 
 
@@ -223,6 +329,7 @@ def ingest_chunk(
     rows_per_step: int = 1,
     block_k: int = 8,
     row_block: int = 128,
+    pad_to: int | None = None,
 ) -> tuple[jax.Array, IngestResult]:
     """Advance Q standing queries over one stream chunk.
 
@@ -236,16 +343,46 @@ def ingest_chunk(
     must only invoke this when ``len(tail) + len(chunk) >= length`` (at least
     one newly-valid window — before that, only the tail needs extending).
 
+    ``pad_to`` selects the fixed-shape form: the tail and chunk are packed
+    into static ``(length - 1,)`` / ``(pad_to,)`` buffers with dynamic
+    lengths, so *every* ingest of the stream — regardless of the real chunk
+    size (``<= pad_to``) — reuses one compiled trace. ``None`` keeps the
+    raw-shape form (one trace per distinct shape).
+
     Returns ``(new_tail, IngestResult)``; feed ``new_tail`` and the updated
     incumbents into the next call.
     """
-    return _ingest_impl(
-        tail, chunk, queries_n, u, low, ub, best, offset,
+    if pad_to is None:
+        return _ingest_impl(
+            tail, chunk, queries_n, u, low, ub, best, offset,
+            length=length, window=window, variant=variant, batch=batch,
+            band_width=band_width, chunk_lb=chunk_lb,
+            backend=resolve_backend(backend),
+            rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
+        )
+    t = int(tail.shape[0])
+    c = int(chunk.shape[0])
+    if c > pad_to:
+        raise ValueError(f"chunk length {c} > pad_to {pad_to}; split first")
+    if t > length - 1:
+        raise ValueError(f"tail length {t} > length - 1 = {length - 1}")
+    dt = chunk.dtype
+    tail_buf = jnp.concatenate(
+        [jnp.zeros((length - 1 - t,), dt), jnp.asarray(tail, dt)]
+    )
+    chunk_buf = jnp.concatenate([chunk, jnp.zeros((pad_to - c,), dt)])
+    res = _ingest_impl_padded(
+        tail_buf, jnp.asarray(t, jnp.int32), chunk_buf,
+        jnp.asarray(c, jnp.int32), queries_n, u, low, ub, best,
+        offset - (length - 1 - t),  # stream coordinate of tail_buf[0]
         length=length, window=window, variant=variant, batch=batch,
         band_width=band_width, chunk_lb=chunk_lb,
         backend=resolve_backend(backend),
         rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
     )
+    keep = min(t + c, length - 1)
+    new_tail = jnp.concatenate([jnp.asarray(tail, dt), chunk])[t + c - keep :]
+    return new_tail, res
 
 
 def initial_incumbents(

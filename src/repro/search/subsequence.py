@@ -15,6 +15,34 @@ The search is one jitted program: cascade → best-first batches inside a
 ``lax.while_loop`` that stops when the next batch's smallest lower bound can
 no longer beat the incumbent (``ub``). Batches share ``ub`` (DESIGN.md §2.4).
 
+Round drivers (``rounds=``, DESIGN.md §2.5): the default ``"host"`` driver
+loops best-first batches around the batch primitive as above — one dispatch
+and one incumbent update per round, every lane of a round abandoning against
+the round-entry ``ub``. ``rounds="persistent"`` collapses the sweep into a
+*single* dispatch: all candidate windows are gathered/normalized once in
+best-first order and handed to ``core.batch.ea_pruned_dtw_persistent``,
+which carries the incumbent across ``block_k``-lane candidate blocks inside
+the launch (SMEM scratch on the Pallas backend, one while_loop on the jax
+backend) and skips LB-gated blocks on device. Same ``best_start``, and
+``best_dist`` equal up to the O(1)-ulp reformulation rounding documented in
+``core.ea_pruned_dtw`` (a tighter mid-sweep incumbent masks a different set
+of *suboptimal* float paths inside the winner's DP — the same effect as
+changing ``batch`` in the host driver; typically bitwise in practice). Two
+caveats at that same ulp scale: an *exact* distance tie between candidates
+can resolve to the other cominimizer's start, and on the Pallas backend the
+in-kernel ``cb`` prologue suffix-sums in tree order while host rounds use a
+sequential cumsum — abandon thresholds can differ by an ulp, which only
+matters for that same measure-zero tie case (the winner's survival, §2.2 of
+DESIGN.md, is independent of ``cb`` rounding). O(1)
+dispatches instead of O(rounds); ``ub`` tightens every ``block_k`` lanes
+instead of every ``batch``. The trade: the
+full window matrix is materialized up front (O(N·l) memory traffic), where
+the host driver gathers only the rounds it visits — prefer ``"host"`` when
+memory is tight or the LB ordering routinely stops after a round or two.
+The ``full``/``pruned`` baselines run the same block-granular sweep as a
+jitted loop (their per-lane kernels ignore per-lane thresholds). Persistent
+mode is counter-free; combine with ``with_info`` is rejected.
+
 Rounds come in two flavours. The default is the *counter-free fast round*:
 distances only, no pruning bookkeeping — the hot path pays nothing for stats
 it isn't asked for. ``with_info=True`` switches every round to the *stats
@@ -46,15 +74,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.backend import resolve_backend
-from repro.core.batch import ea_pruned_dtw_batch
-from repro.core.common import BIG
+from repro.core.batch import (
+    block_sweep,
+    ea_pruned_dtw_batch,
+    ea_pruned_dtw_persistent,
+)
+from repro.core.common import BIG, pad_lanes_to_blocks
 from repro.core.dtw import dtw
-from repro.core.lower_bounds import _lb_keogh_terms, envelope
+from repro.core.lower_bounds import cascade_keogh_cumulative, envelope
 from repro.core.pruned_dtw import pruned_dtw
 from repro.search.cascade import cascade
 from repro.search.znorm import gather_norm_windows, window_stats, znorm
 
 VARIANTS = ("full", "pruned", "eapruned", "eapruned_nolb")
+ROUND_DRIVERS = ("host", "persistent")
 
 
 class SearchResult(NamedTuple):
@@ -111,6 +144,7 @@ def _batch_stats(variant, query_n, cand, ub, window, band_width, cb, knobs):
     static_argnames=(
         "length", "window", "variant", "batch", "band_width", "chunk",
         "with_info", "backend", "rows_per_step", "block_k", "row_block",
+        "rounds",
     ),
 )
 def _subsequence_search_impl(
@@ -127,6 +161,7 @@ def _subsequence_search_impl(
     rows_per_step: int = 1,
     block_k: int = 8,
     row_block: int = 128,
+    rounds: str = "host",
 ) -> SearchResult:
     """Locate the closest z-normalized window of ``ref`` to ``query``.
 
@@ -136,14 +171,18 @@ def _subsequence_search_impl(
       length: window/query length (static).
       window: Sakoe-Chiba warping window in samples (static).
       variant: one of ``VARIANTS``.
-      batch: candidates per shared-ub round (static).
+      batch: candidates per shared-ub round (static; host driver only).
       with_info: collect rows/cells pruning counters (stats rounds). The
         default fast rounds leave ``SearchResult.rows``/``.cells`` at ``-1``.
       backend: DTW batch backend (see ``core.backend``); ``None`` = auto.
       rows_per_step: JAX-backend while_loop rows per iteration.
       block_k, row_block: Pallas-backend grid tiling.
+      rounds: ``"host"`` (best-first rounds around the batch primitive) or
+        ``"persistent"`` (whole sweep in one dispatch with a block-granular
+        carried incumbent — see module docstring).
     """
     assert variant in VARIANTS, variant
+    assert rounds in ROUND_DRIVERS, rounds
     knobs = dict(
         rows_per_step=rows_per_step, backend=backend, block_k=block_k,
         row_block=row_block,
@@ -164,6 +203,49 @@ def _subsequence_search_impl(
         lb_sorted = jnp.zeros((n_win,), query_n.dtype)
 
     u, low = envelope(query_n, window)
+
+    if rounds == "persistent":
+        assert not with_info, "persistent mode is counter-free"
+        # One gather of the whole best-first order; the sweep itself is a
+        # single dispatch with the incumbent carried across block_k-lane
+        # candidate blocks (core.batch.ea_pruned_dtw_persistent).
+        lb_p, order_p, _ = pad_lanes_to_blocks(block_k, lb_sorted, order)
+        cand_all = gather_norm_windows(ref, order_p, length, mu, sigma)
+        if variant in ("eapruned", "eapruned_nolb"):
+            envs = (u[None], low[None]) if use_cb else None
+            bd, bs, blocks = ea_pruned_dtw_persistent(
+                query_n[None], cand_all[None], lb_p[None], order_p[None],
+                jnp.full((1,), BIG, query_n.dtype), window=window,
+                band_width=band_width, envelopes=envs, **knobs,
+            )
+            best, ub, blocks = bs[0], bd[0], blocks[0]
+        else:
+            # full / pruned baselines: the shared block-granular sweep as a
+            # jitted loop (their per-lane kernels take no per-lane
+            # threshold, so there is no single-launch kernel form to hand
+            # off to; lane masking rides on the lb padding inside the sweep)
+            ub, best, blocks = block_sweep(
+                cand_all, lb_p, order_p, jnp.asarray(BIG, query_n.dtype),
+                block_k,
+                lambda c, lbb, ub_cur: _batch_distances(
+                    variant, query_n, c, ub_cur, window, band_width, None,
+                    knobs,
+                ),
+            )
+        # visited blocks are a best-first prefix, so only the final padded
+        # block can hold non-candidates — clamp to the real window count
+        lanes = jnp.minimum(blocks * block_k, n_win).astype(jnp.int32)
+        no_info = jnp.asarray(-1)
+        return SearchResult(
+            best_start=best,
+            best_dist=ub,
+            rounds=jnp.asarray(1),  # dispatches: one launch per search
+            lanes=lanes,
+            lb_pruned=jnp.asarray(n_win) - lanes,
+            rows=no_info,
+            cells=no_info,
+        )
+
     n_rounds = -(-n_win // batch)
     pad = n_rounds * batch - n_win
     order_p = jnp.concatenate([order, jnp.zeros((pad,), order.dtype)])
@@ -190,8 +272,7 @@ def _subsequence_search_impl(
         cand = gather_norm_windows(ref, starts, length, mu, sigma)
         cb = None
         if use_cb:
-            terms = _lb_keogh_terms(cand, u, low)
-            cb = jnp.flip(jnp.cumsum(jnp.flip(terms, -1), -1), -1)
+            cb = cascade_keogh_cumulative(cand, u, low)
         if with_info:
             d, rows, cells = _batch_stats(
                 variant, query_n, cand, st.ub, window, band_width, cb, knobs
@@ -249,6 +330,7 @@ def subsequence_search(
     rows_per_step: int = 1,
     block_k: int = 8,
     row_block: int = 128,
+    rounds: str = "host",
 ) -> SearchResult:
     """Locate the closest z-normalized window of ``ref`` to ``query``.
 
@@ -256,10 +338,19 @@ def subsequence_search(
     ``$REPRO_DTW_BACKEND`` env var, re-read every call) to a concrete name
     that becomes a static argument of the jitted search — see
     ``_subsequence_search_impl`` for the argument reference.
+    ``rounds="persistent"`` runs the whole best-first sweep in one dispatch
+    (module docstring); it is counter-free, so ``with_info`` is rejected.
     """
+    if rounds not in ROUND_DRIVERS:
+        raise ValueError(f"rounds {rounds!r} not in {ROUND_DRIVERS}")
+    if rounds == "persistent" and with_info:
+        raise ValueError(
+            "rounds='persistent' is counter-free; use the host driver for "
+            "with_info stats rounds"
+        )
     return _subsequence_search_impl(
         ref, query, length=length, window=window, variant=variant,
         batch=batch, band_width=band_width, chunk=chunk, with_info=with_info,
         backend=resolve_backend(backend), rows_per_step=rows_per_step,
-        block_k=block_k, row_block=row_block,
+        block_k=block_k, row_block=row_block, rounds=rounds,
     )

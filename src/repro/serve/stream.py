@@ -98,10 +98,13 @@ class StreamSearchEngine:
         starts from a previous stream segment or a served cache.
       ring_capacity: keep the last W raw samples for ``recent()`` monitoring
         (bounded memory); ``None`` keeps no sample history at all.
-
-    Each distinct chunk shape compiles once; a fixed chunk size settles into
-    a single reused trace after the stream start-up (the first ingest carries
-    a shorter tail).
+      stream_chunk: fixed ingest shape. ``None`` (legacy) traces per distinct
+        chunk shape — a fixed-size source settles into one steady-state
+        trace, but every ragged chunk (the short final one included) costs a
+        fresh compile. With ``stream_chunk=W`` the engine pads every ingest
+        to a static ``W``-sample buffer (splitting bigger arrivals into
+        ``W``-sized pieces first), so ONE compiled trace serves the whole
+        stream regardless of how the source chunks it.
     """
 
     def __init__(
@@ -119,11 +122,14 @@ class StreamSearchEngine:
         row_block: int = 128,
         ub_init: jax.Array | None = None,
         ring_capacity: int | None = None,
+        stream_chunk: int | None = None,
     ):
         if variant not in MULTI_VARIANTS:
             raise ValueError(f"variant must be one of {MULTI_VARIANTS}")
         if ring_capacity is not None and ring_capacity < 1:
             raise ValueError("ring_capacity must be >= 1")
+        if stream_chunk is not None and stream_chunk < 1:
+            raise ValueError("stream_chunk must be >= 1")
         q = jnp.atleast_2d(jnp.asarray(queries))
         self.length = int(length)
         self.window = int(window)
@@ -135,6 +141,7 @@ class StreamSearchEngine:
         self.rows_per_step = int(rows_per_step)
         self.block_k = int(block_k)
         self.row_block = int(row_block)
+        self.stream_chunk = None if stream_chunk is None else int(stream_chunk)
         self.queries_n = znorm(q[:, : self.length])
         self.u, self.low = jax.vmap(envelope, in_axes=(0, None))(
             self.queries_n, self.window
@@ -199,19 +206,33 @@ class StreamSearchEngine:
 
         Scans every window whose last sample arrives with this chunk. Chunks
         may have any (nonzero) length; windows straddling chunk boundaries
-        are handled via the carried tail.
+        are handled via the carried tail. With ``stream_chunk`` set, arrivals
+        bigger than the fixed ingest shape are split into ``stream_chunk``-
+        sized pieces (one dispatch each) and every piece is padded to the
+        one static shape — no retrace, whatever the source's chunking.
         """
         chunk = jnp.asarray(chunk, self._dtype).reshape(-1)
         if chunk.shape[0] == 0:
             return self.best()
         if self._ring is not None:
             self._ring.extend(np.asarray(chunk))
+        if self.stream_chunk is None:
+            self._ingest_piece(chunk, pad_to=None)
+        else:
+            for pos in range(0, int(chunk.shape[0]), self.stream_chunk):
+                self._ingest_piece(
+                    chunk[pos : pos + self.stream_chunk],
+                    pad_to=self.stream_chunk,
+                )
+        return self.best()
+
+    def _ingest_piece(self, chunk: jax.Array, pad_to: int | None) -> None:
         tail_len = int(self._tail.shape[0])
         if tail_len + int(chunk.shape[0]) < self.length:
             # Not a full window yet: extend the boundary context only.
             self._tail = jnp.concatenate([self._tail, chunk])
             self._n_seen += int(chunk.shape[0])
-            return self.best()
+            return
         offset = self._n_seen - tail_len  # stream coordinate of tail[0]
         self._tail, res = ingest_chunk(
             self._tail, chunk, self.queries_n, self.u, self.low,
@@ -220,7 +241,7 @@ class StreamSearchEngine:
             batch=self.batch, band_width=self.band_width,
             chunk_lb=self.chunk_lb, backend=self.backend,
             rows_per_step=self.rows_per_step, block_k=self.block_k,
-            row_block=self.row_block,
+            row_block=self.row_block, pad_to=pad_to,
         )
         self._ub, self._best = res.ub, res.best
         # Accumulate work counters as device values: reading them eagerly
@@ -229,4 +250,3 @@ class StreamSearchEngine:
         self._rounds = self._rounds + jnp.max(res.rounds)
         self._lanes = self._lanes + jnp.sum(res.lanes)
         self._n_seen += int(chunk.shape[0])
-        return self.best()

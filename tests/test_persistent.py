@@ -1,0 +1,240 @@
+"""Persistent round driver: one launch per search, block-carried incumbent.
+
+The contracts under test:
+
+  * ``rounds="persistent"`` returns the same ``best_start`` as the host
+    round driver and a ``best_dist`` equal up to the O(1)-ulp reformulation
+    rounding documented in ``core.ea_pruned_dtw`` (mid-sweep incumbents
+    differ between the two granularities, which can mask different
+    *suboptimal* float paths inside the winner's DP) — on both the ``jax``
+    and ``pallas_interpret`` backends, for all four search variants,
+    including final candidate blocks padded past ``n_win``.
+  * the multi-query persistent driver matches the multi host driver per
+    query, including ``ub_init`` seeds (a hopeless seed returns -1 and the
+    seed unchanged).
+  * a planted near-exact match makes the sweep all-pruned after the first
+    blocks: the persistent driver's ``lanes`` stay a small fraction of the
+    window count while the result still matches.
+  * the persistent primitive's on-device LB gating never runs a block whose
+    bounds cannot beat the incumbent (``blocks == 0`` for a hopeless seed).
+  * persistent mode is counter-free: combining with ``with_info`` raises.
+
+Run in the forced ``REPRO_DTW_BACKEND=pallas_interpret`` pass of
+``scripts/check.sh`` too, so the exact persistent kernel program is
+exercised in the local gate.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.batch import ea_pruned_dtw_persistent
+from repro.core.common import BIG
+from repro.search import multi_query_search, subsequence_search
+from repro.search.subsequence import ROUND_DRIVERS, VARIANTS
+
+BACKENDS = ("jax", "pallas_interpret")
+
+# f64 ulp-scale for the jax backend under x64, f32-scale for the kernel;
+# one tolerance covers both (values are otherwise bit-identical per lane).
+DIST_RTOL = 1e-6
+
+
+def _mk(seed=3, n_ref=900, length=96):
+    rng = np.random.default_rng(seed)
+    ref = jnp.asarray(np.cumsum(rng.normal(size=n_ref)))
+    q = jnp.asarray(np.cumsum(rng.normal(size=length)))
+    return ref, q, length, 9
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_persistent_matches_host_all_variants(backend, variant):
+    ref, q, length, w = _mk()
+    host = subsequence_search(
+        ref, q, length=length, window=w, batch=64, variant=variant,
+        backend=backend,
+    )
+    pers = subsequence_search(
+        ref, q, length=length, window=w, batch=64, variant=variant,
+        backend=backend, rounds="persistent",
+    )
+    assert int(pers.best_start) == int(host.best_start)
+    np.testing.assert_allclose(
+        float(pers.best_dist), float(host.best_dist), rtol=DIST_RTOL
+    )
+    assert int(pers.rounds) == 1  # one dispatch by construction
+    assert int(pers.lanes) > 0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_persistent_padded_final_block(backend):
+    """n_win chosen so the final block_k block is mostly padding lanes, and
+    the true nearest neighbour planted INSIDE that ragged final block's
+    window range — padding lanes must die without hiding it."""
+    rng = np.random.default_rng(11)
+    length, w = 64, 6
+    n_ref = 64 + 13 * 7  # n_win = 92 = 11*8 + 4: ragged for block_k=8
+    q_raw = np.cumsum(rng.normal(size=length))
+    ref_np = np.cumsum(rng.normal(size=n_ref))
+    plant = n_ref - length  # the very last window
+    ref_np[plant : plant + length] = 2.0 * q_raw - 5.0  # z-norm identical
+    ref = jnp.asarray(ref_np)
+    q = jnp.asarray(q_raw)
+    host = subsequence_search(
+        ref, q, length=length, window=w, batch=32, backend=backend
+    )
+    pers = subsequence_search(
+        ref, q, length=length, window=w, batch=32, backend=backend,
+        rounds="persistent",
+    )
+    assert int(host.best_start) == plant
+    assert int(pers.best_start) == plant
+    np.testing.assert_allclose(
+        float(pers.best_dist), float(host.best_dist), rtol=DIST_RTOL
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("variant", ("eapruned", "eapruned_nolb"))
+def test_persistent_multi_matches_host(backend, variant):
+    rng = np.random.default_rng(7)
+    ref = jnp.asarray(np.cumsum(rng.normal(size=900)))
+    queries = jnp.asarray(np.cumsum(rng.normal(size=(4, 96)), axis=1))
+    host = multi_query_search(
+        ref, queries, length=96, window=9, batch=64, variant=variant,
+        backend=backend,
+    )
+    pers = multi_query_search(
+        ref, queries, length=96, window=9, batch=64, variant=variant,
+        backend=backend, rounds="persistent",
+    )
+    assert np.array_equal(
+        np.asarray(host.best_start), np.asarray(pers.best_start)
+    )
+    np.testing.assert_allclose(
+        np.asarray(pers.best_dist, np.float64),
+        np.asarray(host.best_dist, np.float64), rtol=DIST_RTOL,
+    )
+    assert np.all(np.asarray(pers.rounds) == 1)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_persistent_multi_ub_init_seeds(backend):
+    """Per-query seeds: a hopeless seed is never beaten (best -1, seed
+    returned); other queries match the host driver with the same seeds."""
+    rng = np.random.default_rng(31)
+    ref = jnp.asarray(np.cumsum(rng.normal(size=900)))
+    queries = jnp.asarray(np.cumsum(rng.normal(size=(4, 96)), axis=1))
+    seeds = np.full((4,), 1e30)
+    seeds[1] = 1e-6
+    host = multi_query_search(
+        ref, queries, length=96, window=9, batch=64, backend=backend,
+        ub_init=jnp.asarray(seeds),
+    )
+    pers = multi_query_search(
+        ref, queries, length=96, window=9, batch=64, backend=backend,
+        ub_init=jnp.asarray(seeds), rounds="persistent",
+    )
+    assert int(pers.best_start[1]) == -1
+    assert float(pers.best_dist[1]) == pytest.approx(1e-6)
+    assert int(pers.lanes[1]) == 0  # gated before a single block ran
+    assert np.array_equal(
+        np.asarray(host.best_start), np.asarray(pers.best_start)
+    )
+    np.testing.assert_allclose(
+        np.asarray(pers.best_dist, np.float64),
+        np.asarray(host.best_dist, np.float64), rtol=DIST_RTOL,
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_persistent_all_pruned_after_first_blocks(backend):
+    """A planted exact match: the incumbent collapses in the first blocks
+    and the on-device gate prunes the rest of the sweep — ``lanes`` stays a
+    small fraction of the window count."""
+    rng = np.random.default_rng(5)
+    length, w = 96, 9
+    q_raw = np.cumsum(rng.normal(size=length))
+    ref_np = np.cumsum(rng.normal(size=1200))
+    plant = 700
+    ref_np[plant : plant + length] = 1.5 * q_raw + 2.0  # z-norm identical
+    ref = jnp.asarray(ref_np)
+    q = jnp.asarray(q_raw)
+    host = subsequence_search(
+        ref, q, length=length, window=w, batch=64, backend=backend
+    )
+    pers = subsequence_search(
+        ref, q, length=length, window=w, batch=64, backend=backend,
+        rounds="persistent",
+    )
+    n_win = 1200 - length + 1
+    assert int(host.best_start) == plant
+    assert int(pers.best_start) == plant
+    np.testing.assert_allclose(
+        float(pers.best_dist), float(host.best_dist), rtol=DIST_RTOL
+    )
+    # the LB cascade puts the planted window first; after it lands, the
+    # carried incumbent gates (nearly) everything else on device
+    assert int(pers.lanes) <= n_win // 4
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_persistent_primitive_hopeless_seed_runs_zero_blocks(backend):
+    """Direct primitive check: a seed below every lower bound never runs a
+    block (the pl.when gate / loop exit), and returns the seed with -1."""
+    rng = np.random.default_rng(13)
+    n, k, w = 64, 24, 6
+    from repro.search.znorm import znorm
+
+    q = znorm(jnp.asarray(np.cumsum(rng.normal(size=n)), jnp.float32))
+    c = znorm(
+        jnp.asarray(np.cumsum(rng.normal(size=(k, n)), axis=1), jnp.float32)
+    )
+    lb = jnp.full((1, k), 10.0, jnp.float32)  # any positive bound works
+    starts = jnp.arange(k, dtype=jnp.int32)[None]
+    bd, bs, blocks = ea_pruned_dtw_persistent(
+        q[None], c[None], lb, starts, jnp.full((1,), 1e-3), window=w,
+        backend=backend, block_k=8, row_block=32,
+    )
+    assert int(blocks[0]) == 0
+    assert int(bs[0]) == -1
+    assert float(bd[0]) == pytest.approx(1e-3)
+
+
+def test_persistent_rejects_with_info_and_bad_driver():
+    ref, q, length, w = _mk()
+    with pytest.raises(ValueError):
+        subsequence_search(
+            ref, q, length=length, window=w, rounds="persistent",
+            with_info=True,
+        )
+    with pytest.raises(ValueError):
+        subsequence_search(ref, q, length=length, window=w, rounds="turbo")
+    with pytest.raises(ValueError):
+        multi_query_search(
+            ref, q[None], length=length, window=w, rounds="persistent",
+            with_info=True,
+        )
+    assert set(ROUND_DRIVERS) == {"host", "persistent"}
+
+
+def test_persistent_tuning_knobs_same_answer():
+    """block_k / row_block / band_width change scheduling, not results."""
+    ref, q, length, w = _mk(seed=17)
+    base = subsequence_search(
+        ref, q, length=length, window=w, backend="jax", rounds="persistent"
+    )
+    for kwargs in (
+        dict(backend="jax", block_k=4),
+        dict(backend="pallas_interpret", block_k=4, row_block=16),
+        dict(backend="jax", band_width=length),
+    ):
+        got = subsequence_search(
+            ref, q, length=length, window=w, rounds="persistent", **kwargs
+        )
+        assert int(got.best_start) == int(base.best_start)
+        np.testing.assert_allclose(
+            float(got.best_dist), float(base.best_dist), rtol=1e-5
+        )

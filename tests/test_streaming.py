@@ -271,6 +271,53 @@ def test_no_ring_raises():
         eng.recent()
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fixed_shape_ingest_parity(backend):
+    """stream_chunk mode (padded fixed-shape ingest, split bigger arrivals)
+    ends exactly where offline search and the legacy engine end, for
+    chunkings that exercise start-up, ragged, and bigger-than-W arrivals."""
+    ref, queries = _mk_stream()
+    length, w = queries.shape[1], 9
+    off = multi_query_search(
+        ref, queries, length=length, window=w, batch=64, backend=backend
+    )
+    for sizes in [(300, 300, 300), (96, 1, 500, 303), (900,), (512, 388)]:
+        eng = StreamSearchEngine(
+            queries, length=length, window=w, batch=64, backend=backend,
+            stream_chunk=256,
+        )
+        _feed(eng, ref, sizes)
+        bs, bd = eng.best()
+        assert np.array_equal(np.asarray(bs), np.asarray(off.best_start)), sizes
+        np.testing.assert_allclose(
+            np.asarray(bd), np.asarray(off.best_dist), rtol=2e-5
+        )
+
+
+def test_fixed_shape_ingest_single_trace():
+    """Regression (ROADMAP PR-3 follow-up): with stream_chunk set, mixed
+    chunk sizes — start-up, steady state, ragged final chunk — all reuse ONE
+    compiled trace of the padded ingest (jax.jit cache inspection)."""
+    from repro.search.streaming import _ingest_impl_padded
+
+    ref, queries = _mk_stream(seed=41)
+    length, w = queries.shape[1], 9
+    eng = StreamSearchEngine(
+        queries, length=length, window=w, batch=32, backend="jax",
+        stream_chunk=200,
+    )
+    before = _ingest_impl_padded._cache_size()
+    _feed(eng, ref, (30, 170, 200, 77, 123, 200, 100))  # mixed, ragged end
+    after = _ingest_impl_padded._cache_size()
+    assert after - before <= 1, (before, after)
+    # and at least one padded dispatch actually ran through the jit
+    assert after >= 1
+    off = multi_query_search(
+        ref, queries, length=length, window=w, batch=32, backend="jax"
+    )
+    assert np.array_equal(np.asarray(eng.best()[0]), np.asarray(off.best_start))
+
+
 def test_small_chunks_before_first_window():
     """Chunks shorter than the query length only extend the tail until a
     window completes; best stays empty meanwhile."""
