@@ -1,0 +1,114 @@
+"""search/robustness: quarantine-prepass overhead on clean data.
+
+The non-finite quarantine (DESIGN.md §2.6) is on by default, so its cost on
+*clean* data is a tax every search pays. The contract is that the tax is one
+extra prefix-sum pass over the ingest context — the same O(N) shape as the
+window stats themselves — and therefore within timing noise of running with
+the prepass compiled out. This bench pins that claim on the streaming
+engine, where the prepass runs once per ingest (the worst case: offline
+search amortizes one prepass over the whole series).
+
+Both arms feed the identical clean chunk schedule through identical engines
+except for ``quarantine=``; parity of the final ``(start, dist)`` answers is
+asserted before timing anything. Measurement is the same alternating paired
+protocol as ``bench_stream`` (off, on, off, on, ...) so both arms share
+background load; ``quarantine`` is a static jit arg, so each arm owns its
+trace and both are warmed before the clock starts.
+
+CSV rows (name,us_per_call,derived):
+  search/robustness/q{Q}/l{l}/c{chunk}/{backend}/noprepass — best-of us
+  search/robustness/q{Q}/l{l}/c{chunk}/{backend}/prepass   — best-of us
+  search/robustness/q{Q}/l{l}/c{chunk}/{backend}/overhead  — best-of ratio
+    (off/on; 1.0 = free; ``speedup=`` so >20% regressions gate bench-diff,
+    ``overhead_pct`` is the headline the acceptance bar reads)
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import make_dataset, make_queries
+from repro.serve import StreamSearchEngine
+
+
+def run(
+    ref_len: int = 16_000,
+    length: int = 128,
+    window_ratio: float = 0.1,
+    n_queries: int = 4,
+    batch: int = 64,
+    chunk: int = 2_000,
+    pairs: int = 5,
+    backend: str = "jax",
+    dataset: str = "ECG",
+):
+    w = max(int(length * window_ratio), 1)
+    ref = jnp.asarray(make_dataset(dataset, ref_len, seed=0), jnp.float32)
+    queries = jnp.asarray(
+        make_queries(dataset, n_queries, length, seed=1), jnp.float32
+    )
+    bounds = list(range(chunk, ref_len + 1, chunk))
+    if not bounds or bounds[-1] != ref_len:
+        bounds.append(ref_len)
+
+    def feed(quarantine: bool):
+        eng = StreamSearchEngine(
+            queries, length=length, window=w, batch=batch, backend=backend,
+            quarantine=quarantine,
+        )
+        lo = 0
+        for hi in bounds:
+            eng.ingest(ref[lo:hi])
+            lo = hi
+        return eng
+
+    # warmup/compile both traces, then pin clean-data parity: the prepass
+    # must change nothing but the (zero) quarantine count
+    e_on, e_off = feed(True), feed(False)
+    (s_on, d_on), (s_off, d_off) = e_on.best(), e_off.best()
+    agree = bool(
+        np.array_equal(np.asarray(s_on), np.asarray(s_off))
+        and np.array_equal(np.asarray(d_on), np.asarray(d_off))
+        and e_on.quarantined_windows == 0
+    )
+
+    t_off, t_on, ratios = [], [], []
+    for _ in range(pairs):
+        t0 = time.time()
+        jax.block_until_ready(feed(False).best()[1])
+        toff = time.time() - t0
+        t0 = time.time()
+        jax.block_until_ready(feed(True).best()[1])
+        ton = time.time() - t0
+        t_off.append(toff)
+        t_on.append(ton)
+        ratios.append(toff / ton if ton > 0 else 0.0)
+    median_ratio = statistics.median(ratios)
+    ratio = min(t_off) / min(t_on) if min(t_on) > 0 else 0.0
+    overhead_pct = (1.0 / ratio - 1.0) * 100.0 if ratio > 0 else float("inf")
+
+    tag = f"search/robustness/q{n_queries}/l{length}/c{chunk}/{backend}"
+    return [
+        (f"{tag}/noprepass", min(t_off) * 1e6,
+         f"agree={agree};chunks={len(bounds)}"),
+        (f"{tag}/prepass", min(t_on) * 1e6,
+         f"agree={agree};quarantined={e_on.quarantined_windows}"),
+        (f"{tag}/overhead", ratio,
+         f"speedup={ratio:.4f};overhead_pct={overhead_pct:.2f};"
+         f"median_pair_ratio={median_ratio:.4f};pairs={pairs}"),
+    ]
+
+
+def main() -> None:
+    rows = run()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,8 @@ Prints ``name,us_per_call,derived`` CSV:
                      suite/SPEEDUP/* rows carry the headline ratios
   * search/multiq/* — one multi_query_search call vs Q sequential searches
   * search/stream/* — streaming engine ingest vs full recompute per chunk
+  * search/robustness/* — quarantine-prepass overhead on clean data
+                     (must sit within noise of the prepass compiled out)
   * search/persistent/* — one-launch persistent sweep vs host round driver
                      (both backends; dispatch counts in the speedup rows)
   * dtw/*          — per-computation EA/Pruned/full work + time comparison
@@ -59,6 +61,7 @@ def main() -> None:
         bench_kernels,
         bench_multiq,
         bench_persistent,
+        bench_robustness,
         bench_stream,
         bench_suites,
     )
@@ -69,8 +72,8 @@ def main() -> None:
     # keeps cross-PR comparisons scoped to like-for-like artifacts
     artifact = {
         "meta": {"quick": bool(args.quick), "backend": jax.default_backend()},
-        "suites": [], "multiq": [], "stream": [], "persistent": [],
-        "dtw": [], "roofline": [],
+        "suites": [], "multiq": [], "stream": [], "robustness": [],
+        "persistent": [], "dtw": [], "roofline": [],
     }
 
     print("name,us_per_call,derived")
@@ -98,6 +101,16 @@ def main() -> None:
     for name, us, derived in st_rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
         artifact["stream"].append(_suite_record(name, us, derived))
+
+    if args.quick:
+        # like bench_persistent below, the two arms are near-identical in
+        # cost, so the ratio needs extra pairs to beat the box's noise
+        rb_rows = bench_robustness.run(ref_len=6_000, chunk=1_500, pairs=9)
+    else:
+        rb_rows = bench_robustness.run()
+    for name, us, derived in rb_rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+        artifact["robustness"].append(_suite_record(name, us, derived))
 
     if args.quick:
         # more pairs than the other quick suites: the two arms are within

@@ -22,7 +22,7 @@ import subprocess
 import sys
 import tempfile
 
-SECTIONS = ("suites", "multiq", "stream", "persistent", "dtw")
+SECTIONS = ("suites", "multiq", "stream", "robustness", "persistent", "dtw")
 
 
 def _index(artifact: dict) -> dict[str, dict]:

@@ -16,9 +16,17 @@ echo "== kernel program on CPU (pallas_interpret) =="
 # not just on TPU.
 REPRO_DTW_BACKEND=pallas_interpret python -m pytest -x -q \
     tests/test_backend.py tests/test_multi_query.py tests/test_streaming.py \
-    tests/test_persistent.py
+    tests/test_persistent.py tests/test_robustness.py
 
-echo "== benchmark smoke (--quick) =="
-python -m benchmarks.run --quick --skip-roofline --json BENCH_dtw.json
+echo "== benchmark smoke (--quick) + SPEEDUP regression gate =="
+# One quick bench run serves both purposes: diff its artifact against the
+# committed BENCH_dtw.json (>20% regression in any SPEEDUP row fails the
+# check), then promote it to be the new committed artifact.
+bench_tmp="$(mktemp --suffix=.json bench_check_XXXXXX)"
+trap 'rm -f "$bench_tmp"' EXIT
+python -m benchmarks.run --quick --skip-roofline --json "$bench_tmp"
+python scripts/bench_diff.py --baseline BENCH_dtw.json --current "$bench_tmp"
+mv "$bench_tmp" BENCH_dtw.json
+trap - EXIT
 
 echo "== check OK =="

@@ -54,6 +54,17 @@ Streaming knobs (``serve.stream.StreamSearchEngine``):
   ``ring_capacity`` — monitoring ring over the last W raw samples
                       (``None`` = keep no sample history; the search itself
                       only ever needs the ``length - 1`` boundary tail).
+
+Robustness knobs (DESIGN.md §2.6):
+
+  ``quarantine``    — exclude windows overlapping non-finite reference
+                      samples instead of letting them poison results
+                      (default on; the prepass is one extra prefix-sum pass
+                      — within noise on clean data, pinned by the
+                      ``search/robustness`` bench row).
+  ``debug_checks``  — per-ingest tripwire that no NaN reached the carried
+                      incumbents; synchronous, debugging only (also
+                      ``$REPRO_DEBUG_CHECKS``).
 """
 from dataclasses import dataclass
 
@@ -76,6 +87,8 @@ class SearchConfig:
     warm_start: int = 0              # multi-query incumbent-seeding prepass
     stream_chunk: int = 8192         # samples per streaming ingest (serve.stream)
     ring_capacity: int | None = None  # monitoring ring over last W samples
+    quarantine: bool = True          # non-finite window quarantine (§2.6)
+    debug_checks: bool = False       # incumbent NaN tripwire (debug only)
 
     @property
     def window(self) -> int:

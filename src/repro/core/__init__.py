@@ -15,8 +15,15 @@ Public API:
   resolve_backend, BACKENDS     — Pallas-vs-JAX backend selection
   pruned_dtw                    — PrunedDTW baseline (row-min abandon)
   envelope, lb_keogh, lb_kim_fl — lower bounds
+  SearchInputError, NonFiniteInputError, StreamStateError
+                                — typed guard taxonomy (core.guards)
 """
 from repro.core.backend import BACKENDS, resolve_backend
+from repro.core.guards import (
+    NonFiniteInputError,
+    SearchInputError,
+    StreamStateError,
+)
 from repro.core.batch import (
     ea_pruned_dtw_batch,
     ea_pruned_dtw_multi_batch,
@@ -53,6 +60,9 @@ __all__ = [
     "lb_keogh",
     "lb_keogh_pair",
     "lb_kim_fl",
+    "NonFiniteInputError",
+    "SearchInputError",
+    "StreamStateError",
     "pruned_dtw",
     "resolve_backend",
 ]

@@ -51,6 +51,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import guards
 from repro.core.backend import resolve_backend
 from repro.core.common import DEAD_LANE_UB, pad_lanes_to_blocks
 from repro.core.ea_pruned_dtw import EAInfo, ea_pruned_dtw_banded
@@ -182,7 +183,12 @@ def ea_pruned_dtw_batch(
 
     Returns: ``(K,)`` distances (``+inf`` where abandoned); with ``with_info``
       a ``(distances, EAInfo)`` tuple of per-lane arrays.
+
+    Raises ``core.guards.SearchInputError`` on malformed shapes/knobs and
+    ``NonFiniteInputError`` on a non-finite query (value checks run only on
+    concrete arrays — trace-safe when called from jitted drivers).
     """
+    guards.check_batch_args(query, candidates, ub, window, cb=cb)
     resolved = resolve_backend(backend)
     if resolved != "jax" and jnp.ndim(query) != 1:
         resolved = "jax"  # kernel is univariate; see core.backend docstring
@@ -236,8 +242,7 @@ def ea_pruned_dtw_multi_batch(
     Returns: ``(Q, K)`` distances (``+inf`` where abandoned); with
       ``with_info`` a ``(distances, EAInfo)`` tuple of ``(Q, K)`` arrays.
     """
-    if jnp.ndim(queries) != 2:
-        raise ValueError("multi-query batch requires (Q, m) univariate queries")
+    guards.check_batch_args(queries, candidates, ub, window, cb=cb, multi=True)
     resolved = resolve_backend(backend)
     if resolved == "jax":
         return _multi_jax(

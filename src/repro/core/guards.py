@@ -1,0 +1,249 @@
+"""Typed input guards for the search serving surface (DESIGN.md §2.6).
+
+The speed layers (kernel, multi-query, streaming, persistent sweep) assume
+well-formed inputs; before this module, a malformed call died deep inside a
+jitted program with a shape-error traceback, and a non-finite query silently
+poisoned every distance it touched. This module is the one validation
+chokepoint every public entry point calls:
+
+  * ``ea_pruned_dtw_batch`` / ``ea_pruned_dtw_multi_batch`` — batch shapes,
+    dtypes, knob sanity, ``cb >= 0``.
+  * ``subsequence_search`` / ``multi_query_search`` — reference/query shape
+    and dtype, length-vs-window sanity, query finiteness.
+  * ``ingest_chunk`` / ``StreamSearchEngine`` — chunk dtype/ndim up front
+    (instead of failing inside jit), stream-state errors carrying the stream
+    position.
+
+Exception taxonomy
+------------------
+``SearchInputError``      — malformed arguments (shape/dtype/ndim/knobs).
+                            Subclasses ``ValueError``: existing callers that
+                            catch ``ValueError`` keep working.
+``NonFiniteInputError``   — a *query side* array contains NaN/Inf. Reference
+                            side non-finites are NOT an error: they are
+                            quarantined (``search.znorm.window_finite_mask``)
+                            and the engine keeps serving.
+``StreamStateError``      — a streaming call is inconsistent with the
+                            engine's carried state (chunk bigger than the
+                            fixed ingest shape, tail overflow, restoring a
+                            mismatched checkpoint). Carries ``n_seen`` /
+                            ``chunk_index`` context when known. Subclasses
+                            ``RuntimeError`` so retry loops that treat
+                            ``ValueError`` as transient do not retry a
+                            caller bug — ``serve.supervisor`` explicitly
+                            re-raises it instead of retrying.
+
+Trace safety: shape/dtype/ndim checks read only static metadata and are safe
+(and free) inside jit; *value* checks (finiteness, ``cb >= 0``) run only on
+concrete arrays and are skipped for tracers — the drivers call this
+chokepoint both from their un-jitted wrappers (concrete: full validation)
+and from inside jitted round loops (tracers: static validation only).
+
+Debug mode (``jax.experimental.checkify``)
+------------------------------------------
+``checked_call(fn, *args)`` wraps a jitted function with checkify NaN
+checks: any primitive that *produces* a NaN on device raises a
+``NonFiniteInputError`` on the host with the failing check's location,
+instead of the NaN riding silently into an incumbent. Two scope limits:
+checkify does not discharge through the Pallas kernels, and it rejects
+vmapped while-loops (checkify-of-vmap-of-while) — which the batched DTW
+round loop is on every backend. So ``checked_call`` serves the
+checkify-compatible pieces (stats, cascade, plain jitted math), while the
+engines' ``debug_checks=True`` opt-in (or ``REPRO_DEBUG_CHECKS``) enforces
+the invariant that actually matters at the boundary it can see: no NaN ever
+reaches the carried incumbents, checked synchronously after every ingest.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEBUG_ENV_VAR = "REPRO_DEBUG_CHECKS"
+
+
+class SearchInputError(ValueError):
+    """Malformed search input: shape, dtype, ndim, or knob out of contract."""
+
+
+class NonFiniteInputError(SearchInputError):
+    """A query-side array contains NaN/Inf (reference non-finites are
+    quarantined, not rejected — see DESIGN.md §2.6)."""
+
+
+class StreamStateError(RuntimeError):
+    """A streaming call is inconsistent with the engine's carried state.
+
+    ``n_seen`` (stream samples ingested so far) and ``chunk_index`` ride
+    along when the caller knows them, so an operator can locate the failing
+    ingest in a long-lived stream.
+    """
+
+    def __init__(self, message: str, n_seen=None, chunk_index=None):
+        ctx = []
+        if n_seen is not None:
+            ctx.append(f"n_seen={int(n_seen)}")
+        if chunk_index is not None:
+            ctx.append(f"chunk_index={int(chunk_index)}")
+        if ctx:
+            message = f"{message} [{', '.join(ctx)}]"
+        super().__init__(message)
+        self.n_seen = None if n_seen is None else int(n_seen)
+        self.chunk_index = None if chunk_index is None else int(chunk_index)
+
+
+def is_concrete(x) -> bool:
+    """True when ``x`` holds real values (not a jit/vmap tracer)."""
+    return not isinstance(x, jax.core.Tracer)
+
+
+def _ndim(x) -> int:
+    return np.ndim(x) if not hasattr(x, "ndim") else int(x.ndim)
+
+
+def ensure_series(x, name: str, ndim: int = 1, min_len: int | None = None):
+    """Static checks on one array argument: ndim, inexact dtype, length."""
+    if _ndim(x) != ndim:
+        raise SearchInputError(
+            f"{name} must be {ndim}-D, got shape {jnp.shape(x)}"
+        )
+    dt = jnp.result_type(x)
+    if not jnp.issubdtype(dt, jnp.inexact):
+        raise SearchInputError(
+            f"{name} must have a floating dtype, got {dt}"
+        )
+    if min_len is not None and jnp.shape(x)[-1] < min_len:
+        raise SearchInputError(
+            f"{name} last-axis length {jnp.shape(x)[-1]} < required "
+            f"{min_len} (shape {jnp.shape(x)})"
+        )
+    return x
+
+
+def ensure_finite(x, name: str):
+    """Value check: reject NaN/Inf. Skipped on tracers (trace-safe)."""
+    if is_concrete(x) and not bool(jnp.all(jnp.isfinite(x))):
+        bad = int(jnp.sum(~jnp.isfinite(x)))
+        raise NonFiniteInputError(
+            f"{name} contains {bad} non-finite value(s); queries must be "
+            "finite (reference-side non-finites are quarantined instead)"
+        )
+    return x
+
+
+def ensure_knobs(
+    length: int | None = None,
+    window: int | None = None,
+    batch: int | None = None,
+    band_width: int | None = None,
+    block_k: int | None = None,
+    row_block: int | None = None,
+    rows_per_step: int | None = None,
+):
+    """Knob sanity shared by every driver; raises ``SearchInputError``."""
+    if length is not None and int(length) < 2:
+        raise SearchInputError(f"length must be >= 2, got {length}")
+    if window is not None and int(window) < 0:
+        raise SearchInputError(f"window must be >= 0, got {window}")
+    if length is not None and window is not None and int(window) >= int(length):
+        raise SearchInputError(
+            f"window {window} must be < length {length} (a Sakoe-Chiba band "
+            "wider than the series is the full DP — pass length - 1 at most)"
+        )
+    for knob, val in (
+        ("batch", batch), ("band_width", band_width), ("block_k", block_k),
+        ("row_block", row_block), ("rows_per_step", rows_per_step),
+    ):
+        if val is not None and int(val) < 1:
+            raise SearchInputError(f"{knob} must be >= 1, got {val}")
+
+
+def check_batch_args(query, candidates, ub, window, cb=None, multi=False):
+    """Chokepoint for the batch primitives (core.batch entry points).
+
+    Static shape/dtype/knob checks always run (trace-safe); value checks
+    (query finiteness, ``cb >= 0``) run only on concrete arrays. ``multi``
+    selects the ``(Q, m)`` x ``(Q, K, m)`` contract, else ``(m[, d])`` x
+    ``(K, m[, d])``.
+    """
+    qnd = _ndim(query)
+    cnd = _ndim(candidates)
+    if multi:
+        if qnd != 2:
+            raise SearchInputError(
+                "multi-query batch requires (Q, m) univariate queries, got "
+                f"shape {jnp.shape(query)}"
+            )
+        if cnd != 3:
+            raise SearchInputError(
+                f"multi-query candidates must be (Q, K, m), got shape "
+                f"{jnp.shape(candidates)}"
+            )
+        if jnp.shape(candidates)[0] != jnp.shape(query)[0]:
+            raise SearchInputError(
+                f"candidates Q={jnp.shape(candidates)[0]} != queries "
+                f"Q={jnp.shape(query)[0]}"
+            )
+    else:
+        if qnd not in (1, 2):
+            raise SearchInputError(
+                f"query must be (m,) or (m, dims), got shape {jnp.shape(query)}"
+            )
+        if cnd != qnd + 1:
+            raise SearchInputError(
+                f"candidates must be (K,) + query shape {jnp.shape(query)}, "
+                f"got shape {jnp.shape(candidates)}"
+            )
+    m = jnp.shape(query)[1 if multi else 0]
+    cm = jnp.shape(candidates)[2 if multi else 1]
+    if cm != m:
+        raise SearchInputError(
+            f"candidate length {cm} != query length {m}"
+        )
+    ensure_knobs(window=window)
+    if cb is not None:
+        if jnp.shape(cb)[-1] != m:
+            raise SearchInputError(
+                f"cb last-axis length {jnp.shape(cb)[-1]} != query length {m}"
+            )
+        if is_concrete(cb) and not bool(jnp.all(jnp.asarray(cb) >= 0)):
+            raise SearchInputError(
+                "cb must be non-negative (cumulative LB_Keogh suffix sums)"
+            )
+    ensure_finite(query, "query" if not multi else "queries")
+    if is_concrete(ub) and bool(jnp.any(jnp.isnan(jnp.asarray(ub)))):
+        raise NonFiniteInputError("ub contains NaN (use +inf / BIG for cold)")
+
+
+def debug_checks_enabled(flag: bool | None = None) -> bool:
+    """Resolve the debug-checks opt-in: explicit flag, else env var."""
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get(DEBUG_ENV_VAR, "").strip().lower() in (
+        "1", "true", "yes", "on"
+    )
+
+
+def checked_call(fn, *args, **kwargs):
+    """Run ``fn`` under checkify NaN checks; raise on any device-side NaN.
+
+    ``fn`` may be jitted (checkify discharges through jit). Any primitive
+    producing a NaN raises ``NonFiniteInputError`` with the check's source
+    location — the on-device finiteness tripwire for debug mode. Not
+    applicable to the batched DTW dispatches themselves (their vmapped
+    while-loops are outside checkify's support; see module docstring).
+    """
+    from jax.experimental import checkify
+
+    err, out = checkify.checkify(fn, errors=checkify.nan_checks)(
+        *args, **kwargs
+    )
+    try:
+        err.throw()
+    except checkify.JaxRuntimeError as e:
+        raise NonFiniteInputError(
+            f"debug-mode NaN check tripped on device: {e}"
+        ) from e
+    return out

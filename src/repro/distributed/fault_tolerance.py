@@ -13,6 +13,11 @@ tests:
     the flagged hook triggers re-scheduling, here it records and reports.
     Lockstep designs (search rounds, microbatch scans) bound a straggler's
     blast radius to one round, see search/distributed.py.
+
+The serving tier mirrors this shape: ``serve.supervisor.SearchSupervisor``
+wraps ``StreamSearchEngine`` with the same checkpoint/retry/replay
+semantics (and reuses ``StragglerMonitor`` per ingest) — one supervision
+idiom across training and serving.
   * ``elastic_reshard`` — rebuilds train state for a smaller/larger "data"
     axis: with parameter/optimizer sharding expressed as PartitionSpecs,
     resharding is ``jax.device_put`` onto the new mesh — the runtime moves

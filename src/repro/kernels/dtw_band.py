@@ -352,7 +352,10 @@ def _dtw_ea_persistent_kernel(
       * gate: a block none of whose lanes' lower bounds beat the carried
         incumbent is a no-op (``done`` set at ``ri == 0``) — the on-device
         cascade stop. Lane-level gating rides the same comparison: a lane
-        whose own bound reaches ``ub`` gets the dead-lane sentinel.
+        whose own bound reaches ``ub`` gets the dead-lane sentinel. The
+        non-finite quarantine (DESIGN.md §2.6) rides it too: a quarantined
+        window arrives with a ``+inf`` lower bound, so the kernel kills its
+        lane on row 0 with no quarantine-specific code or retrace.
       * prologue (``use_cb``): the UCR ``cb`` suffix is built in VMEM from
         the candidate tile and the query envelope (LB_Keogh terms + suffix
         sum) instead of being streamed from HBM.

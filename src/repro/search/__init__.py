@@ -13,6 +13,8 @@ from repro.search.znorm import (
     append_window_stats,
     clamp_sigma,
     gather_norm_windows,
+    sanitize_series,
+    window_finite_mask,
     window_stats,
     znorm,
 )
@@ -34,7 +36,9 @@ __all__ = [
     "make_distributed_multi_search",
     "make_distributed_search",
     "multi_query_search",
+    "sanitize_series",
     "subsequence_search",
+    "window_finite_mask",
     "window_stats",
     "znorm",
 ]

@@ -69,6 +69,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import guards
 from repro.core.backend import resolve_backend
 from repro.core.batch import ea_pruned_dtw_multi_batch, ea_pruned_dtw_persistent
 from repro.core.common import BIG, DEAD_LANE_UB, pad_lanes_to_blocks
@@ -77,7 +78,13 @@ from repro.search.cascade import cascade_lower_bounds
 from repro.core.compat import shard_map as _shard_map
 from repro.search.distributed import _local_lbs
 from repro.search.subsequence import ROUND_DRIVERS
-from repro.search.znorm import gather_norm_windows, window_stats, znorm
+from repro.search.znorm import (
+    gather_norm_windows,
+    sanitize_series,
+    window_finite_mask,
+    window_stats,
+    znorm,
+)
 
 MULTI_VARIANTS = ("eapruned", "eapruned_nolb")
 
@@ -90,6 +97,7 @@ class MultiSearchResult(NamedTuple):
     lb_pruned: jax.Array   # (Q,) candidates never evaluated thanks to LB ordering
     rows: jax.Array        # (Q,) DTW rows issued (-1: fast rounds)
     cells: jax.Array       # (Q,) admissible DTW cells (-1: fast rounds)
+    quarantined: jax.Array  # windows excluded by the non-finite quarantine
 
 
 class DistMultiSearchResult(NamedTuple):
@@ -122,7 +130,7 @@ def _round_slicers(batch: int):
     static_argnames=(
         "length", "window", "variant", "batch", "band_width", "chunk",
         "with_info", "backend", "rows_per_step", "block_k", "row_block",
-        "warm_start", "rounds",
+        "warm_start", "rounds", "quarantine",
     ),
 )
 def _multi_query_search_impl(
@@ -142,6 +150,7 @@ def _multi_query_search_impl(
     row_block,
     warm_start,
     rounds,
+    quarantine,
 ):
     assert variant in MULTI_VARIANTS, variant
     knobs = dict(
@@ -155,6 +164,14 @@ def _multi_query_search_impl(
     use_lb = variant != "eapruned_nolb"
     use_cb = variant == "eapruned"
 
+    if quarantine:
+        finite_ok = window_finite_mask(ref, length)
+        n_quar = jnp.sum(~finite_ok).astype(jnp.int32)
+        ref = sanitize_series(ref)
+    else:
+        finite_ok = None
+        n_quar = jnp.asarray(0, jnp.int32)
+
     # Stage 1, amortized: one stats pass, one vmapped cascade over all Q.
     mu, sigma = window_stats(ref, length)
     if use_lb:
@@ -163,7 +180,22 @@ def _multi_query_search_impl(
                 ref, qn, mu, sigma, length, window, chunk=chunk
             )
         )(queries_n)                                   # (Q, N)
+        if quarantine:
+            # Quarantined windows: +inf lower bound — sorted behind every
+            # live candidate, never reached by the cascade stop, dead lanes
+            # if a partially-live round straddles them (DESIGN.md §2.6).
+            lbs = jnp.where(finite_ok[None, :], lbs, jnp.inf)
         order = jnp.argsort(lbs, axis=1)               # (Q, N)
+        lb_sorted = jnp.take_along_axis(lbs, order, axis=1)
+    elif quarantine:
+        # No-cascade variant: stable argsort of the 0/+inf quarantine mask
+        # keeps natural scan order among surviving windows and pushes
+        # poisoned ones to the back.
+        lbs = jnp.broadcast_to(
+            jnp.where(finite_ok, 0.0, jnp.inf).astype(queries_n.dtype),
+            (nq, n_win),
+        )
+        order = jnp.argsort(lbs, axis=1)
         lb_sorted = jnp.take_along_axis(lbs, order, axis=1)
     else:
         order = jnp.broadcast_to(jnp.arange(n_win), (nq, n_win))
@@ -205,6 +237,7 @@ def _multi_query_search_impl(
             lb_pruned=n_win - lanes,
             rows=no_info,
             cells=no_info,
+            quarantined=n_quar,
         )
 
     n_rounds = -(-n_win // batch)
@@ -370,6 +403,7 @@ def _multi_query_search_impl(
         lb_pruned=n_win - jnp.minimum(st.lanes, n_win),
         rows=st.rows if with_info else no_info,
         cells=st.cells if with_info else no_info,
+        quarantined=n_quar,
     )
 
 
@@ -390,6 +424,7 @@ def multi_query_search(
     ub_init: jax.Array | None = None,
     warm_start: int = 0,
     rounds: str = "host",
+    quarantine: bool = True,
 ) -> MultiSearchResult:
     """Nearest z-normalized window of ``ref`` for each of Q queries.
 
@@ -431,6 +466,10 @@ def multi_query_search(
         per-query incumbents carried in SMEM across candidate blocks (see
         ``search.subsequence`` module docstring for the trade-offs).
         Counter-free: combine with ``with_info`` is rejected.
+      quarantine: exclude windows overlapping a non-finite reference sample
+        (DESIGN.md §2.6); the excluded count is reported in
+        ``result.quarantined``. On (default) even for clean data — the
+        prepass is one extra prefix-sum pass.
 
     Returns: ``MultiSearchResult`` of per-query ``(Q,)`` arrays.
     """
@@ -441,12 +480,24 @@ def multi_query_search(
             "rounds='persistent' is counter-free; use the host driver for "
             "with_info stats rounds"
         )
+    guards.ensure_series(ref, "ref", ndim=1, min_len=length)
+    guards.ensure_series(queries, "queries", ndim=2, min_len=length)
+    guards.ensure_finite(queries, "queries")
+    guards.ensure_knobs(
+        length=length, window=window, batch=batch, band_width=band_width,
+        block_k=block_k, row_block=row_block, rows_per_step=rows_per_step,
+    )
+    if ub_init is not None and guards.is_concrete(ub_init):
+        if bool(jnp.any(jnp.isnan(jnp.asarray(ub_init)))):
+            raise guards.NonFiniteInputError(
+                "ub_init contains NaN (use +inf / BIG for a cold start)"
+            )
     return _multi_query_search_impl(
         ref, queries, ub_init, length=length, window=window, variant=variant,
         batch=batch, band_width=band_width, chunk=chunk, with_info=with_info,
         backend=resolve_backend(backend), rows_per_step=rows_per_step,
         block_k=block_k, row_block=row_block, warm_start=warm_start,
-        rounds=rounds,
+        rounds=rounds, quarantine=quarantine,
     )
 
 

@@ -55,21 +55,29 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import guards
 from repro.core.backend import resolve_backend
 from repro.core.batch import ea_pruned_dtw_multi_batch
 from repro.core.common import BIG, DEAD_LANE_UB
 from repro.core.lower_bounds import cascade_keogh_cumulative
 from repro.search.cascade import cascade_lower_bounds
 from repro.search.multi import MULTI_VARIANTS, _round_slicers
-from repro.search.znorm import gather_norm_windows, window_stats
+from repro.search.znorm import (
+    gather_norm_windows,
+    sanitize_series,
+    window_finite_mask,
+    window_stats,
+)
 
 
 class IngestResult(NamedTuple):
-    """Per-ingest outcome, all arrays ``(Q,)`` over the standing queries."""
+    """Per-ingest outcome; ``(Q,)`` arrays over the standing queries except
+    ``quarantined``, which is a scalar (windows are query-independent)."""
     ub: jax.Array      # incumbents after this ingest (non-increasing)
     best: jax.Array    # stream-coordinate start of each best-so-far (-1: none)
     rounds: jax.Array  # batch rounds spent on this ingest
     lanes: jax.Array   # candidate lanes submitted this ingest
+    quarantined: jax.Array  # newly-valid windows excluded by the quarantine
 
 
 def _ingest_core(
@@ -88,6 +96,7 @@ def _ingest_core(
     batch,
     band_width,
     chunk_lb,
+    quarantine,
     knobs,
 ):
     """Shared cascade + carried-ub round loop over the windows of ``ctx``.
@@ -99,15 +108,33 @@ def _ingest_core(
     lanes. ``offset0`` is the stream coordinate of ``ctx[0]`` (may be
     negative on the fixed-shape path while the tail buffer is not yet
     full — only invalid starts map below zero).
+
+    With ``quarantine`` (DESIGN.md §2.6), windows overlapping a non-finite
+    sample join the invalid set — same dead-lane machinery, and the count of
+    *newly-valid* windows so excluded is reported. ``ctx`` is zero-filled at
+    the bad samples afterwards so the shared prefix sums stay finite for the
+    surviving windows; the caller's carried tail keeps the *raw* samples, so
+    boundary-straddling windows of the next ingest are condemned too.
     """
     assert variant in MULTI_VARIANTS, variant
     use_lb = variant != "eapruned_nolb"
     use_cb = variant == "eapruned"
     nq = queries_n.shape[0]
 
-    mu, sigma = window_stats(ctx, length)
     k_new = ctx.shape[0] - length + 1
     assert k_new >= 1, "ingest called with no newly-valid windows"
+
+    if quarantine:
+        finite_ok = window_finite_mask(ctx, length)
+        quarantined = jnp.sum(
+            jnp.logical_and(valid, ~finite_ok)
+        ).astype(jnp.int32)
+        valid = jnp.logical_and(valid, finite_ok)
+        ctx = sanitize_series(ctx)
+    else:
+        quarantined = jnp.asarray(0, jnp.int32)
+
+    mu, sigma = window_stats(ctx, length)
 
     if use_lb:
         lbs = jax.vmap(
@@ -203,12 +230,15 @@ def _ingest_core(
         lanes=jnp.zeros((nq,), jnp.int32),
     )
     st = jax.lax.while_loop(cond, body, st0)
-    return IngestResult(ub=st.ub, best=st.best, rounds=st.r, lanes=st.lanes)
+    return IngestResult(
+        ub=st.ub, best=st.best, rounds=st.r, lanes=st.lanes,
+        quarantined=quarantined,
+    )
 
 
 _INGEST_STATICS = (
     "length", "window", "variant", "batch", "band_width", "chunk_lb",
-    "backend", "rows_per_step", "block_k", "row_block",
+    "backend", "rows_per_step", "block_k", "row_block", "quarantine",
 )
 
 
@@ -232,6 +262,7 @@ def _ingest_impl(
     rows_per_step,
     block_k,
     row_block,
+    quarantine,
 ):
     """One raw-shape ingest: stats + cascade + carried-ub rounds, jitted.
 
@@ -253,7 +284,8 @@ def _ingest_impl(
     res = _ingest_core(
         ctx, jnp.ones((k_new,), bool), queries_n, u, low, ub0, best0, offset,
         length=length, window=window, variant=variant, batch=batch,
-        band_width=band_width, chunk_lb=chunk_lb, knobs=knobs,
+        band_width=band_width, chunk_lb=chunk_lb, quarantine=quarantine,
+        knobs=knobs,
     )
     return new_tail, res
 
@@ -280,6 +312,7 @@ def _ingest_impl_padded(
     rows_per_step,
     block_k,
     row_block,
+    quarantine,
 ):
     """Fixed-shape ingest: one trace for any mix of real chunk lengths.
 
@@ -306,7 +339,8 @@ def _ingest_impl_padded(
     return _ingest_core(
         ctx, valid, queries_n, u, low, ub0, best0, offset0,
         length=length, window=window, variant=variant, batch=batch,
-        band_width=band_width, chunk_lb=chunk_lb, knobs=knobs,
+        band_width=band_width, chunk_lb=chunk_lb, quarantine=quarantine,
+        knobs=knobs,
     )
 
 
@@ -330,6 +364,8 @@ def ingest_chunk(
     block_k: int = 8,
     row_block: int = 128,
     pad_to: int | None = None,
+    quarantine: bool = True,
+    chunk_index: int | None = None,
 ) -> tuple[jax.Array, IngestResult]:
     """Advance Q standing queries over one stream chunk.
 
@@ -339,9 +375,11 @@ def ingest_chunk(
     ``$REPRO_DTW_BACKEND`` is re-read on every ingest. ``tail``/``chunk`` are raw stream samples;
     ``queries_n``/``u``/``low`` the z-normalized queries and their envelopes
     (fixed for the stream's lifetime); ``ub``/``best`` the carried per-query
-    incumbents; ``offset`` the stream coordinate of ``tail[0]``. The caller
-    must only invoke this when ``len(tail) + len(chunk) >= length`` (at least
-    one newly-valid window — before that, only the tail needs extending).
+    incumbents; ``offset`` the stream coordinate of ``tail[0]``. A call with
+    ``len(tail) + len(chunk) < length`` (no newly-valid window yet) is a
+    cheap no-op: the tail is extended and the incumbents come back
+    unchanged, with zero rounds/lanes — so a driver can feed arbitrarily
+    small start-up chunks without special-casing.
 
     ``pad_to`` selects the fixed-shape form: the tail and chunk are packed
     into static ``(length - 1,)`` / ``(pad_to,)`` buffers with dynamic
@@ -349,9 +387,28 @@ def ingest_chunk(
     size (``<= pad_to``) — reuses one compiled trace. ``None`` keeps the
     raw-shape form (one trace per distinct shape).
 
+    ``quarantine`` (default on) excludes windows overlapping non-finite
+    samples and reports the count in ``IngestResult.quarantined``
+    (DESIGN.md §2.6). State-shape violations raise
+    ``core.guards.StreamStateError`` with the stream position; malformed
+    arrays raise ``SearchInputError`` before any device work.
+
     Returns ``(new_tail, IngestResult)``; feed ``new_tail`` and the updated
     incumbents into the next call.
     """
+    guards.ensure_series(chunk, "chunk", ndim=1)
+    guards.ensure_series(tail, "tail", ndim=1)
+    t = int(tail.shape[0])
+    c = int(chunk.shape[0])
+    if t + c < length:
+        # Zero newly-valid windows: extend the tail, touch nothing else.
+        new_tail = jnp.concatenate([jnp.asarray(tail), jnp.asarray(chunk)])
+        nq = queries_n.shape[0]
+        zq = jnp.zeros((nq,), jnp.int32)
+        return new_tail, IngestResult(
+            ub=jnp.asarray(ub), best=jnp.asarray(best), rounds=zq, lanes=zq,
+            quarantined=jnp.asarray(0, jnp.int32),
+        )
     if pad_to is None:
         return _ingest_impl(
             tail, chunk, queries_n, u, low, ub, best, offset,
@@ -359,13 +416,21 @@ def ingest_chunk(
             band_width=band_width, chunk_lb=chunk_lb,
             backend=resolve_backend(backend),
             rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
+            quarantine=quarantine,
         )
-    t = int(tail.shape[0])
-    c = int(chunk.shape[0])
     if c > pad_to:
-        raise ValueError(f"chunk length {c} > pad_to {pad_to}; split first")
+        raise guards.StreamStateError(
+            f"chunk length {c} > pad_to {pad_to}; split the chunk before "
+            "ingesting (the fixed-shape trace cannot grow)",
+            n_seen=offset + t, chunk_index=chunk_index,
+        )
     if t > length - 1:
-        raise ValueError(f"tail length {t} > length - 1 = {length - 1}")
+        raise guards.StreamStateError(
+            f"carried tail length {t} overflows length - 1 = {length - 1}; "
+            "the stream state is corrupt (tail must never outgrow the "
+            "boundary context)",
+            n_seen=offset + t, chunk_index=chunk_index,
+        )
     dt = chunk.dtype
     tail_buf = jnp.concatenate(
         [jnp.zeros((length - 1 - t,), dt), jnp.asarray(tail, dt)]
@@ -379,6 +444,7 @@ def ingest_chunk(
         band_width=band_width, chunk_lb=chunk_lb,
         backend=resolve_backend(backend),
         rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
+        quarantine=quarantine,
     )
     keep = min(t + c, length - 1)
     new_tail = jnp.concatenate([jnp.asarray(tail, dt), chunk])[t + c - keep :]

@@ -73,18 +73,25 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import guards
 from repro.core.backend import resolve_backend
 from repro.core.batch import (
     block_sweep,
     ea_pruned_dtw_batch,
     ea_pruned_dtw_persistent,
 )
-from repro.core.common import BIG, pad_lanes_to_blocks
+from repro.core.common import BIG, DEAD_LANE_UB, pad_lanes_to_blocks
 from repro.core.dtw import dtw
 from repro.core.lower_bounds import cascade_keogh_cumulative, envelope
 from repro.core.pruned_dtw import pruned_dtw
-from repro.search.cascade import cascade
-from repro.search.znorm import gather_norm_windows, window_stats, znorm
+from repro.search.cascade import cascade_lower_bounds
+from repro.search.znorm import (
+    gather_norm_windows,
+    sanitize_series,
+    window_finite_mask,
+    window_stats,
+    znorm,
+)
 
 VARIANTS = ("full", "pruned", "eapruned", "eapruned_nolb")
 ROUND_DRIVERS = ("host", "persistent")
@@ -98,6 +105,7 @@ class SearchResult(NamedTuple):
     lb_pruned: jax.Array    # candidates never evaluated thanks to LB ordering
     rows: jax.Array         # DTW rows issued across all lanes (-1: fast round)
     cells: jax.Array        # admissible DTW cells across all lanes (-1: fast)
+    quarantined: jax.Array  # windows excluded by the non-finite quarantine
 
 
 def _batch_distances(
@@ -144,7 +152,7 @@ def _batch_stats(variant, query_n, cand, ub, window, band_width, cb, knobs):
     static_argnames=(
         "length", "window", "variant", "batch", "band_width", "chunk",
         "with_info", "backend", "rows_per_step", "block_k", "row_block",
-        "rounds",
+        "rounds", "quarantine",
     ),
 )
 def _subsequence_search_impl(
@@ -162,6 +170,7 @@ def _subsequence_search_impl(
     block_k: int = 8,
     row_block: int = 128,
     rounds: str = "host",
+    quarantine: bool = True,
 ) -> SearchResult:
     """Locate the closest z-normalized window of ``ref`` to ``query``.
 
@@ -180,6 +189,10 @@ def _subsequence_search_impl(
       rounds: ``"host"`` (best-first rounds around the batch primitive) or
         ``"persistent"`` (whole sweep in one dispatch with a block-granular
         carried incumbent — see module docstring).
+      quarantine: exclude windows overlapping non-finite reference samples
+        (DESIGN.md §2.6); they ride the rounds as dead lanes and are counted
+        in ``SearchResult.quarantined``. ``False`` skips the prepass (the
+        caller then guarantees a finite reference).
     """
     assert variant in VARIANTS, variant
     assert rounds in ROUND_DRIVERS, rounds
@@ -193,11 +206,33 @@ def _subsequence_search_impl(
     use_lb = variant != "eapruned_nolb"
     use_cb = variant == "eapruned"
 
+    if quarantine:
+        finite_ok = window_finite_mask(ref, length)
+        n_quar = jnp.sum(~finite_ok).astype(jnp.int32)
+        ref = sanitize_series(ref)
+    else:
+        finite_ok = None
+        n_quar = jnp.asarray(0, jnp.int32)
+
     mu, sigma = window_stats(ref, length)
     if use_lb:
-        order, lb_sorted = cascade(
+        lbs = cascade_lower_bounds(
             ref, query_n, mu, sigma, length, window, chunk=chunk
         )
+        if quarantine:
+            # Quarantined windows get +inf lower bounds: the argsort pushes
+            # them behind every live candidate, the cascade stop never
+            # reaches them, and any that ride in a partially-live round are
+            # dead lanes (the same machinery as round padding).
+            lbs = jnp.where(finite_ok, lbs, jnp.inf)
+        order = jnp.argsort(lbs)
+        lb_sorted = lbs[order]
+    elif quarantine:
+        # No-cascade variant: natural scan order among surviving windows
+        # (stable argsort of the 0/+inf mask), poisoned windows at the back.
+        lbs = jnp.where(finite_ok, 0.0, jnp.inf).astype(query_n.dtype)
+        order = jnp.argsort(lbs)
+        lb_sorted = lbs[order]
     else:
         order = jnp.arange(n_win)
         lb_sorted = jnp.zeros((n_win,), query_n.dtype)
@@ -244,6 +279,7 @@ def _subsequence_search_impl(
             lb_pruned=jnp.asarray(n_win) - lanes,
             rows=no_info,
             cells=no_info,
+            quarantined=n_quar,
         )
 
     n_rounds = -(-n_win // batch)
@@ -273,13 +309,20 @@ def _subsequence_search_impl(
         cb = None
         if use_cb:
             cb = cascade_keogh_cumulative(cand, u, low)
+        if variant in ("eapruned", "eapruned_nolb"):
+            # Per-lane ub: quarantined and round-padding lanes (both marked
+            # by +inf lower bounds) ride as dead lanes — the kernel abandons
+            # them on row 0 instead of running a DP over masked garbage.
+            ub_b = jnp.where(jnp.isfinite(lbs), st.ub, DEAD_LANE_UB)
+        else:
+            ub_b = st.ub  # full/pruned kernels take a scalar threshold
         if with_info:
             d, rows, cells = _batch_stats(
-                variant, query_n, cand, st.ub, window, band_width, cb, knobs
+                variant, query_n, cand, ub_b, window, band_width, cb, knobs
             )
         else:
             d = _batch_distances(
-                variant, query_n, cand, st.ub, window, band_width, cb, knobs
+                variant, query_n, cand, ub_b, window, band_width, cb, knobs
             )
             rows = cells = jnp.asarray(0)
         d = jnp.where(jnp.isfinite(lbs), d, jnp.inf)  # padding lanes
@@ -313,6 +356,7 @@ def _subsequence_search_impl(
         lb_pruned=jnp.asarray(n_win) - jnp.minimum(st.lanes, n_win),
         rows=st.rows if with_info else no_info,
         cells=st.cells if with_info else no_info,
+        quarantined=n_quar,
     )
 
 
@@ -331,6 +375,7 @@ def subsequence_search(
     block_k: int = 8,
     row_block: int = 128,
     rounds: str = "host",
+    quarantine: bool = True,
 ) -> SearchResult:
     """Locate the closest z-normalized window of ``ref`` to ``query``.
 
@@ -340,6 +385,12 @@ def subsequence_search(
     ``_subsequence_search_impl`` for the argument reference.
     ``rounds="persistent"`` runs the whole best-first sweep in one dispatch
     (module docstring); it is counter-free, so ``with_info`` is rejected.
+    Input validation (``core.guards``): shapes/dtypes and knob sanity raise
+    ``SearchInputError`` here, before tracing; a non-finite *query* raises
+    ``NonFiniteInputError`` (non-finite *reference* samples are quarantined
+    instead — their windows are excluded, counted in
+    ``SearchResult.quarantined``, and the search over the remaining windows
+    stays exact).
     """
     if rounds not in ROUND_DRIVERS:
         raise ValueError(f"rounds {rounds!r} not in {ROUND_DRIVERS}")
@@ -348,9 +399,24 @@ def subsequence_search(
             "rounds='persistent' is counter-free; use the host driver for "
             "with_info stats rounds"
         )
+    guards.ensure_series(ref, "ref", ndim=1, min_len=length)
+    if jnp.ndim(query) == 1:
+        guards.ensure_series(query, "query", ndim=1, min_len=length)
+    else:
+        guards.ensure_series(query, "query", ndim=2)  # (l, dims) multivariate
+        if jnp.shape(query)[0] < length:
+            raise guards.SearchInputError(
+                f"query length {jnp.shape(query)[0]} < length {length}"
+            )
+    guards.ensure_finite(query, "query")
+    guards.ensure_knobs(
+        length=length, window=window, batch=batch, band_width=band_width,
+        block_k=block_k, row_block=row_block, rows_per_step=rows_per_step,
+    )
     return _subsequence_search_impl(
         ref, query, length=length, window=window, variant=variant,
         batch=batch, band_width=band_width, chunk=chunk, with_info=with_info,
         backend=resolve_backend(backend), rows_per_step=rows_per_step,
         block_k=block_k, row_block=row_block, rounds=rounds,
+        quarantine=quarantine,
     )

@@ -22,6 +22,17 @@ want the true value. Every normalization site must clamp with
 ``clamp_sigma`` (``max(sigma, EPS)``) before dividing; a constant window then
 normalizes to exactly zero (``win - mu == 0``), so the LB cascade and DTW
 stay finite on flat reference segments instead of producing inf/NaN.
+
+Non-finite quarantine (DESIGN.md §2.6): the prefix sums above are the reason
+a single NaN sample is catastrophic without a prepass — ``cumsum`` carries
+it into the stats of *every* later window. The quarantine contract is
+implemented right here at the stats layer: ``window_finite_mask`` marks the
+windows overlapping any non-finite sample (one more prefix-sum pass, same
+O(N) shape as the stats themselves), and ``sanitize_series`` zero-fills the
+bad samples so the stats/cascade arithmetic of the *surviving* windows is
+untouched by them. Drivers kill the masked windows through the dead-lane
+sentinel (``+inf`` lower bound) and report the count; everything outside a
+quarantined window stays exact.
 """
 from __future__ import annotations
 
@@ -78,6 +89,33 @@ def append_window_stats(
         return new_tail, empty, empty
     mu, sigma = window_stats(ctx, length)
     return new_tail, mu, sigma
+
+
+@partial(jax.jit, static_argnames=("length",))
+def window_finite_mask(ref: jax.Array, length: int) -> jax.Array:
+    """``(N - length + 1,)`` bool mask: True where the window is NaN/Inf-free.
+
+    The quarantine prepass: a window overlapping *any* non-finite sample is
+    excluded from search (mask False); every other window stays exact. One
+    prefix-sum pass over a non-finite indicator — the same O(N) shape as
+    ``window_stats``, so the clean-data overhead is one extra cumsum.
+    """
+    bad = (~jnp.isfinite(ref)).astype(jnp.int32)
+    p = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(bad)])
+    starts = jnp.arange(ref.shape[0] - length + 1)
+    return (p[starts + length] - p[starts]) == 0
+
+
+@jax.jit
+def sanitize_series(ref: jax.Array) -> jax.Array:
+    """Zero-fill non-finite samples so prefix sums stay finite.
+
+    Only windows already condemned by ``window_finite_mask`` contain the
+    zero-filled samples; the fill exists so the shared ``cumsum`` does not
+    carry a NaN into the table entries of the *surviving* windows. On a
+    fully finite series this is the identity.
+    """
+    return jnp.where(jnp.isfinite(ref), ref, jnp.zeros_like(ref))
 
 
 def clamp_sigma(sigma: jax.Array) -> jax.Array:

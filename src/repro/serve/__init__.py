@@ -1,5 +1,6 @@
 """Serving: batched prefill + decode generation, streaming similarity search."""
 from repro.serve.generate import generate
 from repro.serve.stream import StreamSearchEngine
+from repro.serve.supervisor import SearchSupervisor
 
-__all__ = ["StreamSearchEngine", "generate"]
+__all__ = ["SearchSupervisor", "StreamSearchEngine", "generate"]

@@ -33,6 +33,16 @@ first strict improvement they encounter, and their scan orders differ, so
 the reported start may be the other cominimizer (the distance is identical).
 Incumbents are monotone non-increasing across ingests —
 ``tests/test_streaming.py`` pins both properties on both backends.
+
+Hardening (DESIGN.md §2.6): non-finite stream samples are *quarantined*, not
+fatal — every window overlapping one is excluded from search (dead-lane
+sentinel), everything else stays exact, and the engine keeps serving while
+counting what it dropped (``quarantined_windows`` / ``quarantined_samples``).
+Malformed inputs raise the typed ``core.guards`` taxonomy before any device
+work. ``save_state()`` / ``restore_state()`` expose the full carried state as
+a flat dict of arrays — ``train.checkpoint`` can persist it, and
+``serve.supervisor.SearchSupervisor`` drives periodic checkpoints plus
+restore-and-replay on crash.
 """
 from __future__ import annotations
 
@@ -41,6 +51,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import guards
 from repro.core.lower_bounds import envelope
 from repro.search.multi import MULTI_VARIANTS
 from repro.search.streaming import ingest_chunk, initial_incumbents
@@ -105,6 +116,16 @@ class StreamSearchEngine:
         to a static ``W``-sample buffer (splitting bigger arrivals into
         ``W``-sized pieces first), so ONE compiled trace serves the whole
         stream regardless of how the source chunks it.
+      quarantine: exclude windows overlapping non-finite samples instead of
+        letting a NaN poison the incumbents (default on; DESIGN.md §2.6).
+        Counts surface as ``quarantined_windows`` / ``quarantined_samples``.
+      debug_checks: verify after every ingest that no NaN reached the
+        carried incumbents, raising ``NonFiniteInputError`` instead of
+        serving poisoned results. ``None`` defers to ``$REPRO_DEBUG_CHECKS``.
+        Synchronous (forces a device sync per ingest) — keep it off in
+        production. For checkify-compatible pieces there is also
+        ``core.guards.checked_call`` (the DTW round loop itself is outside
+        checkify's support; see ``core.guards`` docstring).
     """
 
     def __init__(
@@ -123,6 +144,8 @@ class StreamSearchEngine:
         ub_init: jax.Array | None = None,
         ring_capacity: int | None = None,
         stream_chunk: int | None = None,
+        quarantine: bool = True,
+        debug_checks: bool | None = None,
     ):
         if variant not in MULTI_VARIANTS:
             raise ValueError(f"variant must be one of {MULTI_VARIANTS}")
@@ -131,6 +154,12 @@ class StreamSearchEngine:
         if stream_chunk is not None and stream_chunk < 1:
             raise ValueError("stream_chunk must be >= 1")
         q = jnp.atleast_2d(jnp.asarray(queries))
+        guards.ensure_series(q, "queries", ndim=2, min_len=length)
+        guards.ensure_finite(q, "queries")
+        guards.ensure_knobs(
+            length=length, window=window, batch=batch, band_width=band_width,
+            block_k=block_k, row_block=row_block, rows_per_step=rows_per_step,
+        )
         self.length = int(length)
         self.window = int(window)
         self.variant = variant
@@ -152,8 +181,13 @@ class StreamSearchEngine:
         )
         self._tail = jnp.zeros((0,), self._dtype)
         self._n_seen = 0
+        self._n_chunks = 0
         self._rounds = jnp.asarray(0, jnp.int32)
         self._lanes = jnp.asarray(0, jnp.int32)
+        self.quarantine = bool(quarantine)
+        self.debug_checks = guards.debug_checks_enabled(debug_checks)
+        self._quarantined = jnp.asarray(0, jnp.int32)
+        self._bad_samples = jnp.asarray(0, jnp.int32)
         self._ring = (
             _Ring(ring_capacity, np.dtype(self._dtype))
             if ring_capacity is not None
@@ -185,6 +219,16 @@ class StreamSearchEngine:
         """Total candidate lanes submitted across all ingests."""
         return int(self._lanes)
 
+    @property
+    def quarantined_windows(self) -> int:
+        """Windows excluded from search by the non-finite quarantine."""
+        return int(self._quarantined)
+
+    @property
+    def quarantined_samples(self) -> int:
+        """Non-finite raw samples seen on the stream so far."""
+        return int(self._bad_samples)
+
     def best(self) -> tuple[jax.Array, jax.Array]:
         """Current ``(best_start, best_dist)`` per query, ``(Q,)`` each.
 
@@ -200,6 +244,84 @@ class StreamSearchEngine:
             raise ValueError("engine built without ring_capacity")
         return self._ring.view()
 
+    # -- checkpoint -------------------------------------------------------
+    def save_state(self) -> dict:
+        """Snapshot the full carried state as a flat dict of numpy arrays.
+
+        Everything the engine threads between ingests: boundary tail, per-
+        query incumbents, counters, and the monitoring ring (when built with
+        one). Every leaf is an array — the dict is a valid
+        ``train.checkpoint`` tree, so ``checkpoint.save(dir, state, step)``
+        persists it atomically and ``restore_state(checkpoint.restore(dir,
+        template))`` resumes a crashed stream bit-exactly. The standing
+        queries and knobs are *not* captured: they are construction-time
+        configuration, and restore validates against the live engine's.
+        """
+        state = {
+            "tail": np.asarray(self._tail),
+            "ub": np.asarray(self._ub),
+            "best": np.asarray(self._best),
+            "n_seen": np.asarray(self._n_seen, np.int64),
+            "n_chunks": np.asarray(self._n_chunks, np.int64),
+            "rounds": np.asarray(self._rounds, np.int32),
+            "lanes": np.asarray(self._lanes, np.int32),
+            "quarantined": np.asarray(self._quarantined, np.int32),
+            "bad_samples": np.asarray(self._bad_samples, np.int32),
+        }
+        if self._ring is not None:
+            state["ring_buf"] = self._ring.buf.copy()
+            state["ring_count"] = np.asarray(self._ring.count, np.int64)
+            state["ring_pos"] = np.asarray(self._ring.pos, np.int64)
+        return state
+
+    def restore_state(self, state: dict) -> None:
+        """Adopt a ``save_state()`` snapshot; raises ``StreamStateError`` on
+        a snapshot inconsistent with this engine's configuration."""
+        required = ("tail", "ub", "best", "n_seen", "n_chunks",
+                    "rounds", "lanes", "quarantined", "bad_samples")
+        missing = [k for k in required if k not in state]
+        if missing:
+            raise guards.StreamStateError(
+                f"checkpoint missing state keys {missing}"
+            )
+        nq = self.n_queries
+        ub = np.asarray(state["ub"])
+        if ub.shape != (nq,):
+            raise guards.StreamStateError(
+                f"checkpoint incumbents have shape {ub.shape}, engine has "
+                f"{nq} standing queries — wrong stream?"
+            )
+        tail = np.asarray(state["tail"])
+        if tail.ndim != 1 or tail.shape[0] > self.length - 1:
+            raise guards.StreamStateError(
+                f"checkpoint tail shape {tail.shape} overflows the "
+                f"(length - 1,) = ({self.length - 1},) boundary context",
+                n_seen=int(state["n_seen"]),
+            )
+        if (self._ring is not None) != ("ring_buf" in state):
+            raise guards.StreamStateError(
+                "checkpoint and engine disagree on ring_capacity monitoring"
+            )
+        self._tail = jnp.asarray(tail, self._dtype)
+        self._ub = jnp.asarray(ub, self._dtype)
+        self._best = jnp.asarray(state["best"], jnp.int32)
+        self._n_seen = int(state["n_seen"])
+        self._n_chunks = int(state["n_chunks"])
+        self._rounds = jnp.asarray(state["rounds"], jnp.int32)
+        self._lanes = jnp.asarray(state["lanes"], jnp.int32)
+        self._quarantined = jnp.asarray(state["quarantined"], jnp.int32)
+        self._bad_samples = jnp.asarray(state["bad_samples"], jnp.int32)
+        if self._ring is not None:
+            buf = np.asarray(state["ring_buf"])
+            if buf.shape != self._ring.buf.shape:
+                raise guards.StreamStateError(
+                    f"checkpoint ring capacity {buf.shape[0]} != engine "
+                    f"ring capacity {self._ring.capacity}"
+                )
+            self._ring.buf = buf.astype(self._ring.buf.dtype, copy=True)
+            self._ring.count = int(state["ring_count"])
+            self._ring.pos = int(state["ring_pos"])
+
     # -- ingest -----------------------------------------------------------
     def ingest(self, chunk: jax.Array) -> tuple[jax.Array, jax.Array]:
         """Feed one chunk of reference samples; returns ``self.best()``.
@@ -214,6 +336,11 @@ class StreamSearchEngine:
         chunk = jnp.asarray(chunk, self._dtype).reshape(-1)
         if chunk.shape[0] == 0:
             return self.best()
+        if self.quarantine:
+            # Lazy device accumulation, like the work counters below.
+            self._bad_samples = self._bad_samples + jnp.sum(
+                ~jnp.isfinite(chunk), dtype=jnp.int32
+            )
         if self._ring is not None:
             self._ring.extend(np.asarray(chunk))
         if self.stream_chunk is None:
@@ -232,21 +359,40 @@ class StreamSearchEngine:
             # Not a full window yet: extend the boundary context only.
             self._tail = jnp.concatenate([self._tail, chunk])
             self._n_seen += int(chunk.shape[0])
+            self._n_chunks += 1
             return
         offset = self._n_seen - tail_len  # stream coordinate of tail[0]
-        self._tail, res = ingest_chunk(
-            self._tail, chunk, self.queries_n, self.u, self.low,
-            self._ub, self._best, offset,
-            length=self.length, window=self.window, variant=self.variant,
-            batch=self.batch, band_width=self.band_width,
-            chunk_lb=self.chunk_lb, backend=self.backend,
-            rows_per_step=self.rows_per_step, block_k=self.block_k,
-            row_block=self.row_block, pad_to=pad_to,
-        )
+
+        def dispatch():
+            return ingest_chunk(
+                self._tail, chunk, self.queries_n, self.u, self.low,
+                self._ub, self._best, offset,
+                length=self.length, window=self.window, variant=self.variant,
+                batch=self.batch, band_width=self.band_width,
+                chunk_lb=self.chunk_lb, backend=self.backend,
+                rows_per_step=self.rows_per_step, block_k=self.block_k,
+                row_block=self.row_block, pad_to=pad_to,
+                quarantine=self.quarantine, chunk_index=self._n_chunks,
+            )
+
+        self._tail, res = dispatch()
+        if self.debug_checks:
+            # Synchronous tripwire: a NaN must never reach the carried
+            # incumbents (the quarantine exists to guarantee exactly this).
+            # Full-program checkify cannot discharge through the vmapped
+            # while-loop DTW (see guards.checked_call), so debug mode checks
+            # the one invariant that matters at the one place it can.
+            if bool(jnp.any(jnp.isnan(res.ub))):
+                raise guards.NonFiniteInputError(
+                    f"debug-mode tripwire: NaN reached the incumbents "
+                    f"(n_seen={self._n_seen}, chunk_index={self._n_chunks})"
+                )
         self._ub, self._best = res.ub, res.best
         # Accumulate work counters as device values: reading them eagerly
         # would sync on every ingest and forbid overlapping the next chunk's
         # arrival with this dispatch.
         self._rounds = self._rounds + jnp.max(res.rounds)
         self._lanes = self._lanes + jnp.sum(res.lanes)
+        self._quarantined = self._quarantined + res.quarantined
         self._n_seen += int(chunk.shape[0])
+        self._n_chunks += 1

@@ -1,0 +1,151 @@
+"""SearchSupervisor: crash-recoverable serving around a StreamSearchEngine.
+
+The serving-side sibling of ``distributed.fault_tolerance.TrainingSupervisor``
+(same supervision shape, same ``StragglerMonitor``, same ``train.checkpoint``
+store): wrap a ``StreamSearchEngine`` and feed arrivals through
+``supervisor.ingest(chunk)`` instead of ``engine.ingest(chunk)``. In return:
+
+  * **Periodic checkpoints** — every ``ckpt_every`` arrivals the engine's
+    full carried state (``save_state()``) is committed atomically under
+    ``ckpt_dir`` via ``train.checkpoint`` (write-then-rename: a crash never
+    leaves a half-written checkpoint visible).
+  * **Bounded retry with backoff** — a *transient* dispatch failure
+    (``RuntimeError`` / ``ValueError`` / ``OSError``: a device falling over,
+    a flaky allocator) rolls the engine back to the last checkpointed state,
+    replays the arrivals since (kept in a bounded in-memory buffer — at most
+    ``ckpt_every`` chunks), sleeps an exponential backoff, and retries. The
+    typed guard errors (``SearchInputError``, ``StreamStateError``) are
+    *caller bugs*, re-raised immediately — retrying malformed input can only
+    fail again. After ``max_retries`` consecutive failures the original
+    error propagates.
+  * **Restore-and-replay after a crash** — a fresh process builds the same
+    engine + supervisor and calls ``resume()``: the latest checkpoint is
+    restored bit-exactly and the number of arrivals already absorbed is
+    returned, so the caller re-feeds its source from that index. Incumbents,
+    counters, tail, and the monitoring ring all come back; results are
+    identical to the uninterrupted run (pinned by ``tests/test_robustness``).
+
+Rollback correctness note: a failure can strike mid-arrival (after some
+``stream_chunk`` pieces of a large arrival already committed), leaving the
+engine partially advanced — which is why retry restores the last snapshot
+and replays, rather than naively re-calling ``ingest`` on a maybe-half-eaten
+engine.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core import guards
+from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.train import checkpoint as ckpt_lib
+
+_TRANSIENT = (RuntimeError, ValueError, OSError)
+
+
+class SearchSupervisor:
+    """Checkpoint/retry/replay wrapper around a ``StreamSearchEngine``.
+
+    Args:
+      engine: the (freshly constructed) engine to supervise.
+      ckpt_dir: checkpoint directory (``train.checkpoint`` layout).
+      ckpt_every: arrivals between checkpoints; also bounds the replay
+        buffer.
+      max_retries: consecutive transient failures tolerated per arrival.
+      backoff: base retry sleep in seconds (doubles per consecutive retry).
+      keep: checkpoints retained on disk (older ones pruned).
+      sleep: injection point for the backoff sleep (tests pass a recorder).
+    """
+
+    def __init__(
+        self,
+        engine,
+        ckpt_dir: str,
+        ckpt_every: int = 16,
+        max_retries: int = 3,
+        backoff: float = 0.05,
+        keep: int = 3,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        if ckpt_every < 1:
+            raise ValueError("ckpt_every must be >= 1")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        self.engine = engine
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = int(ckpt_every)
+        self.max_retries = int(max_retries)
+        self.backoff = float(backoff)
+        self.keep = int(keep)
+        self._sleep = sleep
+        self.monitor = StragglerMonitor()
+        self.restarts = 0
+        self.chunks_done = 0          # arrivals fully absorbed
+        self._pending: list = []      # arrivals since the last snapshot
+        self._snapshot = engine.save_state()
+
+    # -- persistence ------------------------------------------------------
+    def resume(self) -> int:
+        """Restore the latest checkpoint, if any; returns the number of
+        arrivals already absorbed (the index to re-feed the source from)."""
+        step = ckpt_lib.latest_step(self.ckpt_dir)
+        if step is None:
+            return 0
+        state, step = ckpt_lib.restore(self.ckpt_dir, self.engine.save_state())
+        self.engine.restore_state(state)
+        self.chunks_done = int(step)
+        self._pending = []
+        self._snapshot = self.engine.save_state()
+        return self.chunks_done
+
+    def checkpoint(self) -> None:
+        """Commit the engine state now (also called every ``ckpt_every``)."""
+        state = self.engine.save_state()
+        ckpt_lib.save(self.ckpt_dir, state, self.chunks_done)
+        ckpt_lib.prune_old(self.ckpt_dir, self.keep)
+        self._snapshot = state
+        self._pending = []
+
+    def _rollback(self) -> None:
+        """Back to the last snapshot, replay the arrivals since."""
+        self.engine.restore_state(self._snapshot)
+        for c in self._pending:
+            self.engine.ingest(c)
+
+    # -- serving ----------------------------------------------------------
+    def ingest(self, chunk, fail_injector: Callable[[int], None] | None = None):
+        """Feed one arrival with retry/checkpoint semantics.
+
+        Returns ``engine.best()``. ``fail_injector(arrival_index)`` may raise
+        to simulate a failure (tests); it runs before the dispatch, like the
+        training supervisor's.
+        """
+        chunk = np.asarray(chunk)
+        retries = 0
+        while True:
+            try:
+                if fail_injector is not None:
+                    fail_injector(self.chunks_done)
+                t0 = time.time()
+                out = self.engine.ingest(chunk)
+                self.monitor.observe(self.chunks_done, time.time() - t0)
+                break
+            except (guards.SearchInputError, guards.StreamStateError):
+                raise  # caller bug: retrying identical bad input cannot help
+            except _TRANSIENT as e:
+                self.restarts += 1
+                retries += 1
+                if retries > self.max_retries:
+                    raise RuntimeError(
+                        f"exceeded {self.max_retries} retries at arrival "
+                        f"{self.chunks_done}"
+                    ) from e
+                self._sleep(self.backoff * (2 ** (retries - 1)))
+                self._rollback()
+        self._pending.append(chunk)
+        self.chunks_done += 1
+        if self.chunks_done % self.ckpt_every == 0:
+            self.checkpoint()
+        return out

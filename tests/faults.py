@@ -1,0 +1,95 @@
+"""Fault-injection harness for the hardened serving tests.
+
+Three failure families, matching what a long-lived search service actually
+sees (DESIGN.md §2.6):
+
+  * **Dirty data** — ``plant_nonfinite`` stamps NaN/Inf bursts into a clean
+    series at given positions, and ``finite_window_mask_np`` is the NumPy
+    oracle for which windows the quarantine must then exclude.
+  * **Transient dispatch failure** — ``FaultyEngine`` wraps a
+    ``StreamSearchEngine`` and raises ``RuntimeError`` on chosen ingest
+    calls (each position fires once, like a device falling over and coming
+    back), delegating everything else untouched. Drive it through
+    ``SearchSupervisor`` to exercise retry/rollback/replay.
+  * **Kill between chunks** — no class needed: drop the engine/supervisor on
+    the floor after arrival k, build fresh ones, ``resume()``, and re-feed
+    from the returned index. ``test_robustness.py`` pins exact incumbent
+    parity for all three.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def plant_nonfinite(series, bursts):
+    """Copy ``series`` with non-finite bursts stamped in.
+
+    ``bursts`` is an iterable of ``(start, length, value)`` with value NaN,
+    +inf or -inf. Returns the dirty copy.
+    """
+    out = np.array(series, dtype=float, copy=True)
+    for start, length, value in bursts:
+        out[start : start + length] = value
+    return out
+
+
+def finite_window_mask_np(series, length):
+    """NumPy oracle for ``search.znorm.window_finite_mask``."""
+    x = np.asarray(series)
+    n_win = x.shape[0] - length + 1
+    return np.array(
+        [np.isfinite(x[s : s + length]).all() for s in range(n_win)]
+    )
+
+
+class FaultyEngine:
+    """Engine proxy whose ``ingest`` raises once per scheduled call index.
+
+    ``fail_at`` holds 0-based ingest-call indices; each fires exactly once
+    (the retry then succeeds, like a transient device error). All other
+    attribute access — ``best``, ``save_state``, counters — delegates to the
+    wrapped engine, so the proxy can stand in for it everywhere.
+    """
+
+    def __init__(self, engine, fail_at, exc=RuntimeError("injected fault")):
+        self._engine = engine
+        self._remaining = set(int(i) for i in fail_at)
+        self._exc = exc
+        self.calls = 0
+
+    def ingest(self, chunk):
+        i = self.calls
+        self.calls += 1
+        if i in self._remaining:
+            self._remaining.discard(i)
+            raise self._exc
+        return self._engine.ingest(chunk)
+
+    def __getattr__(self, name):
+        return getattr(self._engine, name)
+
+
+def adversarial_chunkings(n, length):
+    """Chunk-size schedules that historically break streaming code.
+
+    Single samples, one-off-from-window sizes, the window size itself, and
+    the whole series in one arrival.
+    """
+    return [
+        [1] * n,
+        [max(1, length - 1)],
+        [length],
+        [length + 1],
+        [n],
+    ]
+
+
+def feed(engine_or_supervisor, series, sizes):
+    """Feed ``series`` in chunks of the given sizes (cycled to cover it)."""
+    pos = 0
+    i = 0
+    while pos < len(series):
+        size = sizes[i % len(sizes)]
+        engine_or_supervisor.ingest(series[pos : pos + size])
+        pos += size
+        i += 1

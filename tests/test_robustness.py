@@ -1,0 +1,567 @@
+"""Hardened serving: quarantine, typed guards, crash recovery (DESIGN.md §2.6).
+
+The contracts under test:
+
+  * **Non-finite quarantine** — any window overlapping a NaN/Inf sample is
+    excluded from search; every other window's result is *exact* (pinned
+    against a brute-force DTW oracle over the surviving windows, and against
+    the offline drivers, on both backends). Quarantined counts are reported;
+    incumbents stay finite even on an all-NaN stream.
+  * **Typed input guards** — every public entry point raises the
+    ``core.guards`` taxonomy (``SearchInputError`` / ``NonFiniteInputError``
+    / ``StreamStateError``) on malformed input, before device work.
+  * **Crash recovery** — ``save_state``/``restore_state`` roundtrip
+    bit-exactly; ``SearchSupervisor`` retries transient ingest failures with
+    rollback-and-replay and resumes a killed stream from its checkpoint with
+    results identical to the uninterrupted run.
+  * **Satellite regressions** — zero-new-window ingests are cheap no-ops;
+    stream-state violations carry ``n_seen``/``chunk_index`` context.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    NonFiniteInputError,
+    SearchInputError,
+    StreamStateError,
+    ea_pruned_dtw_batch,
+    ea_pruned_dtw_multi_batch,
+)
+from repro.core import guards
+from repro.core.ea_pruned_dtw_np import dtw_naive
+from repro.search import (
+    IngestResult,
+    ingest_chunk,
+    initial_incumbents,
+    multi_query_search,
+    sanitize_series,
+    subsequence_search,
+    window_finite_mask,
+)
+from repro.serve import SearchSupervisor, StreamSearchEngine
+from repro.core.lower_bounds import envelope
+from repro.search.znorm import znorm
+
+from faults import (
+    FaultyEngine,
+    adversarial_chunkings,
+    feed,
+    finite_window_mask_np,
+    plant_nonfinite,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    # Deterministic stand-in mirroring the hypothesis surface used below
+    # (same pattern as test_dtw_core.py); examples come from a seeded rng.
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(options):
+            return _Strategy(lambda r: options[int(r.integers(0, len(options)))])
+
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(*strategies):
+        def deco(f):
+            def wrapper():
+                rng = np.random.default_rng(7)
+                for _ in range(8):
+                    f(*(s.draw(rng) for s in strategies))
+
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+
+        return deco
+
+BACKENDS = ("jax", "pallas_interpret")
+
+
+def _mk(seed=0, n_ref=360, nq=3, length=48):
+    rng = np.random.default_rng(seed)
+    ref = np.cumsum(rng.normal(size=n_ref))
+    queries = np.cumsum(rng.normal(size=(nq, length)), axis=1)
+    return ref, queries
+
+
+def _brute_valid(ref, q, length, window):
+    """Brute-force nearest valid (finite) window: the quarantine oracle."""
+
+    def zn(x):
+        return (x - x.mean()) / max(x.std(), 1e-8)
+
+    qn = zn(np.asarray(q))
+    best_d, best_s = math.inf, -1
+    for s in range(len(ref) - length + 1):
+        w = np.asarray(ref[s : s + length])
+        if not np.isfinite(w).all():
+            continue
+        d = dtw_naive(qn, zn(w), window=window)
+        if d < best_d:
+            best_d, best_s = d, s
+    return best_s, best_d
+
+
+# -- quarantine: mask + offline drivers ----------------------------------
+
+def test_window_finite_mask_matches_oracle():
+    ref, _ = _mk()
+    dirty = plant_nonfinite(ref, [(40, 3, np.nan), (200, 1, np.inf),
+                                  (300, 5, -np.inf)])
+    got = np.asarray(window_finite_mask(jnp.asarray(dirty), 48))
+    assert np.array_equal(got, finite_window_mask_np(dirty, 48))
+    # sanitize: identity on the finite samples, zero at the bad ones
+    s = np.asarray(sanitize_series(jnp.asarray(dirty)))
+    bad = ~np.isfinite(dirty)
+    assert np.array_equal(s[~bad], dirty[~bad])
+    assert np.all(s[bad] == 0.0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_offline_quarantine_exact_on_survivors(backend):
+    """Dirty-ref search equals brute force over the finite windows only."""
+    ref, queries = _mk(seed=1)
+    length, w = queries.shape[1], 5
+    dirty = plant_nonfinite(ref, [(100, 4, np.nan), (250, 2, np.inf)])
+    n_bad = int((~finite_window_mask_np(dirty, length)).sum())
+    res = subsequence_search(
+        jnp.asarray(dirty), jnp.asarray(queries[0]), length, w,
+        backend=backend,
+    )
+    bs, bd = _brute_valid(dirty, queries[0], length, w)
+    assert int(res.quarantined) == n_bad
+    assert int(res.best_start) == bs
+    np.testing.assert_allclose(float(res.best_dist), bd, rtol=2e-5)
+
+    multi = multi_query_search(
+        jnp.asarray(dirty), jnp.asarray(queries), length, w, backend=backend
+    )
+    assert int(multi.quarantined) == n_bad
+    for qi in range(queries.shape[0]):
+        bs_q, bd_q = _brute_valid(dirty, queries[qi], length, w)
+        assert int(multi.best_start[qi]) == bs_q
+        np.testing.assert_allclose(float(multi.best_dist[qi]), bd_q, rtol=2e-5)
+
+
+def test_quarantine_agrees_across_variants_and_drivers():
+    """nolb / persistent / host all exclude the same windows."""
+    ref, queries = _mk(seed=2)
+    length, w = queries.shape[1], 5
+    dirty = plant_nonfinite(ref, [(80, 6, np.nan)])
+    host = multi_query_search(jnp.asarray(dirty), jnp.asarray(queries),
+                              length, w)
+    nolb = multi_query_search(jnp.asarray(dirty), jnp.asarray(queries),
+                              length, w, variant="eapruned_nolb")
+    pers = multi_query_search(jnp.asarray(dirty), jnp.asarray(queries),
+                              length, w, rounds="persistent")
+    for other in (nolb, pers):
+        np.testing.assert_allclose(
+            np.asarray(host.best_dist), np.asarray(other.best_dist), rtol=2e-5
+        )
+        assert np.array_equal(
+            np.asarray(host.best_start), np.asarray(other.best_start)
+        )
+
+
+def test_quarantine_off_is_the_legacy_path():
+    """quarantine=False on clean data is bit-identical to quarantine=True."""
+    ref, queries = _mk(seed=3)
+    length, w = queries.shape[1], 5
+    on = subsequence_search(jnp.asarray(ref), jnp.asarray(queries[0]),
+                            length, w)
+    off = subsequence_search(jnp.asarray(ref), jnp.asarray(queries[0]),
+                             length, w, quarantine=False)
+    assert int(on.best_start) == int(off.best_start)
+    assert float(on.best_dist) == float(off.best_dist)
+    assert int(on.quarantined) == 0 and int(off.quarantined) == 0
+
+
+# -- quarantine: streaming ------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_stream_quarantine_matches_offline(backend):
+    ref, queries = _mk(seed=4)
+    length, w = queries.shape[1], 5
+    dirty = plant_nonfinite(ref, [(100, 4, np.nan), (250, 2, np.inf)])
+    off = multi_query_search(
+        jnp.asarray(dirty), jnp.asarray(queries), length, w, backend=backend
+    )
+    eng = StreamSearchEngine(
+        jnp.asarray(queries), length=length, window=w, backend=backend,
+        stream_chunk=96,
+    )
+    feed(eng, dirty, [77])
+    bs, bd = eng.best()
+    assert np.array_equal(np.asarray(bs), np.asarray(off.best_start))
+    np.testing.assert_allclose(np.asarray(bd), np.asarray(off.best_dist),
+                               rtol=2e-5)
+    assert eng.quarantined_windows == int(off.quarantined)
+    assert eng.quarantined_samples == 6
+
+
+def test_all_nonfinite_stream_keeps_serving():
+    """A fully poisoned stream yields no match, finite incumbents, and the
+    engine still answers afterwards."""
+    _, queries = _mk(seed=5, n_ref=10)
+    length, w = queries.shape[1], 5
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             stream_chunk=64)
+    eng.ingest(np.full(150, np.nan))
+    bs, bd = eng.best()
+    assert np.all(np.asarray(bs) == -1)
+    assert np.all(np.isfinite(np.asarray(bd)))  # BIG sentinel, never NaN
+    assert eng.quarantined_windows == 150 - length + 1
+    # a clean region arriving later is searched exactly (its own windows)
+    rng = np.random.default_rng(6)
+    clean = np.cumsum(rng.normal(size=200))
+    eng.ingest(clean)
+    bs2, bd2 = eng.best()
+    assert np.all(np.asarray(bs2) >= 150)  # match lives in the clean region
+    assert np.all(np.isfinite(np.asarray(bd2)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 4))
+def test_stream_fuzz_quarantine_parity(seed, chunking_idx):
+    """Random NaN/Inf runs x adversarial chunkings: offline parity on the
+    finite regions, quarantined counts agree with the oracle."""
+    rng = np.random.default_rng(seed)
+    n, length, w = 230, 32, 3
+    ref = np.cumsum(rng.normal(size=n))
+    n_bursts = int(rng.integers(0, 3))
+    bursts = [
+        (int(rng.integers(0, n - 8)), int(rng.integers(1, 8)),
+         rng.choice([np.nan, np.inf, -np.inf]))
+        for _ in range(n_bursts)
+    ]
+    dirty = plant_nonfinite(ref, bursts)
+    queries = np.cumsum(rng.normal(size=(2, length)), axis=1)
+    sizes = adversarial_chunkings(n, length)[chunking_idx]
+    off = multi_query_search(jnp.asarray(dirty), jnp.asarray(queries),
+                             length, w, backend="jax")
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             backend="jax", stream_chunk=64)
+    feed(eng, dirty, sizes)
+    bs, bd = eng.best()
+    np.testing.assert_allclose(np.asarray(bd), np.asarray(off.best_dist),
+                               rtol=2e-5)
+    assert eng.quarantined_windows == int(
+        (~finite_window_mask_np(dirty, length)).sum()
+    )
+
+
+# -- satellite: zero-new-window ingest is a no-op -------------------------
+
+def test_zero_window_ingest_noop():
+    """ingest_chunk with tail+chunk < length extends the tail and returns
+    unchanged incumbents with zero rounds/lanes (regression: used to
+    assert)."""
+    _, queries = _mk(seed=8, nq=2)
+    length, w = queries.shape[1], 5
+    qn = znorm(jnp.asarray(queries))
+    u, low = jax.vmap(envelope, in_axes=(0, None))(qn, w)
+    ub, best = initial_incumbents(2, qn.dtype)
+    tail = jnp.asarray(np.ones(10))
+    chunk = jnp.asarray(np.ones(5))
+    new_tail, res = ingest_chunk(
+        tail, chunk, qn, u, low, ub, best, 0, length=length, window=w
+    )
+    assert isinstance(res, IngestResult)
+    assert new_tail.shape[0] == 15
+    assert np.array_equal(np.asarray(res.ub), np.asarray(ub))
+    assert np.array_equal(np.asarray(res.best), np.asarray(best))
+    assert np.all(np.asarray(res.rounds) == 0)
+    assert np.all(np.asarray(res.lanes) == 0)
+    assert int(res.quarantined) == 0
+
+
+def test_tiny_chunks_before_first_window():
+    """An engine fed single samples below one window length stays a no-op
+    and then finds the same result as offline."""
+    ref, queries = _mk(seed=9, n_ref=200)
+    length, w = queries.shape[1], 5
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w)
+    for i in range(length - 1):
+        eng.ingest(ref[i : i + 1])
+    assert eng.rounds == 0 and eng.n_windows == 0
+    eng.ingest(ref[length - 1 :])
+    off = multi_query_search(jnp.asarray(ref), jnp.asarray(queries),
+                             length, w)
+    np.testing.assert_allclose(np.asarray(eng.best()[1]),
+                               np.asarray(off.best_dist), rtol=2e-5)
+
+
+# -- typed guards ---------------------------------------------------------
+
+def test_guard_taxonomy_is_catchable_as_builtin():
+    assert issubclass(SearchInputError, ValueError)
+    assert issubclass(NonFiniteInputError, SearchInputError)
+    assert issubclass(StreamStateError, RuntimeError)
+
+
+def test_batch_entry_guards():
+    q = jnp.asarray(np.random.default_rng(0).normal(size=32))
+    cands = jnp.asarray(np.random.default_rng(1).normal(size=(4, 32)))
+    with pytest.raises(SearchInputError):
+        ea_pruned_dtw_batch(q, cands[:, :16], 10.0, window=3)  # length clash
+    with pytest.raises(SearchInputError):
+        ea_pruned_dtw_batch(q, cands[None], 10.0, window=3)  # ndim clash
+    with pytest.raises(SearchInputError):
+        ea_pruned_dtw_batch(q, cands, 10.0, window=-1)
+    with pytest.raises(NonFiniteInputError):
+        ea_pruned_dtw_batch(q.at[3].set(np.nan), cands, 10.0, window=3)
+    with pytest.raises(NonFiniteInputError):
+        ea_pruned_dtw_batch(q, cands, np.nan, window=3)
+    with pytest.raises(SearchInputError):
+        ea_pruned_dtw_multi_batch(q, cands[None], 10.0, window=3)  # 1-D qs
+    with pytest.raises(SearchInputError):
+        cb_bad = jnp.full((4, 16), 1.0)
+        ea_pruned_dtw_batch(q, cands, 10.0, window=3, cb=cb_bad)
+    with pytest.raises(SearchInputError):
+        cb_neg = jnp.full((4, 32), -1.0)
+        ea_pruned_dtw_batch(q, cands, 10.0, window=3, cb=cb_neg)
+
+
+def test_search_entry_guards():
+    ref, queries = _mk(seed=10, n_ref=120)
+    length = queries.shape[1]
+    with pytest.raises(SearchInputError):
+        subsequence_search(jnp.asarray(ref), jnp.asarray(queries), length, 5)
+    with pytest.raises(SearchInputError):  # integer dtype
+        subsequence_search(jnp.arange(120), jnp.asarray(queries[0]),
+                           length, 5)
+    with pytest.raises(SearchInputError):  # ref shorter than one window
+        subsequence_search(jnp.asarray(ref[: length - 1]),
+                           jnp.asarray(queries[0]), length, 5)
+    with pytest.raises(SearchInputError):  # window >= length
+        subsequence_search(jnp.asarray(ref), jnp.asarray(queries[0]),
+                           length, length)
+    with pytest.raises(NonFiniteInputError):
+        subsequence_search(jnp.asarray(ref),
+                           jnp.asarray(queries[0]).at[0].set(np.inf),
+                           length, 5)
+    with pytest.raises(NonFiniteInputError):
+        multi_query_search(jnp.asarray(ref),
+                           jnp.asarray(queries).at[1, 3].set(np.nan),
+                           length, 5)
+    with pytest.raises(NonFiniteInputError):
+        StreamSearchEngine(jnp.asarray(queries).at[0, 0].set(np.nan),
+                           length=length, window=5)
+    with pytest.raises(SearchInputError):
+        StreamSearchEngine(jnp.asarray(queries), length=length, window=5,
+                           batch=0)
+
+
+def test_stream_state_errors_carry_context():
+    _, queries = _mk(seed=11, nq=2)
+    length, w = queries.shape[1], 5
+    qn = znorm(jnp.asarray(queries))
+    u, low = jax.vmap(envelope, in_axes=(0, None))(qn, w)
+    ub, best = initial_incumbents(2, qn.dtype)
+    big = jnp.asarray(np.ones(100))
+    with pytest.raises(StreamStateError) as ei:
+        ingest_chunk(jnp.zeros(0), big, qn, u, low, ub, best, 0,
+                     length=length, window=w, pad_to=64, chunk_index=7)
+    assert ei.value.chunk_index == 7
+    assert "pad_to" in str(ei.value) and "chunk_index=7" in str(ei.value)
+    overlong_tail = jnp.asarray(np.ones(length + 3))
+    with pytest.raises(StreamStateError) as ei:
+        ingest_chunk(overlong_tail, big[:40], qn, u, low, ub, best, 90,
+                     length=length, window=w, pad_to=64)
+    assert ei.value.n_seen == 90 + length + 3
+    with pytest.raises(SearchInputError):  # dtype guard, before any jit
+        ingest_chunk(jnp.zeros(0), jnp.arange(100), qn, u, low, ub, best, 0,
+                     length=length, window=w)
+
+
+# -- debug mode -----------------------------------------------------------
+
+def test_checked_call_trips_on_device_nan():
+    with pytest.raises(NonFiniteInputError):
+        guards.checked_call(jax.jit(lambda x: x - x + jnp.log(x)),
+                            jnp.asarray(-1.0))
+    out = guards.checked_call(jax.jit(lambda x: x * 2), jnp.asarray(3.0))
+    assert float(out) == 6.0
+
+
+def test_debug_checks_clean_and_dirty_streams():
+    """The incumbent tripwire stays silent on clean AND quarantined-dirty
+    streams (the quarantine exists so it never needs to fire)."""
+    ref, queries = _mk(seed=12, n_ref=220)
+    length, w = queries.shape[1], 5
+    dirty = plant_nonfinite(ref, [(60, 5, np.nan)])
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             backend="jax", debug_checks=True,
+                             stream_chunk=64)
+    feed(eng, dirty, [70])
+    assert np.all(np.isfinite(np.asarray(eng.best()[1])))
+    assert eng.debug_checks
+
+
+def test_debug_checks_env_var(monkeypatch):
+    monkeypatch.setenv(guards.DEBUG_ENV_VAR, "1")
+    assert guards.debug_checks_enabled(None)
+    _, queries = _mk(seed=13)
+    eng = StreamSearchEngine(jnp.asarray(queries), length=queries.shape[1],
+                             window=5)
+    assert eng.debug_checks
+    monkeypatch.delenv(guards.DEBUG_ENV_VAR)
+    assert not guards.debug_checks_enabled(None)
+
+
+# -- checkpoint/restore ---------------------------------------------------
+
+def _run_engine(dirty, queries, length, w, sizes, **kw):
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             stream_chunk=64, **kw)
+    feed(eng, dirty, sizes)
+    return eng
+
+
+def test_save_restore_roundtrip():
+    ref, queries = _mk(seed=14, n_ref=300)
+    length, w = queries.shape[1], 5
+    dirty = plant_nonfinite(ref, [(90, 3, np.nan)])
+    full = _run_engine(dirty, queries, length, w, [64], ring_capacity=40)
+
+    # stop half-way, snapshot, restore into a FRESH engine, finish
+    half = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                              stream_chunk=64, ring_capacity=40)
+    feed(half, dirty[:128], [64])
+    state = half.save_state()
+    fresh = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                               stream_chunk=64, ring_capacity=40)
+    fresh.restore_state(state)
+    assert fresh.n_seen == half.n_seen
+    feed(fresh, dirty[128:], [64])
+    assert np.array_equal(np.asarray(fresh.best()[0]),
+                          np.asarray(full.best()[0]))
+    np.testing.assert_allclose(np.asarray(fresh.best()[1]),
+                               np.asarray(full.best()[1]), rtol=0)
+    assert fresh.quarantined_windows == full.quarantined_windows
+    assert np.array_equal(fresh.recent(), full.recent())
+
+
+def test_restore_rejects_mismatched_state():
+    _, queries = _mk(seed=15)
+    length, w = queries.shape[1], 5
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w)
+    state = eng.save_state()
+    with pytest.raises(StreamStateError):  # wrong query count
+        StreamSearchEngine(jnp.asarray(queries[:1]), length=length,
+                           window=w).restore_state(state)
+    bad = dict(state)
+    bad["tail"] = np.zeros(length + 5)
+    with pytest.raises(StreamStateError):
+        eng.restore_state(bad)
+    missing = {k: v for k, v in state.items() if k != "ub"}
+    with pytest.raises(StreamStateError):
+        eng.restore_state(missing)
+    with pytest.raises(StreamStateError):  # ring config disagreement
+        StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                           ring_capacity=16).restore_state(state)
+
+
+# -- supervisor -----------------------------------------------------------
+
+def _chunks(series, size):
+    return [series[p : p + size] for p in range(0, len(series), size)]
+
+
+def test_supervisor_retries_transient_faults(tmp_path):
+    """Faults on arrivals 2 and 5 (once each): same final result as the
+    clean run, with restarts recorded and backoff sleeps taken."""
+    ref, queries = _mk(seed=16, n_ref=300)
+    length, w = queries.shape[1], 5
+    dirty = plant_nonfinite(ref, [(120, 3, np.inf)])
+    baseline = _run_engine(dirty, queries, length, w, [48])
+
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             stream_chunk=64)
+    faulty = FaultyEngine(eng, fail_at={2, 5})
+    sleeps = []
+    sup = SearchSupervisor(faulty, str(tmp_path), ckpt_every=2,
+                           backoff=0.01, sleep=sleeps.append)
+    for c in _chunks(dirty, 48):
+        sup.ingest(c)
+    assert sup.restarts == 2
+    assert sleeps == [0.01, 0.01]  # one first-attempt backoff per fault
+    np.testing.assert_allclose(np.asarray(eng.best()[1]),
+                               np.asarray(baseline.best()[1]), rtol=0)
+    assert np.array_equal(np.asarray(eng.best()[0]),
+                          np.asarray(baseline.best()[0]))
+    assert sup.monitor.ewma is not None  # straggler stats observed
+
+
+def test_supervisor_gives_up_after_max_retries(tmp_path):
+    _, queries = _mk(seed=17)
+    length, w = queries.shape[1], 5
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w)
+    sup = SearchSupervisor(eng, str(tmp_path), max_retries=2, backoff=0.0,
+                           sleep=lambda _t: None)
+
+    def always_fail(_i):
+        raise RuntimeError("hard down")
+
+    with pytest.raises(RuntimeError, match="exceeded 2 retries"):
+        sup.ingest(np.ones(100), fail_injector=always_fail)
+
+
+def test_supervisor_reraises_caller_bugs(tmp_path):
+    """StreamStateError is a bug, not a transient: no retry, no rollback."""
+    _, queries = _mk(seed=18)
+    length, w = queries.shape[1], 5
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             stream_chunk=64)
+    sup = SearchSupervisor(eng, str(tmp_path), max_retries=5,
+                           sleep=lambda _t: None)
+    eng._tail = jnp.zeros(length + 3)  # corrupt the carried state
+    with pytest.raises(StreamStateError):
+        sup.ingest(np.ones(100))
+    assert sup.restarts == 0
+
+
+def test_supervisor_kill_and_resume(tmp_path):
+    """Kill after arrival 5, rebuild everything, resume(): identical final
+    incumbents to the uninterrupted run."""
+    ref, queries = _mk(seed=19, n_ref=300)
+    length, w = queries.shape[1], 5
+    dirty = plant_nonfinite(ref, [(150, 4, np.nan)])
+    chunks = _chunks(dirty, 48)
+    baseline = _run_engine(dirty, queries, length, w, [48])
+
+    eng1 = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                              stream_chunk=64, ring_capacity=32)
+    sup1 = SearchSupervisor(eng1, str(tmp_path), ckpt_every=2)
+    for c in chunks[:5]:
+        sup1.ingest(c)
+    del eng1, sup1  # the process dies here
+
+    eng2 = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                              stream_chunk=64, ring_capacity=32)
+    sup2 = SearchSupervisor(eng2, str(tmp_path), ckpt_every=2)
+    k = sup2.resume()
+    assert k == 4  # last checkpoint: ckpt_every boundary before the kill
+    for c in chunks[k:]:
+        sup2.ingest(c)
+    np.testing.assert_allclose(np.asarray(eng2.best()[1]),
+                               np.asarray(baseline.best()[1]), rtol=0)
+    assert np.array_equal(np.asarray(eng2.best()[0]),
+                          np.asarray(baseline.best()[0]))
+    assert eng2.quarantined_windows == baseline.quarantined_windows
+    assert eng2.n_seen == baseline.n_seen
