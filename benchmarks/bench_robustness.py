@@ -1,4 +1,6 @@
 """search/robustness: quarantine-prepass overhead on clean data.
+Also search/resilient (``run_resilient``): the fault-tolerant sharded
+executor's overhead over the plain offline driver on a healthy system.
 
 The non-finite quarantine (DESIGN.md §2.6) is on by default, so its cost on
 *clean* data is a tax every search pays. The contract is that the tax is one
@@ -104,8 +106,88 @@ def run(
     ]
 
 
+def run_resilient(
+    ref_len: int = 16_000,
+    length: int = 128,
+    window_ratio: float = 0.1,
+    n_queries: int = 4,
+    n_shards: int = 2,
+    pairs: int = 5,
+    backend: str = "jax",
+    dataset: str = "ECG",
+):
+    """search/resilient: per-shard executor overhead on a healthy system.
+
+    The resilient executor (DESIGN.md §2.7) buys shard-failure recovery by
+    running the search as ``n_shards`` sequential range dispatches with a
+    host-side incumbent fold between them, instead of one offline driver
+    call. On a healthy system the contract is that this costs only the
+    extra dispatch boundaries — the carried ``ub_init`` seeding means the
+    later ranges do *less* DTW work, not more. Parity of the answers is
+    asserted before timing; the same alternating paired protocol as above.
+
+    CSV rows (name,us_per_call,derived):
+      search/resilient/q{Q}/l{l}/s{S}/{backend}/plain     — offline driver
+      search/resilient/q{Q}/l{l}/s{S}/{backend}/sharded   — resilient exec
+      search/resilient/q{Q}/l{l}/s{S}/{backend}/overhead  — best-of ratio
+        (plain/sharded; ``speedup=`` so regressions gate bench-diff,
+        ``coverage`` pinned at 1.0)
+    """
+    from repro.search import multi_query_search, resilient_search
+
+    w = max(int(length * window_ratio), 1)
+    ref = jnp.asarray(make_dataset(dataset, ref_len, seed=0), jnp.float32)
+    queries = jnp.asarray(
+        make_queries(dataset, n_queries, length, seed=1), jnp.float32
+    )
+
+    def plain():
+        res = multi_query_search(ref, queries, length, w, backend=backend)
+        jax.block_until_ready(res.best_dist)
+        return res
+
+    def sharded():
+        return resilient_search(ref, queries, length, w, n_shards=n_shards,
+                                backend=backend)
+
+    # warm both traces, then pin healthy-path parity before timing
+    p, s = plain(), sharded()
+    agree = bool(
+        s.coverage == 1.0
+        and np.array_equal(s.best_start, np.asarray(p.best_start))
+        and np.allclose(s.best_dist, np.asarray(p.best_dist), rtol=2e-5)
+    )
+    assert agree, "resilient executor diverged from the offline driver"
+
+    t_plain, t_shard, ratios = [], [], []
+    for _ in range(pairs):
+        t0 = time.time()
+        plain()
+        tp = time.time() - t0
+        t0 = time.time()
+        sharded()
+        ts = time.time() - t0
+        t_plain.append(tp)
+        t_shard.append(ts)
+        ratios.append(tp / ts if ts > 0 else 0.0)
+    median_ratio = statistics.median(ratios)
+    ratio = min(t_plain) / min(t_shard) if min(t_shard) > 0 else 0.0
+    overhead_pct = (1.0 / ratio - 1.0) * 100.0 if ratio > 0 else float("inf")
+
+    tag = f"search/resilient/q{n_queries}/l{length}/s{n_shards}/{backend}"
+    return [
+        (f"{tag}/plain", min(t_plain) * 1e6, f"agree={agree}"),
+        (f"{tag}/sharded", min(t_shard) * 1e6,
+         f"agree={agree};attempts={s.attempts}"),
+        (f"{tag}/overhead", ratio,
+         f"speedup={ratio:.4f};overhead_pct={overhead_pct:.2f};"
+         f"median_pair_ratio={median_ratio:.4f};coverage={s.coverage:.2f};"
+         f"pairs={pairs}"),
+    ]
+
+
 def main() -> None:
-    rows = run()
+    rows = run() + run_resilient()
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 

@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV:
   * search/stream/* — streaming engine ingest vs full recompute per chunk
   * search/robustness/* — quarantine-prepass overhead on clean data
                      (must sit within noise of the prepass compiled out)
+  * search/resilient/* — fault-tolerant sharded executor vs the plain
+                     offline driver on a healthy system (coverage 1.0)
   * search/persistent/* — one-launch persistent sweep vs host round driver
                      (both backends; dispatch counts in the speedup rows)
   * dtw/*          — per-computation EA/Pruned/full work + time comparison
@@ -73,7 +75,7 @@ def main() -> None:
     artifact = {
         "meta": {"quick": bool(args.quick), "backend": jax.default_backend()},
         "suites": [], "multiq": [], "stream": [], "robustness": [],
-        "persistent": [], "dtw": [], "roofline": [],
+        "resilient": [], "persistent": [], "dtw": [], "roofline": [],
     }
 
     print("name,us_per_call,derived")
@@ -111,6 +113,16 @@ def main() -> None:
     for name, us, derived in rb_rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
         artifact["robustness"].append(_suite_record(name, us, derived))
+
+    if args.quick:
+        # few shards over a short ref: the executor's dispatch boundaries
+        # dominate, so extra pairs keep the ratio above the box's noise
+        rs_rows = bench_robustness.run_resilient(ref_len=6_000, pairs=9)
+    else:
+        rs_rows = bench_robustness.run_resilient()
+    for name, us, derived in rs_rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+        artifact["resilient"].append(_suite_record(name, us, derived))
 
     if args.quick:
         # more pairs than the other quick suites: the two arms are within

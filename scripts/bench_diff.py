@@ -22,7 +22,10 @@ import subprocess
 import sys
 import tempfile
 
-SECTIONS = ("suites", "multiq", "stream", "robustness", "persistent", "dtw")
+SECTIONS = (
+    "suites", "multiq", "stream", "robustness", "resilient", "persistent",
+    "dtw",
+)
 
 
 def _index(artifact: dict) -> dict[str, dict]:

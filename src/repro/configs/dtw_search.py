@@ -65,6 +65,27 @@ Robustness knobs (DESIGN.md §2.6):
   ``debug_checks``  — per-ingest tripwire that no NaN reached the carried
                       incumbents; synchronous, debugging only (also
                       ``$REPRO_DEBUG_CHECKS``).
+
+Resilience knobs (DESIGN.md §2.7; ``search.resilient`` / ``serve``):
+
+  ``n_shards``          — work ranges the resilient executor partitions the
+                          candidate starts into (independent failure
+                          domains; ``search.resilient.resilient_search``).
+  ``shard_max_retries`` — transient failures tolerated per (range, shard)
+                          before the shard is marked failed and the range
+                          reassigned to a healthy one.
+  ``shard_backoff``     — base retry sleep in seconds (doubles per
+                          consecutive retry), as in the supervisors.
+  ``shard_timeout``     — soft per-range wall-clock budget; an attempt that
+                          completes late keeps its result but strikes its
+                          shard (``None`` disables).
+  ``require_full_coverage`` — raise ``CoverageError`` on any uncovered
+                          range instead of returning a degraded (but
+                          coverage-accounted) result.
+  ``async_ckpt``        — move ``SearchSupervisor`` checkpoint writes off
+                          the ingest thread (``train.checkpoint
+                          .AsyncCheckpointer``; restore paths barrier on
+                          in-flight writes).
 """
 from dataclasses import dataclass
 
@@ -89,6 +110,12 @@ class SearchConfig:
     ring_capacity: int | None = None  # monitoring ring over last W samples
     quarantine: bool = True          # non-finite window quarantine (§2.6)
     debug_checks: bool = False       # incumbent NaN tripwire (debug only)
+    n_shards: int = 4                # resilient-search work ranges (§2.7)
+    shard_max_retries: int = 2       # transient failures per (range, shard)
+    shard_backoff: float = 0.05      # base retry sleep, doubles per retry
+    shard_timeout: float | None = None  # soft per-range wall-clock budget
+    require_full_coverage: bool = False  # degraded result -> CoverageError
+    async_ckpt: bool = False         # off-thread supervisor checkpoints
 
     @property
     def window(self) -> int:

@@ -93,6 +93,11 @@ class TrainingSupervisor:
 
     def resume_or(self, state):
         """Restore the latest checkpoint if one exists."""
+        if self._async is not None:
+            # Write barrier: without it, latest_step can miss a submitted-
+            # but-uncommitted step and replay would rewind past real
+            # progress (same rule as SearchSupervisor._barrier).
+            self._async.wait()
         step = ckpt_lib.latest_step(self.ckpt_dir)
         if step is None:
             return state, 0

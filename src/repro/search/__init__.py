@@ -7,7 +7,17 @@ from repro.search.multi import (
     make_distributed_multi_search,
     multi_query_search,
 )
-from repro.search.streaming import IngestResult, ingest_chunk, initial_incumbents
+from repro.search.resilient import (
+    CoverageError,
+    ResilientSearchResult,
+    resilient_search,
+)
+from repro.search.streaming import (
+    IngestResult,
+    ingest_chunk,
+    initial_incumbents,
+    rescore_windows,
+)
 from repro.search.subsequence import VARIANTS, SearchResult, subsequence_search
 from repro.search.znorm import (
     append_window_stats,
@@ -20,10 +30,12 @@ from repro.search.znorm import (
 )
 
 __all__ = [
+    "CoverageError",
     "DistMultiSearchResult",
     "DistSearchResult",
     "IngestResult",
     "MultiSearchResult",
+    "ResilientSearchResult",
     "SearchResult",
     "VARIANTS",
     "append_window_stats",
@@ -36,6 +48,8 @@ __all__ = [
     "make_distributed_multi_search",
     "make_distributed_search",
     "multi_query_search",
+    "rescore_windows",
+    "resilient_search",
     "sanitize_series",
     "subsequence_search",
     "window_finite_mask",

@@ -31,13 +31,20 @@ from repro.core.batch import ea_pruned_dtw_batch
 from repro.core.compat import shard_map as _shard_map
 from repro.core.common import BIG
 from repro.core.lower_bounds import cascade_keogh_cumulative, envelope, lb_keogh, lb_kim_fl
-from repro.search.znorm import gather_norm_windows, window_stats, znorm
+from repro.search.znorm import (
+    gather_norm_windows,
+    sanitize_series,
+    window_finite_mask,
+    window_stats,
+    znorm,
+)
 
 
 class DistSearchResult(NamedTuple):
     best_start: jax.Array
     best_dist: jax.Array
     rounds: jax.Array
+    quarantined: jax.Array  # windows excluded by the non-finite quarantine
 
 
 def _local_lbs(ref, query_n, starts, valid, length, window, mu, sigma, chunk):
@@ -72,6 +79,7 @@ def make_distributed_search(
     rows_per_step: int = 1,
     block_k: int = 8,
     row_block: int = 128,
+    quarantine: bool = True,
 ):
     """Build a jitted distributed search fn for a given mesh/shape config.
 
@@ -81,6 +89,15 @@ def make_distributed_search(
     ``backend`` / ``rows_per_step`` / ``block_k`` / ``row_block`` select and
     tune the per-device DTW batch implementation exactly as in
     ``core.batch.ea_pruned_dtw_batch`` — every device runs the same backend.
+
+    ``quarantine`` (default on) threads the non-finite window mask through
+    every shard's cascade (DESIGN.md §2.6/§2.7): the mask is computed once
+    on the replicated raw reference, sharded alongside the candidate starts,
+    and poisoned windows ride each shard's rounds as ``+inf``-LB dead lanes
+    — the same sentinel machinery as the single-device drivers, no kernel
+    change. Per-shard exclusion counts are ``psum``-reduced into
+    ``DistSearchResult.quarantined``, which therefore equals the
+    single-device ``subsequence_search(...).quarantined`` exactly.
     """
     n_shards = 1
     for a in axis_names:
@@ -88,7 +105,19 @@ def make_distributed_search(
     spec_sharded = P(axis_names)
     spec_rep = P()
 
-    def local_search(ref, query_n, starts, valid):
+    def local_search(ref, query_n, starts, valid, q_ok):
+        def psum_all(x):
+            for a in axis_names:
+                x = jax.lax.psum(x, a)
+            return x
+
+        # Quarantine accounting before the mask folds into ``valid``: each
+        # shard counts its own real (non-padding) condemned windows, and the
+        # psum reconciles them into the global count every shard reports.
+        n_quar = psum_all(
+            jnp.sum(jnp.logical_and(valid, ~q_ok)).astype(jnp.int32)
+        )
+        valid = jnp.logical_and(valid, q_ok)
         mu, sigma = window_stats(ref, length)
         lbs = _local_lbs(ref, query_n, starts, valid, length, window, mu, sigma, chunk)
         order = jnp.argsort(lbs)
@@ -165,10 +194,11 @@ def make_distributed_search(
         is_best = jnp.isclose(st.best_d, g_min)
         cand_start = jnp.where(is_best, st.best, jnp.iinfo(jnp.int32).max)
         g_start = pmin_all(cand_start.astype(jnp.int32))
-        return g_min, g_start, pmax_all(st.r)
+        return g_min, g_start, pmax_all(st.r), n_quar
 
     @jax.jit
     def search_fn(ref: jax.Array, query: jax.Array) -> DistSearchResult:
+        ref = jnp.asarray(ref)
         query_n = znorm(jnp.asarray(query)[:length])
         n_win = ref.shape[0] - length + 1
         per = -(-n_win // n_shards)
@@ -176,16 +206,27 @@ def make_distributed_search(
         starts = jnp.arange(total, dtype=jnp.int32)
         valid = starts < n_win
         starts = jnp.minimum(starts, n_win - 1)
+        if quarantine:
+            # Mask on the raw series, sanitize before replication so shared
+            # prefix sums stay finite for the surviving windows (§2.6).
+            finite_ok = window_finite_mask(ref, length)
+            ref = sanitize_series(ref)
+            q_ok = finite_ok[starts]
+        else:
+            q_ok = jnp.ones_like(valid)
 
         shard = _shard_map(
             local_search,
             mesh=mesh,
-            in_specs=(spec_rep, spec_rep, spec_sharded, spec_sharded),
-            out_specs=(spec_rep, spec_rep, spec_rep),
+            in_specs=(
+                spec_rep, spec_rep, spec_sharded, spec_sharded, spec_sharded,
+            ),
+            out_specs=(spec_rep, spec_rep, spec_rep, spec_rep),
         )
-        best_d, best_s, rounds = shard(ref, query_n, starts, valid)
+        best_d, best_s, rounds, n_quar = shard(ref, query_n, starts, valid, q_ok)
         return DistSearchResult(
-            best_start=best_s, best_dist=best_d, rounds=rounds
+            best_start=best_s, best_dist=best_d, rounds=rounds,
+            quarantined=n_quar,
         )
 
     return search_fn

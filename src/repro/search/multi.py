@@ -104,6 +104,9 @@ class DistMultiSearchResult(NamedTuple):
     best_start: jax.Array  # (Q,)
     best_dist: jax.Array   # (Q,)
     rounds: jax.Array      # max rounds any device spent on the workload
+    quarantined: jax.Array  # windows excluded by the non-finite quarantine
+    #   (scalar: windows are query-independent; psum over shards == the
+    #   single-device count)
 
 
 def _round_slicers(batch: int):
@@ -513,6 +516,7 @@ def make_distributed_multi_search(
     rows_per_step: int = 1,
     block_k: int = 8,
     row_block: int = 128,
+    quarantine: bool = True,
 ):
     """Build a jitted distributed multi-query search fn for a mesh config.
 
@@ -528,6 +532,14 @@ def make_distributed_multi_search(
     stragglers cost masked rows, not DPs.
 
     ``backend`` is resolved once, here at closure-build time.
+
+    ``quarantine`` (default on) threads ``znorm.window_finite_mask`` through
+    every shard's per-query cascade: poisoned windows are condemned on the
+    shard that owns them (``+inf`` LB → dead-lane sentinel, query-
+    independent), counts are ``psum``-reduced into
+    ``DistMultiSearchResult.quarantined``, and the sanitized reference keeps
+    the shared prefix sums finite for survivors — exactly the single-device
+    contract of ``multi_query_search`` (DESIGN.md §2.6/§2.7).
     """
     backend = resolve_backend(backend)
     n_shards = 1
@@ -536,8 +548,18 @@ def make_distributed_multi_search(
     spec_sharded = P(axis_names)
     spec_rep = P()
 
-    def local_search(ref, queries_n, starts, valid):
+    def local_search(ref, queries_n, starts, valid, q_ok):
         nq = queries_n.shape[0]
+
+        def psum_all(x):
+            for a in axis_names:
+                x = jax.lax.psum(x, a)
+            return x
+
+        n_quar = psum_all(
+            jnp.sum(jnp.logical_and(valid, ~q_ok)).astype(jnp.int32)
+        )
+        valid = jnp.logical_and(valid, q_ok)
         mu, sigma = window_stats(ref, length)
         lbs = jax.vmap(
             lambda qn: _local_lbs(
@@ -639,10 +661,11 @@ def make_distributed_multi_search(
         is_best = jnp.isclose(st.best_d, g_min)
         cand_start = jnp.where(is_best, st.best, jnp.iinfo(jnp.int32).max)
         g_start = pmin_all(cand_start.astype(jnp.int32))
-        return g_min, g_start, pmax_all(jnp.max(st.r))
+        return g_min, g_start, pmax_all(jnp.max(st.r)), n_quar
 
     @jax.jit
     def search_fn(ref: jax.Array, queries: jax.Array) -> DistMultiSearchResult:
+        ref = jnp.asarray(ref)
         queries_n = znorm(jnp.asarray(queries)[:, :length])
         n_win = ref.shape[0] - length + 1
         per = -(-n_win // n_shards)
@@ -650,16 +673,27 @@ def make_distributed_multi_search(
         starts = jnp.arange(total, dtype=jnp.int32)
         valid = starts < n_win
         starts = jnp.minimum(starts, n_win - 1)
+        if quarantine:
+            finite_ok = window_finite_mask(ref, length)
+            ref = sanitize_series(ref)
+            q_ok = finite_ok[starts]
+        else:
+            q_ok = jnp.ones_like(valid)
 
         shard = _shard_map(
             local_search,
             mesh=mesh,
-            in_specs=(spec_rep, spec_rep, spec_sharded, spec_sharded),
-            out_specs=(spec_rep, spec_rep, spec_rep),
+            in_specs=(
+                spec_rep, spec_rep, spec_sharded, spec_sharded, spec_sharded,
+            ),
+            out_specs=(spec_rep, spec_rep, spec_rep, spec_rep),
         )
-        best_d, best_s, rounds = shard(ref, queries_n, starts, valid)
+        best_d, best_s, rounds, n_quar = shard(
+            ref, queries_n, starts, valid, q_ok
+        )
         return DistMultiSearchResult(
-            best_start=best_s, best_dist=best_d, rounds=rounds
+            best_start=best_s, best_dist=best_d, rounds=rounds,
+            quarantined=n_quar,
         )
 
     return search_fn

@@ -1,0 +1,301 @@
+"""Fault-tolerant sharded search: shard recovery with coverage accounting.
+
+``search/distributed.py`` maps the paper's search onto a mesh as ONE SPMD
+program: collectives run in lockstep, so a dead device kills the whole
+search — the runtime model has no per-shard failure domain. This module is
+the complementary host-side executor for deployments where shards *can*
+fail independently (processes, pods, RPC workers): candidate window starts
+are partitioned into per-shard work ranges, each range runs as an
+independent dispatch (``multi_query_search`` over the range's slice of the
+reference, seeded with the carried incumbents), and the host supervises
+with the same transient/guard-error split and ``StragglerMonitor`` as
+``serve.supervisor.SearchSupervisor``.
+
+Failure story (DESIGN.md §2.7):
+
+  * **Bounded retry with backoff** — a transient range failure
+    (``RuntimeError`` / ``ValueError`` / ``OSError``, which includes
+    ``TimeoutError``) sleeps an exponential backoff and retries on the same
+    shard up to ``max_retries`` times. Typed guard errors
+    (``SearchInputError``, ``StreamStateError``) are caller bugs and
+    re-raise immediately — the same split as the serving supervisor.
+  * **Reassignment** — a range that exhausts its retries marks its shard
+    failed; the range moves to the next healthy shard with a fresh retry
+    budget, and every later range still assigned to the failed shard skips
+    straight to reassignment. Only when *no* healthy shard can complete a
+    range does it become uncovered.
+  * **Coverage accounting** — the result always says what it covers:
+    ``coverage`` is the fraction of candidate windows actually searched and
+    ``uncovered`` lists the window-start ranges that were not. Over the
+    covered set the result is *exact* (every covered window was scanned
+    against an admissible incumbent); degraded results are reported, never
+    silently wrong. ``require_full_coverage=True`` raises ``CoverageError``
+    instead of returning a degraded result.
+  * **Incumbent carry across attempts** — the per-query upper-bound vector
+    is carried across ranges, retries, and reassignments; a tighter bound
+    from anywhere makes every later range abandon earlier (the paper's
+    ub-tightening trick, rotated across shards). A *failed* attempt may
+    also report partial progress by attaching ``partial_ub`` /
+    ``partial_best`` arrays to its exception: because each entry is an
+    *achieved* (start, distance) pair of a real window, folding it is a
+    plain incumbent update — admissible even though the range that produced
+    it will be re-run (the rerun needs only strict improvements; the
+    incumbent already points at the achieving window). A bare bound with no
+    achieving start is NOT folded: seeding a rerun of range R with a bound
+    achieved *inside* R would make the rerun unable to re-adopt that very
+    window (strict-improvement incumbents), losing its start.
+  * **Soft timeout** — with ``timeout`` set, an attempt that *completes*
+    but took longer than ``timeout`` seconds keeps its (correct) result,
+    but strikes its shard; a shard that accumulates more than
+    ``max_retries`` strikes is marked failed and its remaining ranges are
+    reassigned. (A runner that wants hard timeouts raises
+    ``TimeoutError`` itself — e.g. an RPC deadline — which takes the
+    transient-retry path above.)
+
+The executor is deliberately sequential on the host: determinism makes the
+fault recipes in ``tests/faults.py`` exactly reproducible, and the ranges
+themselves are where the device time goes.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Callable, NamedTuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import guards
+from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.search.multi import multi_query_search
+
+# The transient/guard split shared with serve.supervisor: retry these,
+# re-raise typed guard errors (caller bugs) immediately.
+_TRANSIENT = (RuntimeError, ValueError, OSError)
+
+
+class CoverageError(RuntimeError):
+    """Raised by ``require_full_coverage=True`` when ranges stay uncovered."""
+
+    def __init__(self, message: str, uncovered=()):
+        super().__init__(message)
+        self.uncovered = tuple(uncovered)
+
+
+class ResilientSearchResult(NamedTuple):
+    best_start: np.ndarray   # (Q,) start of each query's covered-set NN (-1: none)
+    best_dist: np.ndarray    # (Q,) its DTW distance (== seed when unbeaten)
+    coverage: float          # fraction of candidate windows searched
+    uncovered: tuple         # ((lo, hi), ...) window-start ranges not searched
+    quarantined: int         # non-finite-quarantined windows over the covered set
+    attempts: int            # range attempts issued (including failures)
+    reassignments: int       # ranges moved off a failed shard
+    failed_shards: tuple     # shard ids marked failed
+
+
+def partition_ranges(n_win: int, n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous per-shard window-start ranges covering ``[0, n_win)``."""
+    per = -(-n_win // n_shards) if n_win else 0
+    out = []
+    lo = 0
+    while lo < n_win:
+        out.append((lo, min(lo + per, n_win)))
+        lo += per
+    return out
+
+
+def _merge_ranges(ranges) -> tuple:
+    out = []
+    for lo, hi in sorted(ranges):
+        if out and lo <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], hi))
+        else:
+            out.append((lo, hi))
+    return tuple(out)
+
+
+def resilient_search(
+    ref,
+    queries,
+    length: int,
+    window: int,
+    *,
+    n_shards: int = 4,
+    variant: str = "eapruned",
+    batch: int = 64,
+    band_width: int | None = None,
+    chunk: int = 4096,
+    backend: str | None = None,
+    rows_per_step: int = 1,
+    block_k: int = 8,
+    row_block: int = 128,
+    ub_init=None,
+    quarantine: bool = True,
+    max_retries: int = 2,
+    backoff: float = 0.05,
+    timeout: float | None = None,
+    require_full_coverage: bool = False,
+    runner: Callable | None = None,
+    sleep: Callable[[float], None] = time.sleep,
+    clock: Callable[[], float] = time.time,
+    monitor: StragglerMonitor | None = None,
+) -> ResilientSearchResult:
+    """Nearest-window search executed as recoverable per-shard work ranges.
+
+    Same answers as ``multi_query_search`` when every range completes
+    (``coverage == 1.0``); exact over the covered set otherwise, with the
+    degradation reported in ``coverage`` / ``uncovered``.
+
+    Args:
+      ref: ``(N,)`` reference series.
+      queries: ``(Q, l)`` or ``(l,)`` raw queries.
+      length, window: as in ``multi_query_search``.
+      n_shards: work ranges (and conceptual failure domains) to partition
+        the candidate starts into.
+      variant, batch, band_width, chunk, backend, rows_per_step, block_k,
+        row_block, ub_init, quarantine: forwarded to each range's
+        ``multi_query_search`` dispatch.
+      max_retries: transient failures tolerated per (range, shard) before
+        the shard is marked failed and the range reassigned; also the
+        soft-timeout strike budget per shard.
+      backoff: base retry sleep in seconds (doubles per consecutive retry).
+      timeout: soft per-attempt wall-clock budget in seconds (see module
+        docstring); ``None`` disables.
+      require_full_coverage: raise ``CoverageError`` instead of returning a
+        degraded result.
+      runner: injection point for the per-range search:
+        ``runner(shard_id, lo, hi, ub) -> (starts (Q,), dists (Q,),
+        quarantined)`` with ``starts`` in *global* window coordinates
+        (-1 where the seed was unbeaten). Defaults to the real dispatch;
+        tests wrap it with ``tests.faults.ShardFaultInjector``.
+      sleep, clock, monitor: injection points (tests pass recorders and a
+        deterministic clock so timeout tests don't depend on wall time).
+
+    Returns: ``ResilientSearchResult``.
+    """
+    if n_shards < 1:
+        raise guards.SearchInputError("n_shards must be >= 1")
+    if max_retries < 0:
+        raise guards.SearchInputError("max_retries must be >= 0")
+    queries = jnp.atleast_2d(jnp.asarray(queries))
+    guards.ensure_series(ref, "ref", ndim=1, min_len=length)
+    guards.ensure_series(queries, "queries", ndim=2, min_len=length)
+    guards.ensure_finite(queries, "queries")
+    ref = jnp.asarray(ref)
+    nq = int(queries.shape[0])
+    n_win = int(ref.shape[0]) - length + 1
+    monitor = monitor or StragglerMonitor()
+
+    if ub_init is None:
+        ub = np.full((nq,), np.inf)
+    else:
+        ub = np.broadcast_to(np.asarray(ub_init, np.float64), (nq,)).copy()
+    best = np.full((nq,), -1, np.int64)
+
+    if runner is None:
+
+        def runner(shard_id, lo, hi, ub_now):
+            # A range is searched as the offline driver over its slice:
+            # windows [lo, hi) live in ref[lo : hi + length - 1], and the
+            # carried incumbents ride in as warm ``ub_init`` seeds.
+            seg = ref[lo : hi + length - 1]
+            res = multi_query_search(
+                seg, queries, length=length, window=window, variant=variant,
+                batch=batch, band_width=band_width, chunk=chunk,
+                backend=backend, rows_per_step=rows_per_step,
+                block_k=block_k, row_block=row_block,
+                ub_init=jnp.asarray(ub_now, queries.dtype),
+                quarantine=quarantine,
+            )
+            s = np.asarray(res.best_start, np.int64)
+            s = np.where(s >= 0, s + lo, -1)
+            return s, np.asarray(res.best_dist, np.float64), int(res.quarantined)
+
+    work = deque(
+        (lo, hi, i % n_shards, 0) for i, (lo, hi) in
+        enumerate(partition_ranges(n_win, n_shards))
+    )
+    healthy = set(range(n_shards))
+    strikes = {s: 0 for s in range(n_shards)}
+    covered: list[tuple[int, int]] = []
+    uncovered: list[tuple[int, int]] = []
+    attempts = 0
+    reassignments = 0
+    quarantined = 0
+
+    def _fold(starts, dists):
+        nonlocal ub, best
+        s = np.asarray(starts, np.int64)
+        d = np.asarray(dists, np.float64)
+        improved = np.logical_and(s >= 0, d < ub)
+        ub = np.where(improved, d, ub)
+        best = np.where(improved, s, best)
+
+    def _reassign(lo, hi, off_shard):
+        nonlocal reassignments
+        for cand in sorted(healthy):
+            if cand != off_shard:
+                work.append((lo, hi, cand, 0))
+                reassignments += 1
+                return
+        uncovered.append((lo, hi))
+
+    while work:
+        lo, hi, shard, tries = work.popleft()
+        if shard not in healthy:
+            _reassign(lo, hi, shard)
+            continue
+        try:
+            attempts += 1
+            t0 = clock()
+            starts, dists, n_quar = runner(shard, lo, hi, ub)
+            dt = clock() - t0
+        except (guards.SearchInputError, guards.StreamStateError):
+            raise  # caller bug: retrying identical bad input cannot help
+        except _TRANSIENT as e:
+            # Admissible partial progress: achieved (start, distance) pairs
+            # only — see the module docstring for why a bare bound is not.
+            p_ub = getattr(e, "partial_ub", None)
+            p_best = getattr(e, "partial_best", None)
+            if p_ub is not None and p_best is not None:
+                _fold(np.broadcast_to(np.asarray(p_best, np.int64), (nq,)),
+                      np.broadcast_to(np.asarray(p_ub, np.float64), (nq,)))
+            tries += 1
+            if tries > max_retries:
+                healthy.discard(shard)
+                _reassign(lo, hi, shard)
+            else:
+                sleep(backoff * (2 ** (tries - 1)))
+                work.appendleft((lo, hi, shard, tries))
+            continue
+        monitor.observe(attempts - 1, dt)
+        _fold(starts, dists)
+        quarantined += int(n_quar)
+        covered.append((lo, hi))
+        if timeout is not None and dt > timeout:
+            # The result stands (it is a completed, exact range) but the
+            # shard is now suspect for *future* assignments.
+            strikes[shard] += 1
+            if strikes[shard] > max_retries:
+                healthy.discard(shard)
+
+    covered_n = sum(hi - lo for lo, hi in covered)
+    coverage = covered_n / n_win if n_win else 1.0
+    uncovered_m = _merge_ranges(uncovered)
+    if require_full_coverage and uncovered_m:
+        raise CoverageError(
+            f"search degraded: {n_win - covered_n}/{n_win} candidate "
+            f"windows uncovered after shard failures ({uncovered_m})",
+            uncovered=uncovered_m,
+        )
+    return ResilientSearchResult(
+        best_start=best,
+        best_dist=ub,
+        coverage=coverage,
+        uncovered=uncovered_m,
+        quarantined=quarantined,
+        attempts=attempts,
+        reassignments=reassignments,
+        failed_shards=tuple(sorted(set(range(n_shards)) - healthy)),
+    )

@@ -67,6 +67,7 @@ from repro.search.znorm import (
     sanitize_series,
     window_finite_mask,
     window_stats,
+    znorm,
 )
 
 
@@ -449,6 +450,96 @@ def ingest_chunk(
     keep = min(t + c, length - 1)
     new_tail = jnp.concatenate([jnp.asarray(tail, dt), chunk])[t + c - keep :]
     return new_tail, res
+
+
+_RESCORE_STATICS = (
+    "window", "variant", "band_width", "backend", "rows_per_step",
+    "block_k", "row_block",
+)
+
+
+@partial(jax.jit, static_argnames=_RESCORE_STATICS)
+def _rescore_impl(
+    windows,
+    starts,
+    queries_n,
+    u,
+    low,
+    ub0,
+    best0,
+    window,
+    variant,
+    band_width,
+    backend,
+    rows_per_step,
+    block_k,
+    row_block,
+):
+    nq = queries_n.shape[0]
+    k = windows.shape[0]
+    cand1 = jax.vmap(znorm)(windows)                       # (k, l)
+    cand = jnp.broadcast_to(cand1[None], (nq, k, windows.shape[1]))
+    cb = None
+    if variant == "eapruned":
+        cb = jax.vmap(cascade_keogh_cumulative)(cand, u, low)
+    ub_lanes = jnp.broadcast_to(ub0[:, None], (nq, k))
+    d = ea_pruned_dtw_multi_batch(
+        queries_n, cand, ub_lanes, window=window, band_width=band_width,
+        cb=cb, rows_per_step=rows_per_step, backend=backend,
+        block_k=block_k, row_block=row_block,
+    )
+    kmin = jnp.argmin(d, axis=1)
+    dmin = jnp.take_along_axis(d, kmin[:, None], axis=1)[:, 0]
+    improved = dmin < ub0
+    ub = jnp.where(improved, dmin, ub0)
+    best = jnp.where(improved, starts[kmin].astype(best0.dtype), best0)
+    return ub, best
+
+
+def rescore_windows(
+    windows: jax.Array,
+    starts: jax.Array,
+    queries_n: jax.Array,
+    u: jax.Array,
+    low: jax.Array,
+    ub: jax.Array,
+    best: jax.Array,
+    *,
+    window: int,
+    variant: str = "eapruned",
+    band_width: int | None = None,
+    backend: str | None = None,
+    rows_per_step: int = 1,
+    block_k: int = 8,
+    row_block: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    """Fold k explicitly-materialized windows into the carried incumbents.
+
+    The re-admission dispatch (DESIGN.md §2.7): when a quarantined window
+    becomes finite again after ``StreamSearchEngine.correct`` patches its bad
+    samples, its raw samples are handed here as ``windows`` ``(k, length)``
+    with ``starts`` ``(k,)`` in stream coordinates. Each window is
+    z-normalized directly (same normalization the prefix-sum stats would
+    have produced had the samples arrived clean) and scored against all Q
+    standing queries through the same per-lane-``ub`` multi-query batch the
+    ingest rounds use — the carried incumbents seed the abandon threshold,
+    so an already-good incumbent makes re-admitted windows cheap.
+
+    Returns the updated ``(ub, best)``; strict improvement only, like every
+    other incumbent fold.
+    """
+    guards.ensure_series(windows, "windows", ndim=2)
+    if variant not in MULTI_VARIANTS:
+        raise guards.SearchInputError(
+            f"variant must be one of {MULTI_VARIANTS}"
+        )
+    return _rescore_impl(
+        jnp.asarray(windows), jnp.asarray(starts, jnp.int32),
+        queries_n, u, low, jnp.asarray(ub), jnp.asarray(best),
+        window=window, variant=variant, band_width=band_width,
+        backend=resolve_backend(backend), rows_per_step=rows_per_step,
+        block_k=block_k, row_block=row_block,
+    )
 
 
 def initial_incumbents(

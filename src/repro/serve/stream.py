@@ -54,7 +54,11 @@ import jax.numpy as jnp
 from repro.core import guards
 from repro.core.lower_bounds import envelope
 from repro.search.multi import MULTI_VARIANTS
-from repro.search.streaming import ingest_chunk, initial_incumbents
+from repro.search.streaming import (
+    ingest_chunk,
+    initial_incumbents,
+    rescore_windows,
+)
 from repro.search.znorm import znorm
 
 
@@ -86,6 +90,19 @@ class _Ring:
         if self.count < self.capacity:
             return self.buf[: self.count].copy()
         return np.concatenate([self.buf[self.pos :], self.buf[: self.pos]])
+
+    def _phys(self, logical: int) -> int:
+        """Physical slot of the ``logical``-th oldest retained sample."""
+        if self.count < self.capacity:
+            return logical  # never wrapped: data occupies [0, count)
+        return (self.pos + logical) % self.capacity
+
+    def get(self, logical: int):
+        return self.buf[self._phys(logical)]
+
+    def patch(self, logical: int, value) -> None:
+        """Overwrite one retained sample in place (re-admission repair)."""
+        self.buf[self._phys(logical)] = value
 
 
 class StreamSearchEngine:
@@ -188,6 +205,8 @@ class StreamSearchEngine:
         self.debug_checks = guards.debug_checks_enabled(debug_checks)
         self._quarantined = jnp.asarray(0, jnp.int32)
         self._bad_samples = jnp.asarray(0, jnp.int32)
+        self._readmitted = 0
+        self._pending_rescore: list[tuple[np.ndarray, np.ndarray]] = []
         self._ring = (
             _Ring(ring_capacity, np.dtype(self._dtype))
             if ring_capacity is not None
@@ -229,6 +248,17 @@ class StreamSearchEngine:
         """Non-finite raw samples seen on the stream so far."""
         return int(self._bad_samples)
 
+    @property
+    def readmitted_windows(self) -> int:
+        """Quarantined windows re-admitted (rescored) after ``correct``."""
+        return self._readmitted
+
+    @property
+    def pending_rescore(self) -> int:
+        """Re-admitted windows queued but not yet rescored (flushes on the
+        next ``ingest`` / ``save_state``)."""
+        return sum(s.shape[0] for s, _ in self._pending_rescore)
+
     def best(self) -> tuple[jax.Array, jax.Array]:
         """Current ``(best_start, best_dist)`` per query, ``(Q,)`` each.
 
@@ -244,6 +274,136 @@ class StreamSearchEngine:
             raise ValueError("engine built without ring_capacity")
         return self._ring.view()
 
+    # -- re-admission ------------------------------------------------------
+    def correct(self, position: int, values) -> int:
+        """Patch previously non-finite samples; re-admit the windows they
+        poisoned (DESIGN.md §2.7).
+
+        A sensor that emitted NaN/Inf and later backfills real values calls
+        ``correct(position, values)`` with ``position`` in stream
+        coordinates. The samples are patched wherever the engine still
+        retains them (the carried tail, the monitoring ring), and every
+        *fully-past* window that becomes all-finite again is queued for
+        rescoring against the carried incumbents — the rescore itself runs
+        as one extra dispatch on the next ``ingest`` (or ``save_state``),
+        through ``search.streaming.rescore_windows``. Windows still
+        straddling the stream frontier need no queue: the next ingest scans
+        them through the (now patched) tail as usual.
+
+        Only re-admission is supported — every targeted sample must
+        currently be non-finite (``StreamStateError`` otherwise: rewriting
+        already-searched finite history would silently invalidate served
+        incumbents). Replacement ``values`` must be finite
+        (``NonFiniteInputError``), within the ingested stream
+        (``StreamStateError`` with ``n_seen`` otherwise), and within
+        retained history — without a ring that is just the ``length - 1``
+        tail, so fully-past windows are only recoverable when the engine
+        was built with ``ring_capacity >= length``.
+
+        Returns the number of windows queued for rescoring (0 is normal:
+        e.g. the patched region still overlaps other bad samples, or no
+        retained fully-past window covers it).
+        """
+        if not self.quarantine:
+            raise guards.StreamStateError(
+                "correct() is the quarantine re-admission path; this engine "
+                "was built with quarantine=False"
+            )
+        values = np.asarray(values, np.dtype(self._dtype)).reshape(-1)
+        k = int(values.shape[0])
+        if k == 0:
+            raise guards.SearchInputError("correct() needs >= 1 value")
+        if not np.all(np.isfinite(values)):
+            raise guards.NonFiniteInputError(
+                "replacement values must be finite — correct() re-admits "
+                "quarantined samples, it does not re-poison them"
+            )
+        position = int(position)
+        if position < 0:
+            raise guards.SearchInputError("position must be >= 0")
+        n_seen = self._n_seen
+        if position + k > n_seen:
+            raise guards.StreamStateError(
+                f"correct() targets [{position}, {position + k}) but only "
+                f"{n_seen} samples have arrived — cannot correct the future",
+                n_seen=n_seen, chunk_index=self._n_chunks,
+            )
+        tail_np = np.array(self._tail)  # mutable copy
+        tail_len = int(tail_np.shape[0])
+        ring_count = self._ring.count if self._ring is not None else 0
+        horizon = max(tail_len, ring_count)
+        if position < n_seen - horizon:
+            raise guards.StreamStateError(
+                f"correct() targets position {position} but retained "
+                f"history starts at {n_seen - horizon} (tail {tail_len}, "
+                f"ring {ring_count}) — the samples are gone",
+                n_seen=n_seen, chunk_index=self._n_chunks,
+            )
+        tail_base = n_seen - tail_len
+        ring_base = n_seen - ring_count
+        for i in range(k):
+            p = position + i
+            cur = (
+                tail_np[p - tail_base]
+                if p >= tail_base
+                else self._ring.get(p - ring_base)
+            )
+            if np.isfinite(cur):
+                raise guards.StreamStateError(
+                    f"sample at stream position {p} is already finite — "
+                    "correct() only re-admits quarantined samples",
+                    n_seen=n_seen, chunk_index=self._n_chunks,
+                )
+        for i in range(k):
+            p = position + i
+            if p >= tail_base:
+                tail_np[p - tail_base] = values[i]
+            if self._ring is not None and p >= ring_base:
+                self._ring.patch(p - ring_base, values[i])
+        self._tail = jnp.asarray(tail_np, self._dtype)
+        self._bad_samples = self._bad_samples - jnp.asarray(k, jnp.int32)
+
+        # Fully-past windows revived by this patch: starts overlapping the
+        # corrected region whose whole [s, s + length) is retained in the
+        # ring and is now all-finite. Each one overlaps a patched sample,
+        # so each was counted quarantined when it was scanned.
+        queued = 0
+        if self._ring is not None and ring_count >= self.length:
+            hist = self._ring.view()  # post-patch, covers [ring_base, n_seen)
+            s_lo = max(position - self.length + 1, ring_base, 0)
+            s_hi = min(position + k - 1, n_seen - self.length)
+            starts, wins = [], []
+            for s in range(s_lo, s_hi + 1):
+                w = hist[s - ring_base : s - ring_base + self.length]
+                if np.all(np.isfinite(w)):
+                    starts.append(s)
+                    wins.append(w.copy())
+            if starts:
+                self._pending_rescore.append(
+                    (np.asarray(starts, np.int64), np.stack(wins))
+                )
+                queued = len(starts)
+        return queued
+
+    def _flush_rescore(self) -> None:
+        """Rescore queued re-admitted windows against the incumbents."""
+        if not self._pending_rescore:
+            return
+        starts = np.concatenate([s for s, _ in self._pending_rescore])
+        wins = np.concatenate([w for _, w in self._pending_rescore])
+        self._pending_rescore = []
+        self._ub, self._best = rescore_windows(
+            jnp.asarray(wins, self._dtype), jnp.asarray(starts, jnp.int32),
+            self.queries_n, self.u, self.low, self._ub, self._best,
+            window=self.window, variant=self.variant,
+            band_width=self.band_width, backend=self.backend,
+            rows_per_step=self.rows_per_step, block_k=self.block_k,
+            row_block=self.row_block,
+        )
+        n = int(starts.shape[0])
+        self._quarantined = self._quarantined - jnp.asarray(n, jnp.int32)
+        self._readmitted += n
+
     # -- checkpoint -------------------------------------------------------
     def save_state(self) -> dict:
         """Snapshot the full carried state as a flat dict of numpy arrays.
@@ -257,6 +417,7 @@ class StreamSearchEngine:
         queries and knobs are *not* captured: they are construction-time
         configuration, and restore validates against the live engine's.
         """
+        self._flush_rescore()  # snapshot consistent incumbents, empty queue
         state = {
             "tail": np.asarray(self._tail),
             "ub": np.asarray(self._ub),
@@ -267,6 +428,7 @@ class StreamSearchEngine:
             "lanes": np.asarray(self._lanes, np.int32),
             "quarantined": np.asarray(self._quarantined, np.int32),
             "bad_samples": np.asarray(self._bad_samples, np.int32),
+            "readmitted": np.asarray(self._readmitted, np.int64),
         }
         if self._ring is not None:
             state["ring_buf"] = self._ring.buf.copy()
@@ -311,6 +473,10 @@ class StreamSearchEngine:
         self._lanes = jnp.asarray(state["lanes"], jnp.int32)
         self._quarantined = jnp.asarray(state["quarantined"], jnp.int32)
         self._bad_samples = jnp.asarray(state["bad_samples"], jnp.int32)
+        # Older checkpoints predate re-admission; snapshots never carry a
+        # pending queue (save_state flushes first).
+        self._readmitted = int(state.get("readmitted", 0))
+        self._pending_rescore = []
         if self._ring is not None:
             buf = np.asarray(state["ring_buf"])
             if buf.shape != self._ring.buf.shape:
@@ -333,6 +499,7 @@ class StreamSearchEngine:
         sized pieces (one dispatch each) and every piece is padded to the
         one static shape — no retrace, whatever the source's chunking.
         """
+        self._flush_rescore()  # re-admitted windows score before new ones
         chunk = jnp.asarray(chunk, self._dtype).reshape(-1)
         if chunk.shape[0] == 0:
             return self.best()

@@ -19,11 +19,24 @@ store): wrap a ``StreamSearchEngine`` and feed arrivals through
     fail again. After ``max_retries`` consecutive failures the original
     error propagates.
   * **Restore-and-replay after a crash** — a fresh process builds the same
-    engine + supervisor and calls ``resume()``: the latest checkpoint is
-    restored bit-exactly and the number of arrivals already absorbed is
-    returned, so the caller re-feeds its source from that index. Incumbents,
-    counters, tail, and the monitoring ring all come back; results are
-    identical to the uninterrupted run (pinned by ``tests/test_robustness``).
+    engine + supervisor and calls ``resume()``: the latest *readable*
+    checkpoint is restored bit-exactly and the number of arrivals already
+    absorbed is returned, so the caller re-feeds its source from that index.
+    A checkpoint damaged after commit (truncated leaf file, lost manifest —
+    the atomic rename protects against half-writes, not against disk faults)
+    is skipped and the next-older one restores instead; only when *no*
+    checkpoint is readable does ``resume()`` start the stream from scratch.
+    Incumbents, counters, tail, and the monitoring ring all come back;
+    results are identical to the uninterrupted run (pinned by
+    ``tests/test_robustness`` / ``tests/test_resilient``).
+  * **Async checkpoints** (``async_ckpt=True``) — serialization moves off
+    the ingest thread onto ``train.checkpoint.AsyncCheckpointer``; the
+    ingest path pays only the ``device_get`` snapshot. Every path that
+    restores state (``resume()``, the retry ``_rollback()``) takes the
+    writer's ``wait()`` barrier first, so replay never races an in-flight
+    write: without the barrier a resume could rewind past a submitted-but-
+    uncommitted step, and a rollback's subsequent checkpoint could collide
+    with the in-flight write of the same step.
 
 Rollback correctness note: a failure can strike mid-arrival (after some
 ``stream_chunk`` pieces of a large arrival already committed), leaving the
@@ -57,6 +70,9 @@ class SearchSupervisor:
       backoff: base retry sleep in seconds (doubles per consecutive retry).
       keep: checkpoints retained on disk (older ones pruned).
       sleep: injection point for the backoff sleep (tests pass a recorder).
+      async_ckpt: move checkpoint serialization off the ingest thread
+        (``train.checkpoint.AsyncCheckpointer``); restore paths barrier on
+        in-flight writes first. Call ``close()`` at shutdown to flush.
     """
 
     def __init__(
@@ -68,6 +84,7 @@ class SearchSupervisor:
         backoff: float = 0.05,
         keep: int = 3,
         sleep: Callable[[float], None] = time.sleep,
+        async_ckpt: bool = False,
     ):
         if ckpt_every < 1:
             raise ValueError("ckpt_every must be >= 1")
@@ -85,31 +102,74 @@ class SearchSupervisor:
         self.chunks_done = 0          # arrivals fully absorbed
         self._pending: list = []      # arrivals since the last snapshot
         self._snapshot = engine.save_state()
+        self._async = (
+            ckpt_lib.AsyncCheckpointer(ckpt_dir, keep=keep)
+            if async_ckpt
+            else None
+        )
 
     # -- persistence ------------------------------------------------------
+    def _barrier(self) -> None:
+        """Wait out in-flight async checkpoint writes (no-op when sync)."""
+        if self._async is not None:
+            self._async.wait()
+
     def resume(self) -> int:
-        """Restore the latest checkpoint, if any; returns the number of
-        arrivals already absorbed (the index to re-feed the source from)."""
-        step = ckpt_lib.latest_step(self.ckpt_dir)
-        if step is None:
-            return 0
-        state, step = ckpt_lib.restore(self.ckpt_dir, self.engine.save_state())
-        self.engine.restore_state(state)
-        self.chunks_done = int(step)
-        self._pending = []
-        self._snapshot = self.engine.save_state()
-        return self.chunks_done
+        """Restore the newest readable checkpoint, if any; returns the
+        number of arrivals already absorbed (the index to re-feed the
+        source from).
+
+        Walks committed checkpoints newest-first: one damaged after commit
+        (truncated/garbled leaf file, unreadable manifest — possible when
+        ``prune_old`` races a crash on a failing disk, or the filesystem
+        loses a just-renamed directory's contents) is skipped, and the
+        next-older checkpoint restores instead. Replay from an older index
+        is always safe — the caller re-feeds from the returned index and
+        the engine recomputes exactly what the lost checkpoints held.
+        """
+        self._barrier()
+        for step in reversed(ckpt_lib.steps(self.ckpt_dir)):
+            try:
+                state, step = ckpt_lib.restore(
+                    self.ckpt_dir, self.engine.save_state(), step=step
+                )
+                self.engine.restore_state(state)
+            except (guards.StreamStateError, OSError, ValueError, KeyError,
+                    EOFError):
+                continue  # damaged checkpoint: fall back to the next older
+            self.chunks_done = int(step)
+            self._pending = []
+            self._snapshot = self.engine.save_state()
+            return self.chunks_done
+        return 0
 
     def checkpoint(self) -> None:
         """Commit the engine state now (also called every ``ckpt_every``)."""
         state = self.engine.save_state()
-        ckpt_lib.save(self.ckpt_dir, state, self.chunks_done)
-        ckpt_lib.prune_old(self.ckpt_dir, self.keep)
+        if self._async is not None:
+            self._async.submit(state, self.chunks_done)
+        else:
+            ckpt_lib.save(self.ckpt_dir, state, self.chunks_done)
+            ckpt_lib.prune_old(self.ckpt_dir, self.keep)
         self._snapshot = state
         self._pending = []
 
+    def close(self) -> None:
+        """Flush and stop the async writer (no-op for sync checkpoints)."""
+        if self._async is not None:
+            self._async.close()
+            self._async = None
+
     def _rollback(self) -> None:
-        """Back to the last snapshot, replay the arrivals since."""
+        """Back to the last snapshot, replay the arrivals since.
+
+        Barriers on in-flight checkpoint writes first: the snapshot being
+        restored may be the very tree an async writer is still committing,
+        and the replayed arrivals will re-reach the same ``chunks_done``
+        boundary — checkpointing there must not overlap the in-flight write
+        of the same step.
+        """
+        self._barrier()
         self.engine.restore_state(self._snapshot)
         for c in self._pending:
             self.engine.ingest(c)

@@ -55,15 +55,27 @@ def save(ckpt_dir: str, tree, step: int) -> str:
     return final
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def steps(ckpt_dir: str) -> list[int]:
+    """All committed checkpoint steps under ``ckpt_dir``, ascending.
+
+    Only fully-renamed ``step_<N>`` directories appear (the commit protocol
+    hides ``.tmp`` writes), but a *committed* checkpoint can still be
+    damaged after the fact (disk fault, partial copy) — callers that must
+    survive that walk this list newest-first and fall back on restore
+    failure (``serve.supervisor.SearchSupervisor.resume``).
+    """
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(m.group(1))
         for d in os.listdir(ckpt_dir)
         if (m := re.fullmatch(r"step_(\d+)", d))
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    all_steps = steps(ckpt_dir)
+    return all_steps[-1] if all_steps else None
 
 
 def restore(ckpt_dir: str, template, step: int | None = None):
@@ -97,11 +109,24 @@ def prune_old(ckpt_dir: str, keep: int = 3) -> None:
 
 
 class AsyncCheckpointer:
-    """Off-thread checkpoint writer with a bounded queue (backpressure)."""
+    """Off-thread checkpoint writer with a bounded queue (backpressure).
 
-    def __init__(self, ckpt_dir: str, keep: int = 3):
+    ``wait()`` is the write barrier: it blocks until every submitted
+    checkpoint is committed (or has recorded its error). Supervisors call it
+    before any restore/rollback so replay never races an in-flight write —
+    without it, ``latest_step`` can report a step older than one already
+    submitted, and a resume would silently rewind past committed progress.
+
+    ``write_hook`` is a test-only injection point: when set, it is called
+    with ``(tree, step)`` on the worker thread immediately before the
+    atomic ``save`` — a sleeping hook widens the in-flight window so
+    barrier races become deterministic in tests.
+    """
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, write_hook=None):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
+        self._write_hook = write_hook
         self._q: queue.Queue = queue.Queue(maxsize=2)
         self._err: Exception | None = None
         self._worker = threading.Thread(target=self._run, daemon=True)
@@ -110,20 +135,31 @@ class AsyncCheckpointer:
     def _run(self):
         while True:
             item = self._q.get()
-            if item is None:
-                return
-            tree, step = item
             try:
-                save(self.ckpt_dir, tree, step)
-                prune_old(self.ckpt_dir, self.keep)
-            except Exception as e:  # surfaced on next submit/close
-                self._err = e
+                if item is None:
+                    return
+                tree, step = item
+                try:
+                    if self._write_hook is not None:
+                        self._write_hook(tree, step)
+                    save(self.ckpt_dir, tree, step)
+                    prune_old(self.ckpt_dir, self.keep)
+                except Exception as e:  # surfaced on next submit/wait/close
+                    self._err = e
+            finally:
+                self._q.task_done()
 
     def submit(self, tree, step: int) -> None:
         if self._err:
             raise self._err
         snapshot = jax.device_get(tree)  # synchronous, consistent snapshot
         self._q.put((snapshot, int(step)))
+
+    def wait(self) -> None:
+        """Barrier: block until every submitted checkpoint is on disk."""
+        self._q.join()
+        if self._err:
+            raise self._err
 
     def close(self) -> None:
         self._q.put(None)

@@ -1,7 +1,7 @@
 """Fault-injection harness for the hardened serving tests.
 
-Three failure families, matching what a long-lived search service actually
-sees (DESIGN.md §2.6):
+Failure families, matching what a long-lived search service actually sees
+(DESIGN.md §2.6/§2.7):
 
   * **Dirty data** — ``plant_nonfinite`` stamps NaN/Inf bursts into a clean
     series at given positions, and ``finite_window_mask_np`` is the NumPy
@@ -15,10 +15,31 @@ sees (DESIGN.md §2.6):
     the floor after arrival k, build fresh ones, ``resume()``, and re-feed
     from the returned index. ``test_robustness.py`` pins exact incumbent
     parity for all three.
+  * **Shard failures** — ``ShardFaultInjector`` wraps a
+    ``search.resilient.resilient_search`` runner with declarative recipes
+    (dead shards, shards that die after N calls, shards that time out,
+    ranges that fail once then heal, ranges that fail everywhere), and
+    ``coverage_oracle_np`` / ``best_covered_np`` are the NumPy oracles for
+    what a degraded result must still get exactly right.
+    ``tests/test_resilient.py`` drives them; ``$REPRO_FAULT_SEED`` (see
+    ``fault_seed``) varies the data so ``scripts/check.sh`` can run a
+    seeded pass.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
+
+
+def fault_seed(default: int = 0) -> int:
+    """Seed for fault-test data, overridable via ``$REPRO_FAULT_SEED``.
+
+    The seeded check.sh pass sets it to exercise the same recipes over a
+    different series/query draw — fault handling must not depend on one
+    lucky dataset.
+    """
+    return int(os.environ.get("REPRO_FAULT_SEED", default))
 
 
 def plant_nonfinite(series, bursts):
@@ -82,6 +103,131 @@ def adversarial_chunkings(n, length):
         [length + 1],
         [n],
     ]
+
+
+class ShardFaultInjector:
+    """Wrap a resilient-search runner with declarative shard/range faults.
+
+    Recipes (all optional, composable):
+
+      ``dead_shards``    — shard ids that raise on every call.
+      ``timeout_shards`` — shard ids that raise ``TimeoutError`` on every
+                           call (an RPC-style hard deadline).
+      ``flaky_ranges``   — range ``lo`` values that fail on their first
+                           attempt only, then heal (transient).
+      ``dead_ranges``    — range ``lo`` values that fail on *every* shard
+                           (forces an uncovered range).
+      ``fail_after``     — ``{shard_id: n}``: the shard completes ``n``
+                           calls, then dies permanently.
+      ``partial``        — ``{lo: (best, ub)}``: a failing attempt on that
+                           range attaches achieved partial progress
+                           (``partial_best`` / ``partial_ub``) to its
+                           exception, as a runner that crashed mid-range
+                           would.
+
+    Every call is recorded in ``calls`` as ``(shard, lo, hi, ok)``.
+    """
+
+    def __init__(
+        self,
+        runner,
+        dead_shards=(),
+        timeout_shards=(),
+        flaky_ranges=(),
+        dead_ranges=(),
+        fail_after=None,
+        partial=None,
+    ):
+        self._runner = runner
+        self.dead_shards = set(dead_shards)
+        self.timeout_shards = set(timeout_shards)
+        self._flaky = set(flaky_ranges)
+        self.dead_ranges = set(dead_ranges)
+        self.fail_after = dict(fail_after or {})
+        self.partial = dict(partial or {})
+        self.calls = []
+        self._per_shard = {}
+
+    def _raise(self, exc, lo):
+        if lo in self.partial:
+            best, ub = self.partial[lo]
+            exc.partial_best = np.asarray(best)
+            exc.partial_ub = np.asarray(ub)
+        raise exc
+
+    def __call__(self, shard, lo, hi, ub):
+        self._per_shard[shard] = self._per_shard.get(shard, 0) + 1
+        fail = (
+            shard in self.dead_shards
+            or lo in self.dead_ranges
+            or (
+                shard in self.fail_after
+                and self._per_shard[shard] > self.fail_after[shard]
+            )
+        )
+        if lo in self._flaky:
+            self._flaky.discard(lo)
+            fail = True
+        if shard in self.timeout_shards:
+            self.calls.append((shard, lo, hi, False))
+            self._raise(TimeoutError(f"shard {shard} deadline"), lo)
+        if fail:
+            self.calls.append((shard, lo, hi, False))
+            self._raise(RuntimeError(f"injected shard {shard} fault"), lo)
+        out = self._runner(shard, lo, hi, ub)
+        self.calls.append((shard, lo, hi, True))
+        return out
+
+
+def coverage_oracle_np(n_win, covered_ranges):
+    """NumPy oracle for (coverage fraction, merged uncovered ranges)."""
+    mask = np.zeros((n_win,), bool)
+    for lo, hi in covered_ranges:
+        mask[lo:hi] = True
+    frac = mask.mean() if n_win else 1.0
+    uncovered = []
+    s = None
+    for i in range(n_win):
+        if not mask[i] and s is None:
+            s = i
+        elif mask[i] and s is not None:
+            uncovered.append((s, i))
+            s = None
+    if s is not None:
+        uncovered.append((s, n_win))
+    return float(frac), tuple(uncovered)
+
+
+def best_covered_np(ref, queries, length, window, covered_mask):
+    """Brute-force nearest window per query over the covered starts only.
+
+    The exactness oracle for degraded results: whatever coverage was lost,
+    every *covered* window must have been scanned. Returns ``(starts,
+    dists)``; ``start == -1`` (dist inf) when nothing is covered/finite.
+    """
+    from repro.core.ea_pruned_dtw_np import dtw_naive
+
+    ref = np.asarray(ref, np.float64)
+    queries = np.atleast_2d(np.asarray(queries, np.float64))
+
+    def zn(x):
+        mu, sd = x.mean(), x.std()
+        return (x - mu) / max(sd, 1e-8)
+
+    starts_out, dists_out = [], []
+    for q in queries:
+        qn = zn(q[:length])
+        best_s, best_d = -1, np.inf
+        for s in np.nonzero(covered_mask)[0]:
+            w = ref[s : s + length]
+            if not np.isfinite(w).all():
+                continue
+            d = dtw_naive(qn, zn(w), window)
+            if d < best_d:
+                best_s, best_d = int(s), float(d)
+        starts_out.append(best_s)
+        dists_out.append(best_d)
+    return np.asarray(starts_out), np.asarray(dists_out)
 
 
 def feed(engine_or_supervisor, series, sizes):

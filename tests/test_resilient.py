@@ -1,0 +1,653 @@
+"""Fault-tolerant sharded search (DESIGN.md §2.7).
+
+The contracts under test:
+
+  * **Shard recovery** — ``resilient_search`` retries transient range
+    failures with backoff, reassigns ranges off persistently-failing shards,
+    and stays *exact* whenever coverage ends up full (pinned against
+    ``multi_query_search`` and the brute-force oracle).
+  * **Coverage accounting** — when no healthy shard can complete a range,
+    the result reports the exact uncovered window ranges (NumPy oracle) and
+    is still exact over the covered set; ``require_full_coverage`` raises.
+  * **Quarantine psum parity** — the distributed builders' psum-reduced
+    ``quarantined`` counts equal the single-device counts, on a 1-device
+    mesh in-process and an 8-device mesh in a subprocess.
+  * **Async checkpoints** — the supervisor's async writer commits through a
+    barrier that rollback/resume take first; kill-resume is bit-exact, and
+    a checkpoint damaged on disk falls back to the next older one.
+  * **Quarantine re-admission** — ``StreamSearchEngine.correct`` patches
+    backfilled samples and re-scores the revived windows, converging to the
+    clean-run answer.
+
+``$REPRO_FAULT_SEED`` (via ``faults.fault_seed``) varies the data draw for
+the seeded check.sh pass.
+"""
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import NonFiniteInputError, SearchInputError, StreamStateError
+from repro.search import (
+    CoverageError,
+    make_distributed_multi_search,
+    make_distributed_search,
+    multi_query_search,
+    resilient_search,
+    subsequence_search,
+)
+from repro.search.resilient import partition_ranges
+from repro.serve import SearchSupervisor, StreamSearchEngine
+from repro.train import checkpoint as ckpt_lib
+
+from faults import (
+    ShardFaultInjector,
+    best_covered_np,
+    coverage_oracle_np,
+    fault_seed,
+    plant_nonfinite,
+)
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _mk(seed=None, n_ref=420, nq=3, length=48):
+    rng = np.random.default_rng(fault_seed() if seed is None else seed)
+    ref = np.cumsum(rng.normal(size=n_ref))
+    queries = np.cumsum(rng.normal(size=(nq, length)), axis=1)
+    return ref, queries
+
+
+def _real_runner(ref, queries, length, w):
+    """The default per-range dispatch, exposed so recipes can wrap it."""
+
+    def runner(shard, lo, hi, ub):
+        seg = jnp.asarray(ref[lo : hi + length - 1])
+        res = multi_query_search(
+            seg, jnp.asarray(queries), length, w, backend="jax",
+            ub_init=jnp.asarray(ub, jnp.float64),
+        )
+        s = np.asarray(res.best_start, np.int64)
+        return (
+            np.where(s >= 0, s + lo, -1),
+            np.asarray(res.best_dist, np.float64),
+            int(res.quarantined),
+        )
+
+    return runner
+
+
+# -- executor: clean path -------------------------------------------------
+
+def test_partition_ranges_cover_exactly():
+    for n_win, n_shards in [(100, 4), (7, 3), (3, 8), (0, 4), (1, 1)]:
+        ranges = partition_ranges(n_win, n_shards)
+        covered = sorted((lo, hi) for lo, hi in ranges)
+        # contiguous, disjoint, exactly [0, n_win)
+        pos = 0
+        for lo, hi in covered:
+            assert lo == pos and hi > lo
+            pos = hi
+        assert pos == n_win
+        assert len(ranges) <= n_shards
+
+
+def test_clean_full_coverage_matches_offline():
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    res = resilient_search(ref, queries, length, w, n_shards=4, backend="jax")
+    base = multi_query_search(jnp.asarray(ref), jnp.asarray(queries),
+                              length, w, backend="jax")
+    assert res.coverage == 1.0 and res.uncovered == ()
+    assert res.reassignments == 0 and res.failed_shards == ()
+    assert np.array_equal(res.best_start, np.asarray(base.best_start))
+    np.testing.assert_allclose(res.best_dist, np.asarray(base.best_dist),
+                               rtol=2e-5)
+
+
+def test_dirty_ref_quarantine_count_matches_single_device():
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    dirty = plant_nonfinite(ref, [(100, 4, np.nan), (250, 2, np.inf)])
+    res = resilient_search(dirty, queries, length, w, n_shards=3,
+                           backend="jax")
+    base = multi_query_search(jnp.asarray(dirty), jnp.asarray(queries),
+                              length, w, backend="jax")
+    assert res.quarantined == int(base.quarantined)
+    assert np.array_equal(res.best_start, np.asarray(base.best_start))
+    np.testing.assert_allclose(res.best_dist, np.asarray(base.best_dist),
+                               rtol=2e-5)
+
+
+# -- executor: faults -----------------------------------------------------
+
+def test_flaky_range_retried_with_backoff():
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    n_win = len(ref) - length + 1
+    flaky_lo = partition_ranges(n_win, 4)[1][0]
+    inj = ShardFaultInjector(_real_runner(ref, queries, length, w),
+                             flaky_ranges={flaky_lo})
+    sleeps = []
+    res = resilient_search(ref, queries, length, w, n_shards=4,
+                           runner=inj, backoff=0.01, sleep=sleeps.append)
+    base = multi_query_search(jnp.asarray(ref), jnp.asarray(queries),
+                              length, w, backend="jax")
+    assert sleeps == [0.01]  # one first-attempt backoff, then healed
+    assert res.coverage == 1.0 and res.failed_shards == ()
+    assert res.attempts == 5  # 4 ranges + 1 retry
+    assert np.array_equal(res.best_start, np.asarray(base.best_start))
+
+
+def test_dead_shard_range_reassigned_to_healthy():
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    inj = ShardFaultInjector(_real_runner(ref, queries, length, w),
+                             dead_shards={1})
+    res = resilient_search(ref, queries, length, w, n_shards=4, runner=inj,
+                           max_retries=1, backoff=0.0, sleep=lambda _t: None)
+    base = multi_query_search(jnp.asarray(ref), jnp.asarray(queries),
+                              length, w, backend="jax")
+    assert res.coverage == 1.0  # the dead shard's range completed elsewhere
+    assert res.failed_shards == (1,)
+    assert res.reassignments == 1
+    # the reassigned attempt ran on a different, healthy shard
+    reassigned = [c for c in inj.calls if c[3] and c[0] != 1]
+    assert len(reassigned) == 4
+    assert np.array_equal(res.best_start, np.asarray(base.best_start))
+    np.testing.assert_allclose(res.best_dist, np.asarray(base.best_dist),
+                               rtol=2e-5)
+
+
+def test_fail_after_n_calls_cascades_reassignment():
+    """Shard 0 completes one range then dies; its queue drains elsewhere."""
+    ref, queries = _mk(n_ref=700)
+    length, w = queries.shape[1], 5
+    inj = ShardFaultInjector(_real_runner(ref, queries, length, w),
+                             dead_shards={1, 2}, fail_after={0: 1})
+    # 4 ranges on 4 shards: shard 1 and 2 dead, shard 0 dies after 1 call ->
+    # everything funnels onto shard 3.
+    res = resilient_search(ref, queries, length, w, n_shards=4, runner=inj,
+                           max_retries=0, backoff=0.0, sleep=lambda _t: None)
+    base = multi_query_search(jnp.asarray(ref), jnp.asarray(queries),
+                              length, w, backend="jax")
+    assert res.coverage == 1.0
+    assert set(res.failed_shards) == {0, 1, 2}
+    assert res.reassignments >= 3
+    assert np.array_equal(res.best_start, np.asarray(base.best_start))
+    np.testing.assert_allclose(res.best_dist, np.asarray(base.best_dist),
+                               rtol=2e-5)
+
+
+def test_timeout_shard_completes_but_is_struck():
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    real = _real_runner(ref, queries, length, w)
+
+    # deterministic clock: shard 0 "takes" 50ms per attempt, everyone else
+    # 1ms — no real sleeping, so the test is immune to box load and the
+    # interpret backend's slowness
+    fake_now = [0.0]
+
+    def slow0(shard, lo, hi, ub):
+        fake_now[0] += 0.05 if shard == 0 else 0.001
+        return real(shard, lo, hi, ub)
+
+    res = resilient_search(ref, queries, length, w, n_shards=4, runner=slow0,
+                           timeout=0.01, max_retries=0,
+                           clock=lambda: fake_now[0])
+    base = multi_query_search(jnp.asarray(ref), jnp.asarray(queries),
+                              length, w, backend="jax")
+    # the slow attempt's (correct) result was kept, the shard marked failed
+    assert res.coverage == 1.0 and res.failed_shards == (0,)
+    assert np.array_equal(res.best_start, np.asarray(base.best_start))
+
+
+def test_dead_range_reports_exact_degraded_coverage():
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    n_win = len(ref) - length + 1
+    ranges = partition_ranges(n_win, 4)
+    dead = ranges[2]
+    inj = ShardFaultInjector(_real_runner(ref, queries, length, w),
+                             dead_ranges={dead[0]})
+    res = resilient_search(ref, queries, length, w, n_shards=4, runner=inj,
+                           max_retries=0, backoff=0.0, sleep=lambda _t: None)
+    covered = [r for r in ranges if r != dead]
+    frac, uncovered = coverage_oracle_np(n_win, covered)
+    assert res.coverage == pytest.approx(frac)
+    assert res.uncovered == uncovered
+    assert set(res.failed_shards) == set(range(4))  # every shard tried it
+    # exact over the covered set (brute-force oracle)
+    mask = np.zeros(n_win, bool)
+    for lo, hi in covered:
+        mask[lo:hi] = True
+    bs, bd = best_covered_np(ref, queries, length, w, mask)
+    assert np.array_equal(res.best_start, bs)
+    np.testing.assert_allclose(res.best_dist, bd, rtol=2e-5)
+
+
+def test_require_full_coverage_raises():
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    inj = ShardFaultInjector(_real_runner(ref, queries, length, w),
+                             dead_ranges={0})
+    with pytest.raises(CoverageError) as ei:
+        resilient_search(ref, queries, length, w, n_shards=4, runner=inj,
+                         max_retries=0, backoff=0.0, sleep=lambda _t: None,
+                         require_full_coverage=True)
+    assert ei.value.uncovered  # the degraded ranges ride on the error
+    assert "uncovered" in str(ei.value)
+
+
+def test_partial_progress_from_failed_attempt_is_folded():
+    """A crashed range that reports an achieved (start, dist) pair keeps
+    that incumbent even though the range itself stays uncovered."""
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    n_win = len(ref) - length + 1
+    ranges = partition_ranges(n_win, 4)
+    dead = ranges[1]
+    # the achieved pair: the true best window inside the dead range
+    mask = np.zeros(n_win, bool)
+    mask[dead[0] : dead[1]] = True
+    p_best, p_ub = best_covered_np(ref, queries, length, w, mask)
+    inj = ShardFaultInjector(
+        _real_runner(ref, queries, length, w),
+        dead_ranges={dead[0]},
+        partial={dead[0]: (p_best, p_ub)},
+    )
+    res = resilient_search(ref, queries, length, w, n_shards=4, runner=inj,
+                           max_retries=0, backoff=0.0, sleep=lambda _t: None)
+    assert res.coverage < 1.0
+    # final answer now equals the FULL search despite the lost range
+    base = multi_query_search(jnp.asarray(ref), jnp.asarray(queries),
+                              length, w, backend="jax")
+    assert np.array_equal(res.best_start, np.asarray(base.best_start))
+    np.testing.assert_allclose(res.best_dist, np.asarray(base.best_dist),
+                               rtol=2e-5)
+
+
+def test_guard_errors_are_not_retried():
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    calls = []
+
+    def bad_runner(shard, lo, hi, ub):
+        calls.append(shard)
+        raise SearchInputError("malformed")
+
+    with pytest.raises(SearchInputError):
+        resilient_search(ref, queries, length, w, n_shards=4,
+                         runner=bad_runner, max_retries=5,
+                         sleep=lambda _t: None)
+    assert len(calls) == 1  # no retry on caller bugs
+    with pytest.raises(SearchInputError):
+        resilient_search(ref, queries, length, w, n_shards=0)
+
+
+# -- distributed quarantine psum parity -----------------------------------
+
+def test_distributed_quarantine_parity_one_device():
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    dirty = jnp.asarray(plant_nonfinite(ref, [(90, 3, np.nan),
+                                              (260, 2, -np.inf)]))
+    mesh = jax.make_mesh((1,), ("d",))
+    single = subsequence_search(dirty, jnp.asarray(queries[0]), length, w,
+                                backend="jax")
+    dist = make_distributed_search(mesh, ("d",), length, w, batch=32)(
+        dirty, jnp.asarray(queries[0])
+    )
+    assert int(dist.quarantined) == int(single.quarantined) > 0
+    assert int(dist.best_start) == int(single.best_start)
+    np.testing.assert_allclose(float(dist.best_dist),
+                               float(single.best_dist), rtol=2e-5)
+
+    multi = multi_query_search(dirty, jnp.asarray(queries), length, w,
+                               backend="jax")
+    dmulti = make_distributed_multi_search(mesh, ("d",), length, w, batch=32)(
+        dirty, jnp.asarray(queries)
+    )
+    assert int(dmulti.quarantined) == int(multi.quarantined)
+    assert np.array_equal(np.asarray(dmulti.best_start),
+                          np.asarray(multi.best_start))
+
+
+def test_distributed_quarantine_parity_multi_shard_subprocess():
+    """psum-reduced quarantine counts on 8 fake devices equal the 1-device
+    counts, and the best stays the best."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src"); sys.path.insert(0, "tests")
+import jax, numpy as np, jax.numpy as jnp
+jax.config.update("jax_enable_x64", True)
+from repro.search import (make_distributed_search,
+                          make_distributed_multi_search,
+                          multi_query_search, subsequence_search)
+from faults import plant_nonfinite, fault_seed
+rng = np.random.default_rng(fault_seed())
+ref = np.cumsum(rng.normal(size=900))
+qs = np.cumsum(rng.normal(size=(3, 96)), axis=1)
+dirty = jnp.asarray(plant_nonfinite(ref, [(200, 5, np.nan), (700, 2, np.inf)]))
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+single = subsequence_search(dirty, jnp.asarray(qs[0]), 96, 9)
+dist = make_distributed_search(mesh, ("data", "model"), 96, 9, batch=32)(
+    dirty, jnp.asarray(qs[0]))
+assert int(dist.quarantined) == int(single.quarantined) > 0, (
+    int(dist.quarantined), int(single.quarantined))
+assert int(dist.best_start) == int(single.best_start)
+multi = multi_query_search(dirty, jnp.asarray(qs), 96, 9)
+dmulti = make_distributed_multi_search(mesh, ("data", "model"), 96, 9,
+                                       batch=32)(dirty, jnp.asarray(qs))
+assert int(dmulti.quarantined) == int(multi.quarantined)
+assert np.array_equal(np.asarray(dmulti.best_start),
+                      np.asarray(multi.best_start))
+np.testing.assert_allclose(np.asarray(dmulti.best_dist),
+                           np.asarray(multi.best_dist), rtol=1e-6)
+print("PARITY OK", int(dist.quarantined))
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=420,
+        cwd=REPO, env={**os.environ},
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PARITY OK" in out.stdout
+
+
+# -- supervisor: corrupt-checkpoint fallback + async ----------------------
+
+def _chunks(series, size):
+    return [series[p : p + size] for p in range(0, len(series), size)]
+
+
+def _fresh(queries, length, w):
+    return StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                              stream_chunk=64)
+
+
+def test_resume_falls_back_past_damaged_checkpoint(tmp_path):
+    ref, queries = _mk(n_ref=480)
+    length, w = queries.shape[1], 5
+    chunks = _chunks(ref, 48)
+    baseline = _fresh(queries, length, w)
+    for c in chunks:
+        baseline.ingest(c)
+
+    sup1 = SearchSupervisor(_fresh(queries, length, w), str(tmp_path),
+                            ckpt_every=2, keep=5)
+    for c in chunks[:7]:
+        sup1.ingest(c)
+    steps = ckpt_lib.steps(str(tmp_path))
+    assert steps[-1] == 6
+    # damage the newest checkpoint AFTER commit (disk fault): truncate a leaf
+    latest_dir = os.path.join(str(tmp_path), f"step_{steps[-1]:08d}")
+    victim = next(f for f in sorted(os.listdir(latest_dir))
+                  if f.endswith(".npy"))
+    with open(os.path.join(latest_dir, victim), "wb") as f:
+        f.write(b"\x93corrupt")
+
+    sup2 = SearchSupervisor(_fresh(queries, length, w), str(tmp_path),
+                            ckpt_every=2, keep=5)
+    k = sup2.resume()
+    assert k == 4  # fell back past the damaged step 6
+    for c in chunks[k:]:
+        sup2.ingest(c)
+    np.testing.assert_allclose(np.asarray(sup2.engine.best()[1]),
+                               np.asarray(baseline.best()[1]), rtol=0)
+    assert np.array_equal(np.asarray(sup2.engine.best()[0]),
+                          np.asarray(baseline.best()[0]))
+
+
+def test_resume_from_scratch_when_all_checkpoints_damaged(tmp_path):
+    _, queries = _mk()
+    length, w = queries.shape[1], 5
+    sup1 = SearchSupervisor(_fresh(queries, length, w), str(tmp_path),
+                            ckpt_every=1, keep=2)
+    sup1.ingest(np.ones(80))
+    sup1.ingest(np.ones(80))
+    for step in ckpt_lib.steps(str(tmp_path)):
+        os.remove(os.path.join(str(tmp_path), f"step_{step:08d}",
+                               "manifest.json"))
+    sup2 = SearchSupervisor(_fresh(queries, length, w), str(tmp_path))
+    assert sup2.resume() == 0  # nothing readable: start the stream over
+
+
+def test_async_checkpoint_wait_is_a_write_barrier(tmp_path):
+    state = {"x": np.arange(8.0)}
+    events = []
+
+    def slow_write(tree, step):
+        time.sleep(0.1)
+        events.append(("written", step))
+
+    ck = ckpt_lib.AsyncCheckpointer(str(tmp_path), write_hook=slow_write)
+    t0 = time.time()
+    ck.submit(state, 1)
+    ck.wait()
+    assert time.time() - t0 >= 0.1  # wait really blocked on the write
+    assert events == [("written", 1)]
+    assert ckpt_lib.latest_step(str(tmp_path)) == 1
+    restored, step = ckpt_lib.restore(str(tmp_path), {"x": np.zeros(8)})
+    assert step == 1 and np.array_equal(restored["x"], state["x"])
+    ck.close()
+
+    def bad_write(tree, step):
+        raise OSError("disk full")
+
+    ck2 = ckpt_lib.AsyncCheckpointer(str(tmp_path), write_hook=bad_write)
+    ck2.submit(state, 2)
+    with pytest.raises(OSError, match="disk full"):
+        ck2.wait()
+
+
+def test_async_supervisor_rollback_waits_for_inflight_write(tmp_path):
+    """A transient failure right after an async checkpoint submit: rollback
+    barriers on the slow writer, replay stays exact, the checkpoint is
+    committed and restorable."""
+    ref, queries = _mk(n_ref=480)
+    length, w = queries.shape[1], 5
+    chunks = _chunks(ref, 48)
+    baseline = _fresh(queries, length, w)
+    for c in chunks:
+        baseline.ingest(c)
+
+    from faults import FaultyEngine
+
+    eng = _fresh(queries, length, w)
+    faulty = FaultyEngine(eng, fail_at={2})  # arrival right after ckpt at 2
+    sup = SearchSupervisor(faulty, str(tmp_path), ckpt_every=2, backoff=0.0,
+                           sleep=lambda _t: None, async_ckpt=True)
+    # widen the in-flight window so the rollback provably overlaps a write
+    sup._async.close()
+    sup._async = ckpt_lib.AsyncCheckpointer(
+        str(tmp_path), keep=3,
+        write_hook=lambda _tree, _step: time.sleep(0.05),
+    )
+    for c in chunks:
+        sup.ingest(c)
+    sup.close()
+    assert sup.restarts == 1
+    np.testing.assert_allclose(np.asarray(eng.best()[1]),
+                               np.asarray(baseline.best()[1]), rtol=0)
+    assert ckpt_lib.latest_step(str(tmp_path)) is not None
+    state, _ = ckpt_lib.restore(str(tmp_path), eng.save_state())
+    fresh = _fresh(queries, length, w)
+    fresh.restore_state(state)  # committed checkpoint is well-formed
+
+
+def test_async_kill_resume_bit_exact(tmp_path):
+    ref, queries = _mk(n_ref=480)
+    length, w = queries.shape[1], 5
+    chunks = _chunks(ref, 48)
+    baseline = _fresh(queries, length, w)
+    for c in chunks:
+        baseline.ingest(c)
+
+    sup1 = SearchSupervisor(_fresh(queries, length, w), str(tmp_path),
+                            ckpt_every=2, async_ckpt=True)
+    for c in chunks[:5]:
+        sup1.ingest(c)
+    sup1._barrier()  # in-flight writes land; then the process "dies"
+    del sup1
+
+    sup2 = SearchSupervisor(_fresh(queries, length, w), str(tmp_path),
+                            ckpt_every=2, async_ckpt=True)
+    k = sup2.resume()
+    assert k == 4
+    for c in chunks[k:]:
+        sup2.ingest(c)
+    sup2.close()
+    np.testing.assert_allclose(np.asarray(sup2.engine.best()[1]),
+                               np.asarray(baseline.best()[1]), rtol=0)
+    assert np.array_equal(np.asarray(sup2.engine.best()[0]),
+                          np.asarray(baseline.best()[0]))
+
+
+# -- re-admission ----------------------------------------------------------
+
+def test_correct_revives_quarantined_windows():
+    """Backfilled samples + rescore converge to the clean-run answer."""
+    ref, queries = _mk(n_ref=600, length=64)
+    length, w = queries.shape[1], 6
+    dirty = plant_nonfinite(ref, [(300, 5, np.nan)])
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             backend="jax", ring_capacity=400)
+    for c in _chunks(dirty, 100):
+        eng.ingest(c)
+    assert eng.quarantined_windows > 0
+    queued = eng.correct(300, ref[300:305])
+    assert queued == eng.quarantined_windows  # whole burst retained in ring
+    assert eng.pending_rescore == queued
+    assert eng.quarantined_samples == 0
+    eng.ingest(np.zeros(0))  # the next ingest flushes the rescore
+    assert eng.pending_rescore == 0
+    assert eng.quarantined_windows == 0
+    assert eng.readmitted_windows == queued
+
+    clean = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                               backend="jax")
+    for c in _chunks(ref, 100):
+        clean.ingest(c)
+    assert np.array_equal(np.asarray(eng.best()[0]),
+                          np.asarray(clean.best()[0]))
+    np.testing.assert_allclose(np.asarray(eng.best()[1]),
+                               np.asarray(clean.best()[1]), rtol=2e-5)
+
+
+def test_correct_validation_guards():
+    ref, queries = _mk(n_ref=300)
+    length, w = queries.shape[1], 5
+    dirty = plant_nonfinite(ref, [(200, 3, np.nan)])
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             backend="jax", ring_capacity=128)
+    eng.ingest(dirty)
+    with pytest.raises(StreamStateError):   # the future
+        eng.correct(299, np.zeros(5))
+    with pytest.raises(StreamStateError):   # already-finite history
+        eng.correct(210, np.zeros(2))
+    with pytest.raises(NonFiniteInputError):  # re-poisoning
+        eng.correct(200, [np.nan, 1.0, 2.0])
+    with pytest.raises(StreamStateError):   # outside retained history
+        eng.correct(10, np.zeros(1))
+    with pytest.raises(SearchInputError):   # empty patch
+        eng.correct(200, np.zeros(0))
+    # double-correct: after the patch the targets are finite
+    assert eng.correct(200, ref[200:203]) > 0
+    with pytest.raises(StreamStateError):
+        eng.correct(200, ref[200:203])
+    no_q = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                              quarantine=False)
+    no_q.ingest(ref)
+    with pytest.raises(StreamStateError):   # quarantine disabled
+        no_q.correct(100, np.zeros(1))
+
+
+def test_correct_without_ring_heals_straddling_windows_only():
+    """No ring: fully-past windows are gone, but a patched tail still
+    cleans every window straddling the stream frontier."""
+    ref, queries = _mk(n_ref=400)
+    length, w = queries.shape[1], 5
+    split = 300
+    bad_at = split - 3  # inside the carried tail after ingesting [:split]
+    dirty = plant_nonfinite(ref, [(bad_at, 2, np.inf)])
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             backend="jax")
+    eng.ingest(dirty[:split])
+    quarantined_before = eng.quarantined_windows
+    queued = eng.correct(bad_at, ref[bad_at : bad_at + 2])
+    assert queued == 0  # no ring: nothing fully-past is recoverable
+    eng.ingest(dirty[split:])
+    # the straddling windows were searched clean via the patched tail:
+    # same incumbents as a stream that was only ever dirty BEFORE the patch
+    # position's straddle region... pin directly against per-window oracle
+    # by comparing to an offline search over the equivalent series.
+    fixed = dirty.copy()
+    fixed[bad_at : bad_at + 2] = ref[bad_at : bad_at + 2]
+    off = multi_query_search(jnp.asarray(fixed), jnp.asarray(queries),
+                             length, w, backend="jax")
+    # windows fully scanned before the patch that overlapped the burst stay
+    # quarantined (they were scanned dirty and are not recoverable):
+    assert eng.quarantined_windows == quarantined_before
+    assert eng.readmitted_windows == 0
+    # every query whose best lives outside those lost windows agrees
+    lost = set(range(bad_at - length + 1, split - length + 1))
+    for qi in range(queries.shape[0]):
+        if int(off.best_start[qi]) not in lost:
+            assert int(eng.best()[0][qi]) == int(off.best_start[qi])
+
+
+def test_correct_flushes_into_save_state(tmp_path):
+    ref, queries = _mk(n_ref=600, length=64)
+    length, w = queries.shape[1], 6
+    dirty = plant_nonfinite(ref, [(300, 4, np.nan)])
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             backend="jax", ring_capacity=400)
+    for c in _chunks(dirty, 100):
+        eng.ingest(c)
+    queued = eng.correct(300, ref[300:304])
+    assert queued > 0 and eng.pending_rescore == queued
+    state = eng.save_state()  # must flush: snapshots never carry a queue
+    assert eng.pending_rescore == 0
+    assert int(state["readmitted"]) == queued
+    fresh = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                               backend="jax", ring_capacity=400)
+    fresh.restore_state(state)
+    assert fresh.readmitted_windows == queued
+    assert np.array_equal(np.asarray(fresh.best()[0]),
+                          np.asarray(eng.best()[0]))
+    # legacy snapshot without the readmitted key still restores
+    legacy = {k: v for k, v in state.items() if k != "readmitted"}
+    fresh.restore_state(legacy)
+    assert fresh.readmitted_windows == 0
+
+
+def test_partial_correct_revives_only_all_finite_windows():
+    """Patching half a burst revives only the windows that touch no other
+    bad sample; the second half revives the rest."""
+    ref, queries = _mk(n_ref=600, length=64)
+    length, w = queries.shape[1], 6
+    dirty = plant_nonfinite(ref, [(300, 4, np.nan)])
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             backend="jax", ring_capacity=400)
+    for c in _chunks(dirty, 100):
+        eng.ingest(c)
+    total = eng.quarantined_windows
+    # patching 300-301 frees exactly the windows ending before 302:
+    # starts 300-length+1 .. 302-length
+    first = eng.correct(300, ref[300:302])
+    assert first == 2
+    assert eng.quarantined_samples == 2
+    queued = eng.correct(302, ref[302:304])
+    assert first + queued == total  # the rest revive with the last patch
+    eng.ingest(np.zeros(0))
+    assert eng.quarantined_windows == 0
+    assert eng.readmitted_windows == total
