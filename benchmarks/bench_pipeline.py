@@ -1,0 +1,114 @@
+"""search/pipeline: frontend dispatch overhead over the bare staged core.
+
+The §2.8 refactor routed every search frontend through ``search.pipeline``:
+an un-jitted wrapper now validates inputs, resolves knobs into a frozen
+``SearchPlan``, and dispatches the jitted staged program. That seam must
+stay free — the wrapper's per-call cost (guards + plan construction +
+jit-cache lookup) is pure overhead the old monolithic drivers didn't pay,
+so this bench pins it at ≤ noise.
+
+Two arms over the same workload, alternating:
+
+  * ``core``     — the jitted pipeline program called directly with a
+                   prebuilt plan (the refactor-free lower bound).
+  * ``frontend`` — the full ``multi_query_search`` wrapper (validation,
+                   backend resolution, ``make_plan``, dispatch).
+
+The headline ``overhead`` row reports ``speedup = best(core)/best(frontend)``
+— ~1.0 when the wrapper is free, dropping as per-call overhead creeps in —
+and rides the bench_diff SPEEDUP gate like every other suite, so a change
+that makes plan resolution or validation expensive fails ``scripts/check.sh``
+even though every test still passes. Parity is asserted before timing
+(identical incumbents from both arms), so the row can never report a wrong
+answer fast.
+
+Measurement protocol as in ``bench_multiq``: alternating pairs, best-of vs
+best-of with the median per-pair ratio alongside.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+import numpy as np
+
+from repro.data.synthetic import make_dataset, make_queries
+from repro.search import multi_query_search
+from repro.search.pipeline import _offline_search_impl, make_plan
+
+
+def run(
+    ref_len: int = 20_000,
+    length: int = 128,
+    window_ratio: float = 0.1,
+    n_queries: int = 8,
+    batch: int = 64,
+    pairs: int = 7,
+    backend: str = "jax",
+    dataset: str = "ECG",
+):
+    w = max(int(length * window_ratio), 1)
+    ref = jnp.asarray(make_dataset(dataset, ref_len, seed=0), jnp.float32)
+    queries = jnp.asarray(
+        make_queries(dataset, n_queries, length, seed=1), jnp.float32
+    )
+    plan = make_plan(
+        length=length, window=w, batch=batch, backend=backend
+    )
+
+    def core():
+        return _offline_search_impl(ref, queries, None, plan, False)
+
+    def frontend():
+        return multi_query_search(
+            ref, queries, length=length, window=w, batch=batch,
+            backend=backend,
+        )
+
+    # warmup/compile both arms, then assert parity before timing
+    state, _, n_quar = core()
+    jax.block_until_ready(state.ub)
+    res = frontend()
+    jax.block_until_ready(res.best_dist)
+    agree = bool(
+        np.array_equal(np.asarray(state.best), np.asarray(res.best_start))
+        and np.array_equal(np.asarray(state.ub), np.asarray(res.best_dist))
+        and int(n_quar) == int(res.quarantined)
+    )
+
+    t_core, t_front, ratios = [], [], []
+    for _ in range(pairs):
+        t0 = time.time()
+        jax.block_until_ready(core()[0].ub)
+        tc = time.time() - t0
+        t0 = time.time()
+        jax.block_until_ready(frontend().best_dist)
+        tf = time.time() - t0
+        t_core.append(tc)
+        t_front.append(tf)
+        ratios.append(tc / tf if tf > 0 else 0.0)
+    median_ratio = statistics.median(ratios)
+    ratio = min(t_core) / min(t_front) if min(t_front) > 0 else 0.0
+
+    tag = f"search/pipeline/q{n_queries}/l{length}/r{window_ratio}/{backend}"
+    return [
+        (f"{tag}/core", min(t_core) * 1e6,
+         f"agree={agree};n_queries={n_queries}"),
+        (f"{tag}/frontend", min(t_front) * 1e6, f"agree={agree}"),
+        (f"{tag}/overhead", ratio,
+         f"speedup={ratio:.4f};median_pair_ratio={median_ratio:.4f};"
+         f"pairs={pairs}"),
+    ]
+
+
+def main() -> None:
+    rows = run()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV:
                      offline driver on a healthy system (coverage 1.0)
   * search/persistent/* — one-launch persistent sweep vs host round driver
                      (both backends; dispatch counts in the speedup rows)
+  * search/pipeline/* — frontend wrapper (validation + plan resolution)
+                     vs the bare jitted pipeline core; the overhead ratio
+                     must stay ≈1 (the §2.8 refactor's dispatch guard)
   * dtw/*          — per-computation EA/Pruned/full work + time comparison
   * dtw/backend/*  — batch-backend dispatch comparison (vmap vs
                      Pallas-interpret) across K x l x block_k x Q shapes
@@ -63,6 +66,7 @@ def main() -> None:
         bench_kernels,
         bench_multiq,
         bench_persistent,
+        bench_pipeline,
         bench_robustness,
         bench_stream,
         bench_suites,
@@ -75,7 +79,8 @@ def main() -> None:
     artifact = {
         "meta": {"quick": bool(args.quick), "backend": jax.default_backend()},
         "suites": [], "multiq": [], "stream": [], "robustness": [],
-        "resilient": [], "persistent": [], "dtw": [], "roofline": [],
+        "resilient": [], "persistent": [], "pipeline": [], "dtw": [],
+        "roofline": [],
     }
 
     print("name,us_per_call,derived")
@@ -134,6 +139,16 @@ def main() -> None:
     for name, us, derived in ps_rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
         artifact["persistent"].append(_suite_record(name, us, derived))
+
+    if args.quick:
+        # the two arms are one wrapper apart, so the overhead ratio sits
+        # right at 1.0 — extra pairs keep it above the box's timing noise
+        pl_rows = bench_pipeline.run(ref_len=8_000, pairs=9)
+    else:
+        pl_rows = bench_pipeline.run()
+    for name, us, derived in pl_rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+        artifact["pipeline"].append(_suite_record(name, us, derived))
 
     micro = bench_dtw_micro.run(length=128, k=128, window_ratio=0.1)
     micro += bench_dtw_micro.run_backends(

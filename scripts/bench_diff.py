@@ -24,7 +24,7 @@ import tempfile
 
 SECTIONS = (
     "suites", "multiq", "stream", "robustness", "resilient", "persistent",
-    "dtw",
+    "pipeline", "dtw",
 )
 
 

@@ -7,6 +7,11 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== layering lint =="
+# Pure-AST import walker: frontends must not import each other, and nothing
+# in search/ or serve/ may bypass core.batch into repro.kernels (§2.8).
+python scripts/lint_layers.py
+
 echo "== tier-1 tests =="
 python -m pytest -x -q "$@"
 
@@ -22,7 +27,8 @@ echo "== seeded fault pass (REPRO_FAULT_SEED=7, pallas_interpret) =="
 # Re-run the fault-injection suites on a different data draw: recovery,
 # coverage accounting, and re-admission must not depend on one lucky series.
 REPRO_FAULT_SEED=7 REPRO_DTW_BACKEND=pallas_interpret python -m pytest -x -q \
-    tests/test_robustness.py tests/test_resilient.py
+    tests/test_robustness.py tests/test_resilient.py \
+    tests/test_pipeline_parity.py
 
 echo "== benchmark smoke (--quick) + SPEEDUP regression gate =="
 # One quick bench run serves both purposes: diff its artifact against the

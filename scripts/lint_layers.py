@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Layering lint for the search pipeline (DESIGN.md §2.8).
+
+The pipeline refactor holds only if the layering stays put, so this walker
+fails the check when the import graph regresses:
+
+  1. **Frontends stay thin and independent** — the five search frontends
+     (``subsequence``, ``multi``, ``streaming``, ``distributed``,
+     ``resilient``) must not import each other. Shared logic belongs in
+     ``search.pipeline`` / ``search.incumbents``; a frontend importing a
+     sibling is a private copy of pipeline behavior waiting to drift.
+  2. **Nobody in ``search/`` reaches past the dispatch layer** — kernels are
+     owned by ``core.batch`` (backend dispatch, input contracts); a direct
+     ``repro.kernels`` import from ``search/*`` bypasses the backend
+     resolution and the guard taxonomy.
+  3. **The serving layer binds to frontends, not siblings' privates** —
+     ``serve/*`` may import any ``search.*`` public surface but also must
+     not touch ``repro.kernels`` directly.
+
+Pure-AST: no imports are executed, so the lint is safe to run before the
+package itself is importable (and costs milliseconds in check.sh).
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+PKG = "repro"
+
+FRONTENDS = {
+    f"{PKG}.search.{m}"
+    for m in ("subsequence", "multi", "streaming", "distributed", "resilient")
+}
+KERNELS = f"{PKG}.kernels"
+
+
+def module_name(path: Path) -> str:
+    rel = path.relative_to(SRC).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def imported_modules(path: Path, mod: str):
+    """Yield (lineno, absolute module name) for every import in ``path``."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    pkg_parts = mod.split(".")
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                yield node.lineno, alias.name
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:  # relative import -> resolve against this module
+                base = pkg_parts[: len(pkg_parts) - node.level]
+                name = ".".join(base + ([node.module] if node.module else []))
+            else:
+                name = node.module or ""
+            yield node.lineno, name
+
+
+def check() -> list[str]:
+    errors = []
+    for path in sorted((SRC / PKG).rglob("*.py")):
+        mod = module_name(path)
+        in_search = mod.startswith(f"{PKG}.search")
+        in_serve = mod.startswith(f"{PKG}.serve")
+        is_frontend = mod in FRONTENDS
+        for lineno, target in imported_modules(path, mod):
+            loc = f"{path.relative_to(REPO)}:{lineno}"
+            if (in_search or in_serve) and (
+                target == KERNELS or target.startswith(KERNELS + ".")
+            ):
+                errors.append(
+                    f"{loc}: {mod} imports {target} — search/serve must go "
+                    "through core.batch, never repro.kernels directly"
+                )
+            if is_frontend and target in FRONTENDS and target != mod:
+                errors.append(
+                    f"{loc}: frontend {mod} imports sibling frontend "
+                    f"{target} — shared logic belongs in search.pipeline / "
+                    "search.incumbents"
+                )
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    if errors:
+        print("layering lint FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    n = len(list((SRC / PKG).rglob("*.py")))
+    print(f"layering lint OK ({n} modules)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

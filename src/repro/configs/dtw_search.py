@@ -121,5 +121,32 @@ class SearchConfig:
     def window(self) -> int:
         return int(self.query_len * self.window_ratio)
 
+    def make_plan(self, **overrides):
+        """Resolve this config into the pipeline's ``SearchPlan``.
+
+        The config is the serialized/CLI-facing knob surface; the plan is
+        the frozen, backend-resolved form every search stage takes as its
+        static argument (``search.pipeline``). ``overrides`` replace
+        individual knobs (e.g. ``backend="jax"``, ``rounds="persistent"``).
+        """
+        from repro.search.pipeline import make_plan  # config stays import-light
+
+        kw = dict(
+            length=self.query_len,
+            window=self.window,
+            variant=self.variant,
+            batch=self.batch,
+            band_width=self.band_width,
+            backend=None if self.backend == "auto" else self.backend,
+            rows_per_step=self.rows_per_step,
+            block_k=self.block_k,
+            row_block=self.row_block,
+            rounds=self.rounds,
+            quarantine=self.quarantine,
+            warm_start=self.warm_start,
+        )
+        kw.update(overrides)
+        return make_plan(**kw)
+
 
 CONFIG = SearchConfig()

@@ -1,11 +1,42 @@
-"""UCR-suite style similarity search built on EAPrunedDTW."""
+"""UCR-suite style similarity search built on EAPrunedDTW.
+
+Layering (DESIGN.md §2.8): ``pipeline`` owns the staged search program
+(plan resolution, prepare, cascade, round drivers, executors); the five
+frontends — ``subsequence``, ``multi``, ``streaming``, ``distributed``,
+``resilient`` — are thin wrappers that validate inputs and adapt the
+pipeline to their calling convention; ``incumbents`` owns the carried
+per-query state and quarantine counters. ``scripts/lint_layers.py``
+enforces that frontends never import each other or reach past the
+pipeline into ``core.kernels``.
+
+Note: ``cascade`` here is ``search.cascade.cascade`` (the LB operator
+chain); the pipeline's *stage* of the same name is ``pipeline.cascade``
+and is not re-exported to keep the historical binding.
+"""
 from repro.search.cascade import cascade, cascade_lower_bounds
 from repro.search.distributed import DistSearchResult, make_distributed_search
+from repro.search.incumbents import (
+    IncumbentState,
+    QuarantineLedger,
+    fold_min,
+    fold_np,
+    initial_state,
+)
 from repro.search.multi import (
     DistMultiSearchResult,
     MultiSearchResult,
     make_distributed_multi_search,
     multi_query_search,
+)
+from repro.search.pipeline import (
+    Executor,
+    HostRoundsExecutor,
+    PersistentExecutor,
+    RangeResult,
+    SearchPlan,
+    ShardedExecutor,
+    get_executor,
+    make_plan,
 )
 from repro.search.resilient import (
     CoverageError,
@@ -33,20 +64,33 @@ __all__ = [
     "CoverageError",
     "DistMultiSearchResult",
     "DistSearchResult",
+    "Executor",
+    "HostRoundsExecutor",
+    "IncumbentState",
     "IngestResult",
     "MultiSearchResult",
+    "PersistentExecutor",
+    "QuarantineLedger",
+    "RangeResult",
     "ResilientSearchResult",
+    "SearchPlan",
     "SearchResult",
+    "ShardedExecutor",
     "VARIANTS",
     "append_window_stats",
     "cascade",
     "cascade_lower_bounds",
     "clamp_sigma",
+    "fold_min",
+    "fold_np",
     "gather_norm_windows",
+    "get_executor",
     "ingest_chunk",
     "initial_incumbents",
+    "initial_state",
     "make_distributed_multi_search",
     "make_distributed_search",
+    "make_plan",
     "multi_query_search",
     "rescore_windows",
     "resilient_search",

@@ -15,29 +15,22 @@ The multi-device mapping of the paper's technique (DESIGN.md §2.4):
     work per round is bounded and uniform, so a slow device delays at most
     one round of its peers.
 
-Built on ``shard_map`` so the same code lowers for the 1-device CPU test,
-the 256-chip pod, and the 512-chip multi-pod mesh.
+This module is the *scalar* (single-query) frontend of the mesh program
+owned by ``search.pipeline.make_sharded_search`` (DESIGN.md §2.8): the SPMD
+while_loop, the sharded quarantine accounting, and the lexicographic
+``pmin`` reconcile live there, shared with ``make_distributed_multi_search``
+and the ``ShardedExecutor`` range seam. Built on ``shard_map`` so the same
+code lowers for the 1-device CPU test, the 256-chip pod, and the 512-chip
+multi-pod mesh.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.core.batch import ea_pruned_dtw_batch
-from repro.core.compat import shard_map as _shard_map
-from repro.core.common import BIG
-from repro.core.lower_bounds import cascade_keogh_cumulative, envelope, lb_keogh, lb_kim_fl
-from repro.search.znorm import (
-    gather_norm_windows,
-    sanitize_series,
-    window_finite_mask,
-    window_stats,
-    znorm,
-)
+from repro.search.pipeline import make_plan, make_sharded_search
 
 
 class DistSearchResult(NamedTuple):
@@ -45,26 +38,6 @@ class DistSearchResult(NamedTuple):
     best_dist: jax.Array
     rounds: jax.Array
     quarantined: jax.Array  # windows excluded by the non-finite quarantine
-
-
-def _local_lbs(ref, query_n, starts, valid, length, window, mu, sigma, chunk):
-    """Lower bounds for this device's candidate starts (chunked)."""
-    u, low = envelope(query_n, window)
-    n_local = starts.shape[0]
-    n_chunks = -(-n_local // chunk)
-    pad = n_chunks * chunk - n_local
-    starts_p = jnp.concatenate([starts, jnp.zeros((pad,), starts.dtype)])
-    valid_p = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
-
-    def one(i):
-        s = jax.lax.dynamic_slice(starts_p, (i * chunk,), (chunk,))
-        v = jax.lax.dynamic_slice(valid_p, (i * chunk,), (chunk,))
-        cand = gather_norm_windows(ref, s, length, mu, sigma)
-        lb = jnp.maximum(lb_kim_fl(query_n, cand), lb_keogh(cand, u, low))
-        return jnp.where(v, lb, jnp.inf)
-
-    lbs = jax.lax.map(one, jnp.arange(n_chunks)).reshape(-1)
-    return lbs[:n_local]
 
 
 def make_distributed_search(
@@ -84,7 +57,9 @@ def make_distributed_search(
     """Build a jitted distributed search fn for a given mesh/shape config.
 
     Returns ``search_fn(ref, query) -> DistSearchResult``. ``ref`` must have
-    static length; the number of windows is padded to the mesh size.
+    static length; the number of windows is padded to the mesh size. The
+    search runs as the Q=1 case of the pipeline's multi-query mesh program
+    — one query lane, the same per-round ``pmin`` incumbent sharing.
 
     ``backend`` / ``rows_per_step`` / ``block_k`` / ``row_block`` select and
     tune the per-device DTW batch implementation exactly as in
@@ -99,133 +74,20 @@ def make_distributed_search(
     ``DistSearchResult.quarantined``, which therefore equals the
     single-device ``subsequence_search(...).quarantined`` exactly.
     """
-    n_shards = 1
-    for a in axis_names:
-        n_shards *= mesh.shape[a]
-    spec_sharded = P(axis_names)
-    spec_rep = P()
+    plan = make_plan(
+        length=length, window=window, variant="eapruned", batch=batch,
+        band_width=band_width, chunk=chunk, backend=backend,
+        rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
+        quarantine=quarantine,
+    )
+    sharded = make_sharded_search(mesh, axis_names, plan)
 
-    def local_search(ref, query_n, starts, valid, q_ok):
-        def psum_all(x):
-            for a in axis_names:
-                x = jax.lax.psum(x, a)
-            return x
-
-        # Quarantine accounting before the mask folds into ``valid``: each
-        # shard counts its own real (non-padding) condemned windows, and the
-        # psum reconciles them into the global count every shard reports.
-        n_quar = psum_all(
-            jnp.sum(jnp.logical_and(valid, ~q_ok)).astype(jnp.int32)
-        )
-        valid = jnp.logical_and(valid, q_ok)
-        mu, sigma = window_stats(ref, length)
-        lbs = _local_lbs(ref, query_n, starts, valid, length, window, mu, sigma, chunk)
-        order = jnp.argsort(lbs)
-        starts_o = starts[order]
-        lb_o = lbs[order]
-        n_local = starts.shape[0]
-        n_rounds = -(-n_local // batch)
-        pad = n_rounds * batch - n_local
-        starts_p = jnp.concatenate([starts_o, jnp.zeros((pad,), starts_o.dtype)])
-        lb_p = jnp.concatenate([lb_o, jnp.full((pad,), jnp.inf, lb_o.dtype)])
-        u, low = envelope(query_n, window)
-
-        def pmin_all(x):
-            for a in axis_names:
-                x = jax.lax.pmin(x, a)
-            return x
-
-        def pmax_all(x):
-            for a in axis_names:
-                x = jax.lax.pmax(x, a)
-            return x
-
-        class St(NamedTuple):
-            r: jax.Array
-            ub: jax.Array        # globally shared upper bound
-            best: jax.Array      # local best start
-            best_d: jax.Array    # local best distance
-            go: jax.Array        # global continue flag
-
-        def cond(st: St) -> jax.Array:
-            return st.go
-
-        def body(st: St) -> St:
-            s = jax.lax.dynamic_slice(starts_p, (st.r * batch,), (batch,))
-            lb = jax.lax.dynamic_slice(lb_p, (st.r * batch,), (batch,))
-            local_more = jnp.logical_and(st.r < n_rounds, lb[0] < st.ub)
-            cand = gather_norm_windows(ref, s, length, mu, sigma)
-            cb = cascade_keogh_cumulative(cand, u, low)
-            d = ea_pruned_dtw_batch(
-                query_n, cand, st.ub, window=window, band_width=band_width,
-                cb=cb, rows_per_step=rows_per_step, backend=backend,
-                block_k=block_k, row_block=row_block,
-            )
-            # lanes that are padding, or rounds past this device's work,
-            # must not contribute
-            d = jnp.where(jnp.isfinite(lb), d, jnp.inf)
-            d = jnp.where(local_more, d, jnp.inf)
-            k = jnp.argmin(d)
-            dmin = d[k]
-            improved = dmin < st.best_d
-            best = jnp.where(improved, s[k], st.best)
-            best_d = jnp.where(improved, dmin, st.best_d)
-            # share the upper bound; advance only devices that did real work
-            ub = pmin_all(jnp.minimum(st.ub, dmin))
-            r = st.r + local_more.astype(st.r.dtype)
-            # a device continues while any device still has useful rounds
-            nxt_lb = jax.lax.dynamic_slice(lb_p, (r * batch,), (1,))[0]
-            local_next = jnp.logical_and(r < n_rounds, nxt_lb < ub)
-            return St(r=r, ub=ub, best=best, best_d=best_d, go=pmax_all(local_next))
-
-        # prime the global continue flag
-        go0 = pmax_all(jnp.asarray(True))
-        st0 = St(
-            r=jnp.asarray(0),
-            ub=jnp.asarray(BIG, query_n.dtype),
-            best=jnp.asarray(-1, starts.dtype),
-            best_d=jnp.asarray(BIG, query_n.dtype),
-            go=go0,
-        )
-        st = jax.lax.while_loop(cond, body, st0)
-        # global argmin: lexicographic (distance, start) via pmin on packed key
-        ax_min = st.best_d
-        g_min = pmin_all(ax_min)
-        is_best = jnp.isclose(st.best_d, g_min)
-        cand_start = jnp.where(is_best, st.best, jnp.iinfo(jnp.int32).max)
-        g_start = pmin_all(cand_start.astype(jnp.int32))
-        return g_min, g_start, pmax_all(st.r), n_quar
-
-    @jax.jit
     def search_fn(ref: jax.Array, query: jax.Array) -> DistSearchResult:
-        ref = jnp.asarray(ref)
-        query_n = znorm(jnp.asarray(query)[:length])
-        n_win = ref.shape[0] - length + 1
-        per = -(-n_win // n_shards)
-        total = per * n_shards
-        starts = jnp.arange(total, dtype=jnp.int32)
-        valid = starts < n_win
-        starts = jnp.minimum(starts, n_win - 1)
-        if quarantine:
-            # Mask on the raw series, sanitize before replication so shared
-            # prefix sums stay finite for the surviving windows (§2.6).
-            finite_ok = window_finite_mask(ref, length)
-            ref = sanitize_series(ref)
-            q_ok = finite_ok[starts]
-        else:
-            q_ok = jnp.ones_like(valid)
-
-        shard = _shard_map(
-            local_search,
-            mesh=mesh,
-            in_specs=(
-                spec_rep, spec_rep, spec_sharded, spec_sharded, spec_sharded,
-            ),
-            out_specs=(spec_rep, spec_rep, spec_rep, spec_rep),
+        best_d, best_s, rounds, n_quar = sharded(
+            jnp.asarray(ref), jnp.asarray(query)[None]
         )
-        best_d, best_s, rounds, n_quar = shard(ref, query_n, starts, valid, q_ok)
         return DistSearchResult(
-            best_start=best_s, best_dist=best_d, rounds=rounds,
+            best_start=best_s[0], best_dist=best_d[0], rounds=rounds,
             quarantined=n_quar,
         )
 

@@ -1,0 +1,142 @@
+"""The per-query incumbent store and quarantine ledger.
+
+Every search frontend in this repo carries the same two pieces of state:
+
+  * the **incumbent vector** — per-query upper bound ``ub[q]`` plus the
+    window start ``best[q]`` that achieved it (``-1`` while a seed is
+    unbeaten). Updates are *strict improvement only* (``d < ub``, never
+    ``<=``): the first achiever of a distance keeps its start, which is
+    what makes carried seeds admissible (a rerun of a range seeded with a
+    bound achieved inside that range can still re-adopt the achieving
+    window only because the seed rode in *with* its start).
+  * the **quarantine counters** (DESIGN.md §2.6/§2.7) — windows excluded
+    by the non-finite quarantine, raw bad samples seen, and windows later
+    re-admitted by ``correct()``.
+
+Before the pipeline refactor each frontend hand-rolled both (five copies
+of the argmin/strict-improvement fold, two copies of the counter
+bookkeeping, with subtle drift). This module is now the single owner:
+
+  * ``IncumbentState`` / ``initial_state`` — the carried ``(ub, best)``.
+  * ``fold_min`` — one ``(Q, K)`` round of distances folded into the
+    state (device-side, used inside every jitted round loop).
+  * ``fold_np`` — the same rule on host numpy arrays (the resilient
+    executor folds completed ranges on the host).
+  * ``DEAD_LANE_UB`` re-export — the negative sentinel that kills a lane
+    on row 0; any lane whose lower bound is non-finite (padding,
+    quarantined, inactive query) must be submitted with it.
+  * ``QuarantineLedger`` — the counter triple with checkpoint-stable
+    ``state_dict()`` keys (``quarantined`` / ``bad_samples`` /
+    ``readmitted``), shared by ``IngestResult`` accounting and
+    ``serve.stream.StreamSearchEngine``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.common import BIG, DEAD_LANE_UB  # noqa: F401  (re-export)
+
+
+class IncumbentState(NamedTuple):
+    """Carried per-query incumbents: ``(Q,)`` upper bounds + best starts."""
+    ub: jax.Array    # (Q,) upper bound; == seed while unbeaten
+    best: jax.Array  # (Q,) achieving window start; -1 while unbeaten
+
+
+def initial_state(
+    nq: int, dtype=jnp.float32, ub_init=None, best_dtype=jnp.int32
+) -> IncumbentState:
+    """Fresh incumbents for Q queries; ``ub_init`` warm-seeds (scalar/(Q,))."""
+    if ub_init is None:
+        ub = jnp.full((nq,), BIG, dtype)
+    else:
+        ub = jnp.broadcast_to(jnp.asarray(ub_init, dtype), (nq,))
+    return IncumbentState(ub=ub, best=jnp.full((nq,), -1, best_dtype))
+
+
+def fold_min(
+    state: IncumbentState, starts: jax.Array, d: jax.Array, offset=0
+) -> tuple[IncumbentState, jax.Array]:
+    """Fold one round of distances into the incumbents (strict improvement).
+
+    ``d`` is ``(Q, K)`` with dead/padding lanes already at ``+inf``;
+    ``starts`` the matching ``(Q, K)`` window starts. ``offset`` maps local
+    starts into caller coordinates (stream offset, range ``lo``). Returns
+    the new state and the per-query ``improved`` mask.
+    """
+    k = jnp.argmin(d, axis=1)
+    dmin = jnp.take_along_axis(d, k[:, None], axis=1)[:, 0]
+    improved = dmin < state.ub
+    starts_k = jnp.take_along_axis(starts, k[:, None], axis=1)[:, 0]
+    return IncumbentState(
+        ub=jnp.where(improved, dmin, state.ub),
+        best=jnp.where(
+            improved, offset + starts_k.astype(state.best.dtype), state.best
+        ),
+    ), improved
+
+
+def fold_np(ub: np.ndarray, best: np.ndarray, starts, dists):
+    """Host-side fold of achieved ``(start, dist)`` pairs (resilient path).
+
+    Same strict-improvement rule as ``fold_min``; additionally requires a
+    real achieving start (``>= 0``) — a bare bound with no achieving window
+    is never folded (see ``search.resilient`` module docstring).
+    """
+    s = np.asarray(starts, np.int64)
+    d = np.asarray(dists, np.float64)
+    improved = np.logical_and(s >= 0, d < ub)
+    return np.where(improved, d, ub), np.where(improved, s, best)
+
+
+class QuarantineLedger:
+    """One source of truth for §2.6 quarantine accounting.
+
+    ``windows`` / ``samples`` accumulate lazily as device scalars so an
+    ingest never forces a sync just to keep counters (the serving engine
+    overlaps chunk arrival with the in-flight dispatch); ``readmitted`` is
+    host-driven (the re-admission queue lives on the host). The
+    ``state_dict`` keys match the engine's historical checkpoint layout, so
+    snapshots taken before the ledger existed restore unchanged.
+    """
+
+    def __init__(self):
+        self.windows = jnp.asarray(0, jnp.int32)
+        self.samples = jnp.asarray(0, jnp.int32)
+        self.readmitted = 0
+
+    def note_windows(self, n) -> None:
+        """Count newly quarantined windows (device scalar ok)."""
+        self.windows = self.windows + jnp.asarray(n, jnp.int32)
+
+    def note_samples(self, n) -> None:
+        """Count newly seen non-finite raw samples (device scalar ok)."""
+        self.samples = self.samples + jnp.asarray(n, jnp.int32)
+
+    def correct_samples(self, k: int) -> None:
+        """``k`` bad samples were patched with finite values."""
+        self.samples = self.samples - jnp.asarray(int(k), jnp.int32)
+
+    def readmit(self, n: int) -> None:
+        """``n`` previously quarantined windows were rescored back in."""
+        n = int(n)
+        self.windows = self.windows - jnp.asarray(n, jnp.int32)
+        self.readmitted += n
+
+    def state_dict(self) -> dict:
+        return {
+            "quarantined": np.asarray(self.windows, np.int32),
+            "bad_samples": np.asarray(self.samples, np.int32),
+            "readmitted": np.asarray(self.readmitted, np.int64),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.windows = jnp.asarray(state["quarantined"], jnp.int32)
+        self.samples = jnp.asarray(state["bad_samples"], jnp.int32)
+        # Older checkpoints predate re-admission.
+        self.readmitted = int(state.get("readmitted", 0))

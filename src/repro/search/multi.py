@@ -3,9 +3,15 @@
 The serving shape of the paper's pipeline. ``subsequence_search`` answers
 one query; a serving tier answers a *workload* of queries against the same
 reference. Running Q sequential searches wastes exactly what the batched
-EAPrunedDTW primitive is good at: lanes. This driver flattens the Q queries'
-candidate rounds into a single ``(Q × batch)`` lane set per dispatch and
-keeps one incumbent **per query**.
+EAPrunedDTW primitive is good at: lanes. This frontend flattens the Q
+queries' candidate rounds into a single ``(Q × batch)`` lane set per
+dispatch and keeps one incumbent **per query**.
+
+The machinery lives in ``search.pipeline`` (DESIGN.md §2.8): this module
+validates, builds the ``SearchPlan``, and runs the shared offline core
+(``pipeline._offline_search_impl`` → ``run_host_rounds`` /
+``run_persistent``); the mesh closure below binds the sharded executor
+(``pipeline.make_sharded_search``).
 
 (query × candidate) lane layout
 -------------------------------
@@ -48,7 +54,9 @@ parallel, and each query's incumbent is carried in SMEM across the now
 *sequential* candidate-block dimension — tightened every ``block_k`` lanes
 and gating LB-pruned blocks on device. Same per-query results, O(1)
 dispatches, at the cost of materializing the ``(Q, N, l)`` window tensor up
-front.
+front. ``warm_start`` works here too: the same prepass dispatch seeds the
+sweep's SMEM incumbents and the prepass winner keeps its start when the
+sweep cannot beat it (pre-refactor the knob was silently dropped).
 
 The distributed variant (``make_distributed_multi_search``) shards the
 (query, candidate-range) work items across the mesh: candidate ranges are
@@ -62,31 +70,27 @@ pattern. Devices iterate in lockstep until the global continue flag
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.core import guards
-from repro.core.backend import resolve_backend
-from repro.core.batch import ea_pruned_dtw_multi_batch, ea_pruned_dtw_persistent
-from repro.core.common import BIG, DEAD_LANE_UB, pad_lanes_to_blocks
-from repro.core.lower_bounds import cascade_keogh_cumulative, envelope
-from repro.search.cascade import cascade_lower_bounds
-from repro.core.compat import shard_map as _shard_map
-from repro.search.distributed import _local_lbs
-from repro.search.subsequence import ROUND_DRIVERS
-from repro.search.znorm import (
-    gather_norm_windows,
-    sanitize_series,
-    window_finite_mask,
-    window_stats,
-    znorm,
+from repro.search.pipeline import (
+    MULTI_VARIANTS,
+    ROUND_DRIVERS,
+    _offline_search_impl,
+    make_plan,
+    make_sharded_search,
 )
 
-MULTI_VARIANTS = ("eapruned", "eapruned_nolb")
+__all__ = [
+    "MULTI_VARIANTS",
+    "DistMultiSearchResult",
+    "MultiSearchResult",
+    "make_distributed_multi_search",
+    "multi_query_search",
+]
 
 
 class MultiSearchResult(NamedTuple):
@@ -107,307 +111,6 @@ class DistMultiSearchResult(NamedTuple):
     quarantined: jax.Array  # windows excluded by the non-finite quarantine
     #   (scalar: windows are query-independent; psum over shards == the
     #   single-device count)
-
-
-def _round_slicers(batch: int):
-    """Vmapped per-query round slicing, shared by both drivers.
-
-    Returns ``(slice_round, peek_lb)``: ``slice_round(rows, ptrs)`` pulls
-    each query's current ``batch``-wide round from its padded row,
-    ``peek_lb(rows, ptrs)`` reads the head (smallest) lower bound of that
-    round.
-    """
-    slice_round = jax.vmap(
-        lambda row, r: jax.lax.dynamic_slice(row, (r * batch,), (batch,)),
-        in_axes=(0, 0),
-    )
-    peek_lb = jax.vmap(
-        lambda row, r: jax.lax.dynamic_slice(row, (r * batch,), (1,))[0],
-        in_axes=(0, 0),
-    )
-    return slice_round, peek_lb
-
-
-@partial(
-    jax.jit,
-    static_argnames=(
-        "length", "window", "variant", "batch", "band_width", "chunk",
-        "with_info", "backend", "rows_per_step", "block_k", "row_block",
-        "warm_start", "rounds", "quarantine",
-    ),
-)
-def _multi_query_search_impl(
-    ref,
-    queries,
-    ub_init,
-    length,
-    window,
-    variant,
-    batch,
-    band_width,
-    chunk,
-    with_info,
-    backend,
-    rows_per_step,
-    block_k,
-    row_block,
-    warm_start,
-    rounds,
-    quarantine,
-):
-    assert variant in MULTI_VARIANTS, variant
-    knobs = dict(
-        rows_per_step=rows_per_step, backend=backend, block_k=block_k,
-        row_block=row_block,
-    )
-    ref = jnp.asarray(ref)
-    queries_n = znorm(jnp.asarray(queries)[:, :length])  # (Q, l)
-    nq = queries_n.shape[0]
-    n_win = ref.shape[0] - length + 1
-    use_lb = variant != "eapruned_nolb"
-    use_cb = variant == "eapruned"
-
-    if quarantine:
-        finite_ok = window_finite_mask(ref, length)
-        n_quar = jnp.sum(~finite_ok).astype(jnp.int32)
-        ref = sanitize_series(ref)
-    else:
-        finite_ok = None
-        n_quar = jnp.asarray(0, jnp.int32)
-
-    # Stage 1, amortized: one stats pass, one vmapped cascade over all Q.
-    mu, sigma = window_stats(ref, length)
-    if use_lb:
-        lbs = jax.vmap(
-            lambda qn: cascade_lower_bounds(
-                ref, qn, mu, sigma, length, window, chunk=chunk
-            )
-        )(queries_n)                                   # (Q, N)
-        if quarantine:
-            # Quarantined windows: +inf lower bound — sorted behind every
-            # live candidate, never reached by the cascade stop, dead lanes
-            # if a partially-live round straddles them (DESIGN.md §2.6).
-            lbs = jnp.where(finite_ok[None, :], lbs, jnp.inf)
-        order = jnp.argsort(lbs, axis=1)               # (Q, N)
-        lb_sorted = jnp.take_along_axis(lbs, order, axis=1)
-    elif quarantine:
-        # No-cascade variant: stable argsort of the 0/+inf quarantine mask
-        # keeps natural scan order among surviving windows and pushes
-        # poisoned ones to the back.
-        lbs = jnp.broadcast_to(
-            jnp.where(finite_ok, 0.0, jnp.inf).astype(queries_n.dtype),
-            (nq, n_win),
-        )
-        order = jnp.argsort(lbs, axis=1)
-        lb_sorted = jnp.take_along_axis(lbs, order, axis=1)
-    else:
-        order = jnp.broadcast_to(jnp.arange(n_win), (nq, n_win))
-        lb_sorted = jnp.zeros((nq, n_win), queries_n.dtype)
-
-    u, low = jax.vmap(envelope, in_axes=(0, None))(queries_n, window)
-
-    if rounds == "persistent":
-        # One launch for the whole workload: grid (Q, cand_blocks,
-        # row_blocks) with the query dimension parallel and a per-query
-        # incumbent carried across the sequential candidate dimension
-        # (SMEM on the Pallas backend, mapped while_loops on jax). The
-        # query-major lane layout is unchanged from the host rounds.
-        assert not with_info, "persistent mode is counter-free"
-        if ub_init is None:
-            ub0 = jnp.full((nq,), BIG, queries_n.dtype)
-        else:
-            ub0 = jnp.broadcast_to(
-                jnp.asarray(ub_init, queries_n.dtype), (nq,)
-            )
-        lb_p, order_p, _ = pad_lanes_to_blocks(block_k, lb_sorted, order)
-        cand_all = jax.vmap(
-            lambda s: gather_norm_windows(ref, s, length, mu, sigma)
-        )(order_p)                                     # (Q, k_pad, l)
-        bd, bs, blocks = ea_pruned_dtw_persistent(
-            queries_n, cand_all, lb_p, order_p, ub0, window=window,
-            band_width=band_width,
-            envelopes=(u, low) if use_cb else None, **knobs,
-        )
-        # visited blocks are a best-first prefix per query, so only the
-        # final padded block can hold non-candidates — clamp to n_win
-        lanes = jnp.minimum(blocks * block_k, n_win).astype(jnp.int32)
-        no_info = jnp.full((nq,), -1)
-        return MultiSearchResult(
-            best_start=bs,
-            best_dist=bd,
-            rounds=jnp.ones((nq,), jnp.int32),  # dispatches: one launch
-            lanes=lanes,
-            lb_pruned=n_win - lanes,
-            rows=no_info,
-            cells=no_info,
-            quarantined=n_quar,
-        )
-
-    n_rounds = -(-n_win // batch)
-    pad = n_rounds * batch - n_win
-    order_p = jnp.concatenate(
-        [order, jnp.zeros((nq, pad), order.dtype)], axis=1
-    )
-    lb_p = jnp.concatenate(
-        [lb_sorted, jnp.full((nq, pad), jnp.inf, lb_sorted.dtype)], axis=1
-    )
-
-    if ub_init is None:
-        ub0 = jnp.full((nq,), BIG, queries_n.dtype)
-    else:
-        ub0 = jnp.broadcast_to(
-            jnp.asarray(ub_init, queries_n.dtype), (nq,)
-        )
-    best0 = jnp.full((nq,), -1, order.dtype)
-
-    # Warm-start prepass: full-DP each query's ``pre`` best-LB candidates in
-    # one tiny (Q x pre)-lane dispatch so the round loop never runs a
-    # BIG-ub round (in round 0 every lane of every query would otherwise do
-    # the full DP — by far the most expensive round). The round loop
-    # re-encounters these candidates with ``d == ub``; strict-improvement
-    # keeps the prepass incumbent, so results are unchanged.
-    pre = min(int(warm_start), batch)
-    if pre > 0:
-        pre_starts = order_p[:, :pre]
-        pre_lbs = lb_p[:, :pre]
-        cand0 = jax.vmap(
-            lambda s: gather_norm_windows(ref, s, length, mu, sigma)
-        )(pre_starts)
-        ub_pre = jnp.where(
-            jnp.logical_and(jnp.isfinite(pre_lbs), pre_lbs < ub0[:, None]),
-            jnp.broadcast_to(ub0[:, None], (nq, pre)),
-            DEAD_LANE_UB,
-        )
-        if with_info:
-            d0, info0 = ea_pruned_dtw_multi_batch(
-                queries_n, cand0, ub_pre, window=window,
-                band_width=band_width, with_info=True, **knobs,
-            )
-            rows_pre = jnp.sum(info0.rows, axis=1, dtype=jnp.int32)
-            cells_pre = jnp.sum(info0.cells, axis=1, dtype=jnp.int32)
-        else:
-            d0 = ea_pruned_dtw_multi_batch(
-                queries_n, cand0, ub_pre, window=window,
-                band_width=band_width, **knobs,
-            )
-            rows_pre = cells_pre = jnp.zeros((nq,), jnp.int32)
-        d0 = jnp.where(jnp.isfinite(pre_lbs), d0, jnp.inf)
-        k0 = jnp.argmin(d0, axis=1)
-        d0min = jnp.take_along_axis(d0, k0[:, None], axis=1)[:, 0]
-        seeded = d0min < ub0
-        ub0 = jnp.where(seeded, d0min, ub0)
-        best0 = jnp.where(
-            seeded, jnp.take_along_axis(pre_starts, k0[:, None], axis=1)[:, 0],
-            best0,
-        )
-    else:
-        rows_pre = cells_pre = jnp.zeros((nq,), jnp.int32)
-
-    # A query whose warm incumbent already beats its best remaining lower
-    # bound never enters the round loop at all.
-    active0 = jnp.ones((nq,), bool)
-    if use_lb:
-        active0 = lb_p[:, 0] < ub0
-
-    slice_round, peek_lb = _round_slicers(batch)
-
-    class St(NamedTuple):
-        r: jax.Array        # (Q,) per-query round pointer
-        ub: jax.Array       # (Q,) per-query incumbents
-        best: jax.Array     # (Q,)
-        active: jax.Array   # (Q,) still in the round loop?
-        lanes: jax.Array    # (Q,)
-        rows: jax.Array     # (Q,)
-        cells: jax.Array    # (Q,)
-
-    def cond(st: St) -> jax.Array:
-        return jnp.any(st.active)
-
-    def body(st: St) -> St:
-        starts = slice_round(order_p, st.r)            # (Q, batch)
-        lbs_b = slice_round(lb_p, st.r)                # (Q, batch)
-        cand = jax.vmap(
-            lambda s: gather_norm_windows(ref, s, length, mu, sigma)
-        )(starts)                                      # (Q, batch, l)
-        cb = None
-        if use_cb:
-            cb = jax.vmap(cascade_keogh_cumulative)(cand, u, low)
-        # Flattened (Q x batch) lane set, per-lane ub. Three per-lane cases
-        # the scalar-ub driver cannot express: finished queries submit dead
-        # lanes; within an active query's batch, lanes whose own lower bound
-        # already reaches the incumbent are submitted dead too (lane-level
-        # LB gating — the batch-head check only gates the round); the rest
-        # carry their query's incumbent.
-        lane_live = jnp.logical_and(st.active[:, None], lbs_b < st.ub[:, None])
-        ub_lanes = jnp.where(
-            lane_live,
-            jnp.broadcast_to(st.ub[:, None], (nq, batch)),
-            DEAD_LANE_UB,
-        )
-        if with_info:
-            d, info = ea_pruned_dtw_multi_batch(
-                queries_n, cand, ub_lanes, window=window,
-                band_width=band_width, cb=cb, with_info=True, **knobs,
-            )
-            rows_q = jnp.sum(info.rows, axis=1, dtype=jnp.int32)
-            cells_q = jnp.sum(info.cells, axis=1, dtype=jnp.int32)
-        else:
-            d = ea_pruned_dtw_multi_batch(
-                queries_n, cand, ub_lanes, window=window,
-                band_width=band_width, cb=cb, **knobs,
-            )
-            rows_q = cells_q = jnp.zeros((nq,), st.rows.dtype)
-        d = jnp.where(jnp.isfinite(lbs_b), d, jnp.inf)  # padding lanes
-        d = jnp.where(st.active[:, None], d, jnp.inf)
-        k = jnp.argmin(d, axis=1)                       # (Q,)
-        dmin = jnp.take_along_axis(d, k[:, None], axis=1)[:, 0]
-        improved = dmin < st.ub
-        ub_new = jnp.where(improved, dmin, st.ub)
-        best_new = jnp.where(
-            improved, jnp.take_along_axis(starts, k[:, None], axis=1)[:, 0],
-            st.best,
-        )
-        r_new = st.r + st.active.astype(st.r.dtype)
-        # Drop-out: no rounds left, or the next batch's best lower bound
-        # can no longer beat this query's incumbent.
-        more = r_new < n_rounds
-        if use_lb:
-            nxt = peek_lb(lb_p, jnp.minimum(r_new, n_rounds - 1))
-            more = jnp.logical_and(more, nxt < ub_new)
-        return St(
-            r=r_new,
-            ub=ub_new,
-            best=best_new,
-            active=jnp.logical_and(st.active, more),
-            lanes=st.lanes + st.active.astype(st.lanes.dtype) * batch,
-            rows=st.rows + rows_q,
-            cells=st.cells + cells_q,
-        )
-
-    # ``lanes`` counts distinct candidates examined: round 0 re-submits the
-    # prepass candidates (they lead its best-first batch), so the prepass
-    # only stands alone for a query that never enters the round loop.
-    st0 = St(
-        r=jnp.zeros((nq,), jnp.int32),
-        ub=ub0,
-        best=best0,
-        active=active0,
-        lanes=jnp.where(active0, 0, pre).astype(jnp.int32),
-        rows=rows_pre,
-        cells=cells_pre,
-    )
-    st = jax.lax.while_loop(cond, body, st0)
-    no_info = jnp.full((nq,), -1)
-    return MultiSearchResult(
-        best_start=st.best,
-        best_dist=st.ub,
-        rounds=st.r,
-        lanes=st.lanes,
-        lb_pruned=n_win - jnp.minimum(st.lanes, n_win),
-        rows=st.rows if with_info else no_info,
-        cells=st.cells if with_info else no_info,
-        quarantined=n_quar,
-    )
 
 
 def multi_query_search(
@@ -462,8 +165,9 @@ def multi_query_search(
         work, not results: it helps the Pallas backend's block-level early
         exit (round-0 blocks can die early instead of running full DPs) but
         adds prepass lanes the vmap backend cannot recoup — leave it off on
-        CPU. A host-rounds knob: ignored by the persistent driver, whose
-        incumbent already tightens every ``block_k`` lanes from block 0.
+        CPU. With the persistent driver the prepass bound seeds the SMEM
+        incumbents (and the prepass winner keeps its start when the sweep
+        cannot beat it), so ``rounds`` reports 2 dispatches.
       rounds: ``"host"`` (per-round dispatches, the default) or
         ``"persistent"`` — the whole Q-query sweep in one launch with
         per-query incumbents carried in SMEM across candidate blocks (see
@@ -486,21 +190,30 @@ def multi_query_search(
     guards.ensure_series(ref, "ref", ndim=1, min_len=length)
     guards.ensure_series(queries, "queries", ndim=2, min_len=length)
     guards.ensure_finite(queries, "queries")
-    guards.ensure_knobs(
-        length=length, window=window, batch=batch, band_width=band_width,
-        block_k=block_k, row_block=row_block, rows_per_step=rows_per_step,
-    )
     if ub_init is not None and guards.is_concrete(ub_init):
         if bool(jnp.any(jnp.isnan(jnp.asarray(ub_init)))):
             raise guards.NonFiniteInputError(
                 "ub_init contains NaN (use +inf / BIG for a cold start)"
             )
-    return _multi_query_search_impl(
-        ref, queries, ub_init, length=length, window=window, variant=variant,
-        batch=batch, band_width=band_width, chunk=chunk, with_info=with_info,
-        backend=resolve_backend(backend), rows_per_step=rows_per_step,
-        block_k=block_k, row_block=row_block, warm_start=warm_start,
-        rounds=rounds, quarantine=quarantine,
+    plan = make_plan(
+        length=length, window=window, variant=variant, batch=batch,
+        band_width=band_width, chunk=chunk, backend=backend,
+        rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
+        rounds=rounds, quarantine=quarantine, warm_start=warm_start,
+        with_info=with_info, allowed_variants=MULTI_VARIANTS,
+    )
+    state, stats, n_quar = _offline_search_impl(
+        ref, queries, ub_init, plan, with_info
+    )
+    return MultiSearchResult(
+        best_start=state.best,
+        best_dist=state.ub,
+        rounds=stats.rounds,
+        lanes=stats.lanes,
+        lb_pruned=stats.lb_pruned,
+        rows=stats.rows,
+        cells=stats.cells,
+        quarantined=n_quar,
     )
 
 
@@ -521,15 +234,16 @@ def make_distributed_multi_search(
     """Build a jitted distributed multi-query search fn for a mesh config.
 
     Returns ``search_fn(ref, queries) -> DistMultiSearchResult`` with
-    per-query ``(Q,)`` results. Work items are (query, candidate-range)
-    pairs: candidate window starts are sharded contiguously across the mesh
-    axes (each device owns a range of every query's windows), queries are
-    flattened into the lane dimension of the per-device multi-query batch,
-    and after every round the per-query incumbent vector is reconciled with
-    one vectorized ``pmin`` all-reduce. Devices iterate in lockstep until no
-    device has an active (query, range) item left (``pmax`` continue flag);
-    a device whose query finished early submits dead lanes for it, so
-    stragglers cost masked rows, not DPs.
+    per-query ``(Q,)`` results — the sharded executor of the pipeline
+    (``pipeline.make_sharded_search``). Work items are (query,
+    candidate-range) pairs: candidate window starts are sharded contiguously
+    across the mesh axes (each device owns a range of every query's
+    windows), queries are flattened into the lane dimension of the
+    per-device multi-query batch, and after every round the per-query
+    incumbent vector is reconciled with one vectorized ``pmin`` all-reduce.
+    Devices iterate in lockstep until no device has an active (query, range)
+    item left (``pmax`` continue flag); a device whose query finished early
+    submits dead lanes for it, so stragglers cost masked rows, not DPs.
 
     ``backend`` is resolved once, here at closure-build time.
 
@@ -541,156 +255,16 @@ def make_distributed_multi_search(
     the shared prefix sums finite for survivors — exactly the single-device
     contract of ``multi_query_search`` (DESIGN.md §2.6/§2.7).
     """
-    backend = resolve_backend(backend)
-    n_shards = 1
-    for a in axis_names:
-        n_shards *= mesh.shape[a]
-    spec_sharded = P(axis_names)
-    spec_rep = P()
+    plan = make_plan(
+        length=length, window=window, variant="eapruned", batch=batch,
+        band_width=band_width, chunk=chunk, backend=backend,
+        rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
+        quarantine=quarantine, allowed_variants=MULTI_VARIANTS,
+    )
+    sharded = make_sharded_search(mesh, axis_names, plan)
 
-    def local_search(ref, queries_n, starts, valid, q_ok):
-        nq = queries_n.shape[0]
-
-        def psum_all(x):
-            for a in axis_names:
-                x = jax.lax.psum(x, a)
-            return x
-
-        n_quar = psum_all(
-            jnp.sum(jnp.logical_and(valid, ~q_ok)).astype(jnp.int32)
-        )
-        valid = jnp.logical_and(valid, q_ok)
-        mu, sigma = window_stats(ref, length)
-        lbs = jax.vmap(
-            lambda qn: _local_lbs(
-                ref, qn, starts, valid, length, window, mu, sigma, chunk
-            )
-        )(queries_n)                                   # (Q, n_local)
-        order = jnp.argsort(lbs, axis=1)
-        starts_o = jnp.take_along_axis(
-            jnp.broadcast_to(starts, lbs.shape), order, axis=1
-        )
-        lb_o = jnp.take_along_axis(lbs, order, axis=1)
-        n_local = starts.shape[0]
-        n_rounds = -(-n_local // batch)
-        pad = n_rounds * batch - n_local
-        starts_p = jnp.concatenate(
-            [starts_o, jnp.zeros((nq, pad), starts_o.dtype)], axis=1
-        )
-        lb_p = jnp.concatenate(
-            [lb_o, jnp.full((nq, pad), jnp.inf, lb_o.dtype)], axis=1
-        )
-        u, low = jax.vmap(envelope, in_axes=(0, None))(queries_n, window)
-
-        def pmin_all(x):
-            for a in axis_names:
-                x = jax.lax.pmin(x, a)
-            return x
-
-        def pmax_all(x):
-            for a in axis_names:
-                x = jax.lax.pmax(x, a)
-            return x
-
-        slice_round, peek_lb = _round_slicers(batch)
-
-        class St(NamedTuple):
-            r: jax.Array        # (Q,) local per-query round pointer
-            ub: jax.Array       # (Q,) globally reconciled incumbents
-            best: jax.Array     # (Q,) local best start
-            best_d: jax.Array   # (Q,) local best distance
-            go: jax.Array       # global continue flag
-
-        def cond(st: St) -> jax.Array:
-            return st.go
-
-        def body(st: St) -> St:
-            s = slice_round(starts_p, st.r)            # (Q, batch)
-            lb = slice_round(lb_p, st.r)
-            head = peek_lb(lb_p, st.r)
-            local_more = jnp.logical_and(st.r < n_rounds, head < st.ub)  # (Q,)
-            cand = jax.vmap(
-                lambda ss: gather_norm_windows(ref, ss, length, mu, sigma)
-            )(s)
-            cb = jax.vmap(cascade_keogh_cumulative)(cand, u, low)
-            # Dead-lane sentinel for finished (query, range) items and for
-            # lanes whose own lower bound already reaches the incumbent
-            # (lane-level LB gating, as in the single-host driver).
-            lane_live = jnp.logical_and(local_more[:, None], lb < st.ub[:, None])
-            ub_lanes = jnp.where(
-                lane_live,
-                jnp.broadcast_to(st.ub[:, None], (nq, batch)),
-                DEAD_LANE_UB,
-            )
-            d = ea_pruned_dtw_multi_batch(
-                queries_n, cand, ub_lanes, window=window,
-                band_width=band_width, cb=cb, rows_per_step=rows_per_step,
-                backend=backend, block_k=block_k, row_block=row_block,
-            )
-            d = jnp.where(jnp.isfinite(lb), d, jnp.inf)  # padding lanes
-            d = jnp.where(local_more[:, None], d, jnp.inf)
-            k = jnp.argmin(d, axis=1)
-            dmin = jnp.take_along_axis(d, k[:, None], axis=1)[:, 0]
-            improved = dmin < st.best_d
-            best = jnp.where(
-                improved, jnp.take_along_axis(s, k[:, None], axis=1)[:, 0],
-                st.best,
-            )
-            best_d = jnp.where(improved, dmin, st.best_d)
-            # One vectorized pmin reconciles all Q incumbents per round.
-            ub = pmin_all(jnp.minimum(st.ub, dmin))
-            r = st.r + local_more.astype(st.r.dtype)
-            nxt = peek_lb(lb_p, jnp.minimum(r, n_rounds - 1))
-            local_next = jnp.logical_and(r < n_rounds, nxt < ub)
-            return St(
-                r=r, ub=ub, best=best, best_d=best_d,
-                go=pmax_all(jnp.any(local_next)),
-            )
-
-        go0 = pmax_all(jnp.asarray(True))
-        st0 = St(
-            r=jnp.zeros((nq,), jnp.int32),
-            ub=jnp.full((nq,), BIG, queries_n.dtype),
-            best=jnp.full((nq,), -1, starts.dtype),
-            best_d=jnp.full((nq,), BIG, queries_n.dtype),
-            go=go0,
-        )
-        st = jax.lax.while_loop(cond, body, st0)
-        # Per-query global argmin: vectorized lexicographic (distance, start).
-        g_min = pmin_all(st.best_d)                    # (Q,)
-        is_best = jnp.isclose(st.best_d, g_min)
-        cand_start = jnp.where(is_best, st.best, jnp.iinfo(jnp.int32).max)
-        g_start = pmin_all(cand_start.astype(jnp.int32))
-        return g_min, g_start, pmax_all(jnp.max(st.r)), n_quar
-
-    @jax.jit
     def search_fn(ref: jax.Array, queries: jax.Array) -> DistMultiSearchResult:
-        ref = jnp.asarray(ref)
-        queries_n = znorm(jnp.asarray(queries)[:, :length])
-        n_win = ref.shape[0] - length + 1
-        per = -(-n_win // n_shards)
-        total = per * n_shards
-        starts = jnp.arange(total, dtype=jnp.int32)
-        valid = starts < n_win
-        starts = jnp.minimum(starts, n_win - 1)
-        if quarantine:
-            finite_ok = window_finite_mask(ref, length)
-            ref = sanitize_series(ref)
-            q_ok = finite_ok[starts]
-        else:
-            q_ok = jnp.ones_like(valid)
-
-        shard = _shard_map(
-            local_search,
-            mesh=mesh,
-            in_specs=(
-                spec_rep, spec_rep, spec_sharded, spec_sharded, spec_sharded,
-            ),
-            out_specs=(spec_rep, spec_rep, spec_rep, spec_rep),
-        )
-        best_d, best_s, rounds, n_quar = shard(
-            ref, queries_n, starts, valid, q_ok
-        )
+        best_d, best_s, rounds, n_quar = sharded(ref, queries)
         return DistMultiSearchResult(
             best_start=best_s, best_dist=best_d, rounds=rounds,
             quarantined=n_quar,

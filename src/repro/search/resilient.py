@@ -68,7 +68,8 @@ import jax.numpy as jnp
 
 from repro.core import guards
 from repro.distributed.fault_tolerance import StragglerMonitor
-from repro.search.multi import multi_query_search
+from repro.search.incumbents import IncumbentState, fold_np
+from repro.search.pipeline import MULTI_VARIANTS, HostRoundsExecutor, make_plan
 
 # The transient/guard split shared with serve.supervisor: retry these,
 # re-raise typed guard errors (caller bugs) immediately.
@@ -194,23 +195,30 @@ def resilient_search(
     best = np.full((nq,), -1, np.int64)
 
     if runner is None:
+        # The default range execution IS the pipeline's executor seam
+        # (DESIGN.md §2.8): one HostRoundsExecutor bound to this workload,
+        # each range a ``run_range`` call with the carried incumbents as the
+        # seed state. The executor handles the global-coordinate mapping and
+        # keeps seed-unbeaten starts at their incoming value (-1 here).
+        plan = make_plan(
+            length=length, window=window, variant=variant, batch=batch,
+            band_width=band_width, chunk=chunk, backend=backend,
+            rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
+            quarantine=quarantine, allowed_variants=MULTI_VARIANTS,
+        )
+        executor = HostRoundsExecutor(ref, queries)
 
         def runner(shard_id, lo, hi, ub_now):
-            # A range is searched as the offline driver over its slice:
-            # windows [lo, hi) live in ref[lo : hi + length - 1], and the
-            # carried incumbents ride in as warm ``ub_init`` seeds.
-            seg = ref[lo : hi + length - 1]
-            res = multi_query_search(
-                seg, queries, length=length, window=window, variant=variant,
-                batch=batch, band_width=band_width, chunk=chunk,
-                backend=backend, rows_per_step=rows_per_step,
-                block_k=block_k, row_block=row_block,
-                ub_init=jnp.asarray(ub_now, queries.dtype),
-                quarantine=quarantine,
+            state = IncumbentState(
+                ub=jnp.asarray(ub_now, queries.dtype),
+                best=jnp.full((nq,), -1, jnp.int64),
             )
-            s = np.asarray(res.best_start, np.int64)
-            s = np.where(s >= 0, s + lo, -1)
-            return s, np.asarray(res.best_dist, np.float64), int(res.quarantined)
+            rr = executor.run_range(plan, state, int(lo), int(hi))
+            return (
+                np.asarray(rr.state.best, np.int64),
+                np.asarray(rr.state.ub, np.float64),
+                int(rr.quarantined),
+            )
 
     work = deque(
         (lo, hi, i % n_shards, 0) for i, (lo, hi) in
@@ -226,11 +234,7 @@ def resilient_search(
 
     def _fold(starts, dists):
         nonlocal ub, best
-        s = np.asarray(starts, np.int64)
-        d = np.asarray(dists, np.float64)
-        improved = np.logical_and(s >= 0, d < ub)
-        ub = np.where(improved, d, ub)
-        best = np.where(improved, s, best)
+        ub, best = fold_np(ub, best, starts, dists)
 
     def _reassign(lo, hi, off_shard):
         nonlocal reassignments

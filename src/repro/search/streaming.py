@@ -3,15 +3,17 @@
 The offline drivers (``subsequence_search`` / ``multi_query_search``) see the
 whole reference at once. A stream delivers it in chunks, and recomputing the
 O(N) stats + cascade per chunk throws away everything the previous chunks
-taught us. This module is the incremental core the serving front-end
-(``serve/stream.py``) drives, one jitted dispatch per ingest:
+taught us. This module is the incremental *frontend* the serving layer
+(``serve/stream.py``) drives: it owns the buffering — the carried
+``length - 1`` boundary tail, the fixed-shape padding, the stream-coordinate
+offsets — and hands each ingest's context to the shared pipeline stage
+program (``search.pipeline.run_stream_ingest``: prepare → cascade →
+carried-incumbent host rounds), one jitted dispatch per ingest:
 
-  * **Boundary-local window stats** — one ``znorm.window_stats`` prefix-sum
-    pass over the ``length - 1`` carried tail plus the new chunk yields the
-    mu/sigma table of exactly the windows that become valid with this
-    chunk, in O(chunk) work (the appendable form ``append_window_stats``
-    wraps the same pass for callers that also want the carried tail). The
-    ``length - 1`` windows straddling the tail/chunk boundary are
+  * **Boundary-local window stats** — one prefix-sum pass over the
+    ``length - 1`` carried tail plus the new chunk yields the mu/sigma table
+    of exactly the windows that become valid with this chunk, in O(chunk)
+    work. The ``length - 1`` windows straddling the tail/chunk boundary are
     first-class: they appear in the ingest in which their last sample
     arrives, so no chunking of the stream can hide a window.
 
@@ -58,17 +60,15 @@ import jax.numpy as jnp
 from repro.core import guards
 from repro.core.backend import resolve_backend
 from repro.core.batch import ea_pruned_dtw_multi_batch
-from repro.core.common import BIG, DEAD_LANE_UB
 from repro.core.lower_bounds import cascade_keogh_cumulative
-from repro.search.cascade import cascade_lower_bounds
-from repro.search.multi import MULTI_VARIANTS, _round_slicers
-from repro.search.znorm import (
-    gather_norm_windows,
-    sanitize_series,
-    window_finite_mask,
-    window_stats,
-    znorm,
+from repro.search.incumbents import IncumbentState, fold_min, initial_state
+from repro.search.pipeline import (
+    MULTI_VARIANTS,
+    PreparedQueries,
+    SearchPlan,
+    run_stream_ingest,
 )
+from repro.search.znorm import znorm
 
 
 class IngestResult(NamedTuple):
@@ -81,166 +81,23 @@ class IngestResult(NamedTuple):
     quarantined: jax.Array  # newly-valid windows excluded by the quarantine
 
 
-def _ingest_core(
-    ctx,
-    valid,
-    queries_n,
-    u,
-    low,
-    ub0,
-    best0,
-    offset0,
-    *,
-    length,
-    window,
-    variant,
-    batch,
-    band_width,
-    chunk_lb,
-    quarantine,
-    knobs,
-):
-    """Shared cascade + carried-ub round loop over the windows of ``ctx``.
-
-    ``valid`` masks which of the ``len(ctx) - length + 1`` window starts
-    really exist — all of them on the raw path; the fixed-shape path masks
-    the tail-buffer garbage prefix and the chunk-buffer padding suffix.
-    Invalid windows get ``+inf`` lower bounds and ride the rounds as dead
-    lanes. ``offset0`` is the stream coordinate of ``ctx[0]`` (may be
-    negative on the fixed-shape path while the tail buffer is not yet
-    full — only invalid starts map below zero).
-
-    With ``quarantine`` (DESIGN.md §2.6), windows overlapping a non-finite
-    sample join the invalid set — same dead-lane machinery, and the count of
-    *newly-valid* windows so excluded is reported. ``ctx`` is zero-filled at
-    the bad samples afterwards so the shared prefix sums stay finite for the
-    surviving windows; the caller's carried tail keeps the *raw* samples, so
-    boundary-straddling windows of the next ingest are condemned too.
-    """
-    assert variant in MULTI_VARIANTS, variant
-    use_lb = variant != "eapruned_nolb"
-    use_cb = variant == "eapruned"
-    nq = queries_n.shape[0]
-
-    k_new = ctx.shape[0] - length + 1
-    assert k_new >= 1, "ingest called with no newly-valid windows"
-
-    if quarantine:
-        finite_ok = window_finite_mask(ctx, length)
-        quarantined = jnp.sum(
-            jnp.logical_and(valid, ~finite_ok)
-        ).astype(jnp.int32)
-        valid = jnp.logical_and(valid, finite_ok)
-        ctx = sanitize_series(ctx)
-    else:
-        quarantined = jnp.asarray(0, jnp.int32)
-
-    mu, sigma = window_stats(ctx, length)
-
-    if use_lb:
-        lbs = jax.vmap(
-            lambda qn: cascade_lower_bounds(
-                ctx, qn, mu, sigma, length, window, chunk=chunk_lb
-            )
-        )(queries_n)                                   # (Q, k_new)
-        lbs = jnp.where(valid[None, :], lbs, jnp.inf)
-        order = jnp.argsort(lbs, axis=1)
-        lb_sorted = jnp.take_along_axis(lbs, order, axis=1)
-    else:
-        order = jnp.broadcast_to(jnp.arange(k_new), (nq, k_new))
-        lb_sorted = jnp.broadcast_to(
-            jnp.where(valid, 0.0, jnp.inf).astype(queries_n.dtype),
-            (nq, k_new),
-        )
-
-    n_rounds = -(-k_new // batch)
-    pad = n_rounds * batch - k_new
-    order_p = jnp.concatenate(
-        [order, jnp.zeros((nq, pad), order.dtype)], axis=1
-    )
-    lb_p = jnp.concatenate(
-        [lb_sorted, jnp.full((nq, pad), jnp.inf, lb_sorted.dtype)], axis=1
-    )
-
-    # The carried incumbent gates round 0 exactly like a warm ``ub_init`` in
-    # the offline driver: a query whose best new lower bound cannot beat its
-    # incumbent skips this ingest entirely.
-    active0 = jnp.ones((nq,), bool)
-    if use_lb:
-        active0 = lb_p[:, 0] < ub0
-
-    slice_round, peek_lb = _round_slicers(batch)
-
-    class St(NamedTuple):
-        r: jax.Array        # (Q,) per-query round pointer
-        ub: jax.Array       # (Q,) carried incumbents
-        best: jax.Array     # (Q,) stream-coordinate best starts
-        active: jax.Array   # (Q,)
-        lanes: jax.Array    # (Q,)
-
-    def cond(st: St) -> jax.Array:
-        return jnp.any(st.active)
-
-    def body(st: St) -> St:
-        starts = slice_round(order_p, st.r)            # (Q, batch) local
-        lbs_b = slice_round(lb_p, st.r)
-        cand = jax.vmap(
-            lambda s: gather_norm_windows(ctx, s, length, mu, sigma)
-        )(starts)
-        cb = None
-        if use_cb:
-            cb = jax.vmap(cascade_keogh_cumulative)(cand, u, low)
-        lane_live = jnp.logical_and(st.active[:, None], lbs_b < st.ub[:, None])
-        ub_lanes = jnp.where(
-            lane_live,
-            jnp.broadcast_to(st.ub[:, None], (nq, batch)),
-            DEAD_LANE_UB,
-        )
-        d = ea_pruned_dtw_multi_batch(
-            queries_n, cand, ub_lanes, window=window,
-            band_width=band_width, cb=cb, **knobs,
-        )
-        d = jnp.where(jnp.isfinite(lbs_b), d, jnp.inf)  # padding lanes
-        d = jnp.where(st.active[:, None], d, jnp.inf)
-        k = jnp.argmin(d, axis=1)
-        dmin = jnp.take_along_axis(d, k[:, None], axis=1)[:, 0]
-        improved = dmin < st.ub
-        ub_new = jnp.where(improved, dmin, st.ub)
-        starts_k = jnp.take_along_axis(starts, k[:, None], axis=1)[:, 0]
-        best_new = jnp.where(
-            improved, offset0 + starts_k.astype(st.best.dtype), st.best
-        )
-        r_new = st.r + st.active.astype(st.r.dtype)
-        more = r_new < n_rounds
-        if use_lb:
-            nxt = peek_lb(lb_p, jnp.minimum(r_new, n_rounds - 1))
-            more = jnp.logical_and(more, nxt < ub_new)
-        return St(
-            r=r_new,
-            ub=ub_new,
-            best=best_new,
-            active=jnp.logical_and(st.active, more),
-            lanes=st.lanes + st.active.astype(st.lanes.dtype) * batch,
-        )
-
-    st0 = St(
-        r=jnp.zeros((nq,), jnp.int32),
-        ub=ub0,
-        best=best0,
-        active=active0,
-        lanes=jnp.zeros((nq,), jnp.int32),
-    )
-    st = jax.lax.while_loop(cond, body, st0)
-    return IngestResult(
-        ub=st.ub, best=st.best, rounds=st.r, lanes=st.lanes,
-        quarantined=quarantined,
-    )
-
-
 _INGEST_STATICS = (
     "length", "window", "variant", "batch", "band_width", "chunk_lb",
     "backend", "rows_per_step", "block_k", "row_block", "quarantine",
 )
+
+
+def _ingest_plan(
+    length, window, variant, batch, band_width, chunk_lb, backend,
+    rows_per_step, block_k, row_block, quarantine,
+) -> SearchPlan:
+    """Static ingest knobs → the pipeline plan (backend already concrete)."""
+    return SearchPlan(
+        length=length, window=window, variant=variant, batch=batch,
+        band_width=band_width, chunk=chunk_lb, backend=backend,
+        rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
+        rounds="host", quarantine=quarantine, warm_start=0,
+    )
 
 
 @partial(jax.jit, static_argnames=_INGEST_STATICS)
@@ -274,21 +131,23 @@ def _ingest_impl(
     ragged final chunk costs a fresh compile; see ``pad_to`` on
     ``ingest_chunk`` for the fixed-shape form that never retraces.
     """
-    knobs = dict(
-        rows_per_step=rows_per_step, backend=backend, block_k=block_k,
-        row_block=row_block,
+    plan = _ingest_plan(
+        length, window, variant, batch, band_width, chunk_lb, backend,
+        rows_per_step, block_k, row_block, quarantine,
     )
     ctx = jnp.concatenate([tail, chunk])
     keep = min(ctx.shape[0], length - 1)
     new_tail = ctx[ctx.shape[0] - keep :]
     k_new = ctx.shape[0] - length + 1
-    res = _ingest_core(
-        ctx, jnp.ones((k_new,), bool), queries_n, u, low, ub0, best0, offset,
-        length=length, window=window, variant=variant, batch=batch,
-        band_width=band_width, chunk_lb=chunk_lb, quarantine=quarantine,
-        knobs=knobs,
+    state, stats, n_quar = run_stream_ingest(
+        plan, ctx, jnp.ones((k_new,), bool),
+        PreparedQueries(qn=queries_n, u=u, low=low),
+        IncumbentState(ub=ub0, best=best0), offset,
     )
-    return new_tail, res
+    return new_tail, IngestResult(
+        ub=state.ub, best=state.best, rounds=stats.rounds, lanes=stats.lanes,
+        quarantined=n_quar,
+    )
 
 
 @partial(jax.jit, static_argnames=_INGEST_STATICS)
@@ -326,9 +185,9 @@ def _ingest_impl_padded(
     chunk sizes (start-up, steady state, ragged final chunk) reuse one
     compiled program. Windows touching buffer padding are masked invalid.
     """
-    knobs = dict(
-        rows_per_step=rows_per_step, backend=backend, block_k=block_k,
-        row_block=row_block,
+    plan = _ingest_plan(
+        length, window, variant, batch, band_width, chunk_lb, backend,
+        rows_per_step, block_k, row_block, quarantine,
     )
     ctx = jnp.concatenate([tail_buf, chunk_buf])
     k_buf = ctx.shape[0] - length + 1
@@ -337,11 +196,13 @@ def _ingest_impl_padded(
     valid = jnp.logical_and(
         starts >= lo, starts + length <= (length - 1) + chunk_len
     )
-    return _ingest_core(
-        ctx, valid, queries_n, u, low, ub0, best0, offset0,
-        length=length, window=window, variant=variant, batch=batch,
-        band_width=band_width, chunk_lb=chunk_lb, quarantine=quarantine,
-        knobs=knobs,
+    state, stats, n_quar = run_stream_ingest(
+        plan, ctx, valid, PreparedQueries(qn=queries_n, u=u, low=low),
+        IncumbentState(ub=ub0, best=best0), offset0,
+    )
+    return IngestResult(
+        ub=state.ub, best=state.best, rounds=stats.rounds, lanes=stats.lanes,
+        quarantined=n_quar,
     )
 
 
@@ -488,12 +349,11 @@ def _rescore_impl(
         cb=cb, rows_per_step=rows_per_step, backend=backend,
         block_k=block_k, row_block=row_block,
     )
-    kmin = jnp.argmin(d, axis=1)
-    dmin = jnp.take_along_axis(d, kmin[:, None], axis=1)[:, 0]
-    improved = dmin < ub0
-    ub = jnp.where(improved, dmin, ub0)
-    best = jnp.where(improved, starts[kmin].astype(best0.dtype), best0)
-    return ub, best
+    state, _ = fold_min(
+        IncumbentState(ub=ub0, best=best0),
+        jnp.broadcast_to(starts[None], (nq, k)), d,
+    )
+    return state.ub, state.best
 
 
 def rescore_windows(
@@ -525,8 +385,8 @@ def rescore_windows(
     ingest rounds use — the carried incumbents seed the abandon threshold,
     so an already-good incumbent makes re-admitted windows cheap.
 
-    Returns the updated ``(ub, best)``; strict improvement only, like every
-    other incumbent fold.
+    Returns the updated ``(ub, best)``; strict improvement only
+    (``incumbents.fold_min``), like every other incumbent fold.
     """
     guards.ensure_series(windows, "windows", ndim=2)
     if variant not in MULTI_VARIANTS:
@@ -548,10 +408,9 @@ def initial_incumbents(
     """Fresh ``(ub, best)`` incumbent vectors for Q standing queries.
 
     ``ub_init`` optionally seeds the incumbents (scalar or ``(Q,)``) — the
-    cross-stream analogue of ``multi_query_search``'s warm seeds.
+    cross-stream analogue of ``multi_query_search``'s warm seeds. Tuple form
+    of ``incumbents.initial_state`` (kept for serving/checkpoint callers
+    that thread ``ub``/``best`` as separate arrays).
     """
-    if ub_init is None:
-        ub = jnp.full((nq,), BIG, dtype)
-    else:
-        ub = jnp.broadcast_to(jnp.asarray(ub_init, dtype), (nq,))
-    return ub, jnp.full((nq,), -1, jnp.int32)
+    state = initial_state(nq, dtype, ub_init)
+    return state.ub, state.best

@@ -11,14 +11,20 @@ Four variants, mirroring the paper's four suites (§5):
   ``eapruned``       — UCR-MON:  LB cascade + EAPrunedDTW + cb tightening
   ``eapruned_nolb``  — UCR-MON-nolb: EAPrunedDTW only, natural order
 
-The search is one jitted program: cascade → best-first batches inside a
-``lax.while_loop`` that stops when the next batch's smallest lower bound can
-no longer beat the incumbent (``ub``). Batches share ``ub`` (DESIGN.md §2.4).
+This module is a *frontend* of ``search.pipeline`` (DESIGN.md §2.8): the
+wrapper validates inputs, resolves the knobs into a ``SearchPlan``, and runs
+the shared prepare → cascade → execute program. The EA variants run as the
+Q=1 case of the multi-query core (``pipeline._offline_search_impl``) — one
+lane set, one incumbent, the same host-rounds / persistent-sweep executors
+``multi_query_search`` uses. The ``full``/``pruned`` paper baselines and
+multivariate queries run the pipeline's dedicated single-query core
+(``pipeline._baseline_search_impl``): their kernels take a scalar abandon
+threshold and no ``(Q, K)`` lane form exists.
 
 Round drivers (``rounds=``, DESIGN.md §2.5): the default ``"host"`` driver
-loops best-first batches around the batch primitive as above — one dispatch
-and one incumbent update per round, every lane of a round abandoning against
-the round-entry ``ub``. ``rounds="persistent"`` collapses the sweep into a
+loops best-first batches around the batch primitive — one dispatch and one
+incumbent update per round, every lane of a round abandoning against the
+round-entry ``ub``. ``rounds="persistent"`` collapses the sweep into a
 *single* dispatch: all candidate windows are gathered/normalized once in
 best-first order and handed to ``core.batch.ea_pruned_dtw_persistent``,
 which carries the incumbent across ``block_k``-lane candidate blocks inside
@@ -33,68 +39,41 @@ can resolve to the other cominimizer's start, and on the Pallas backend the
 in-kernel ``cb`` prologue suffix-sums in tree order while host rounds use a
 sequential cumsum — abandon thresholds can differ by an ulp, which only
 matters for that same measure-zero tie case (the winner's survival, §2.2 of
-DESIGN.md, is independent of ``cb`` rounding). O(1)
-dispatches instead of O(rounds); ``ub`` tightens every ``block_k`` lanes
-instead of every ``batch``. The trade: the
-full window matrix is materialized up front (O(N·l) memory traffic), where
-the host driver gathers only the rounds it visits — prefer ``"host"`` when
-memory is tight or the LB ordering routinely stops after a round or two.
-The ``full``/``pruned`` baselines run the same block-granular sweep as a
-jitted loop (their per-lane kernels ignore per-lane thresholds). Persistent
-mode is counter-free; combine with ``with_info`` is rejected.
+DESIGN.md, is independent of ``cb`` rounding). O(1) dispatches instead of
+O(rounds); ``ub`` tightens every ``block_k`` lanes instead of every
+``batch``. The trade: the full window matrix is materialized up front
+(O(N·l) memory traffic), where the host driver gathers only the rounds it
+visits — prefer ``"host"`` when memory is tight or the LB ordering
+routinely stops after a round or two. Persistent mode is counter-free;
+combine with ``with_info`` is rejected.
 
 Rounds come in two flavours. The default is the *counter-free fast round*:
 distances only, no pruning bookkeeping — the hot path pays nothing for stats
 it isn't asked for. ``with_info=True`` switches every round to the *stats
 round*, which also accumulates the paper's rows/cells pruning counters into
 ``SearchResult`` (counter fields are ``-1`` when not collected). The
-EAPrunedDTW batches are routed through ``core.batch.ea_pruned_dtw_batch``,
-so ``backend=`` (pallas kernel vs banded-vmap JAX) and the tuning knobs
-(``rows_per_step``, ``block_k``, ``row_block``, ``band_width``) thread all
-the way down; defaults for the paper workload live in
-``configs/dtw_search.py``. The backend (and ``$REPRO_DTW_BACKEND``) is
-resolved in the un-jitted wrapper on every call, so it is always a concrete
-static argument of the jitted program.
-
-Per-lane ``ub`` semantics: the batch primitive underneath accepts one upper
-bound *per lane*, not one per batch. This single-query driver always passes
-the scalar incumbent (every lane of a round shares it — the PR-1
-behaviour), but the semantics it relies on are per-lane: each lane abandons
-against its own threshold and a negative threshold kills a lane on row 0.
-``search/multi.py`` exploits exactly that to flatten Q queries' rounds into
-one ``(Q × batch)`` lane set per dispatch — see its docstring for the
-(query × candidate) lane layout.
+backend (and ``$REPRO_DTW_BACKEND``) is resolved in the un-jitted wrapper
+on every call, so it is always a concrete static argument of the jitted
+program; defaults for the paper workload live in ``configs/dtw_search.py``.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import guards
-from repro.core.backend import resolve_backend
-from repro.core.batch import (
-    block_sweep,
-    ea_pruned_dtw_batch,
-    ea_pruned_dtw_persistent,
-)
-from repro.core.common import BIG, DEAD_LANE_UB, pad_lanes_to_blocks
-from repro.core.dtw import dtw
-from repro.core.lower_bounds import cascade_keogh_cumulative, envelope
-from repro.core.pruned_dtw import pruned_dtw
-from repro.search.cascade import cascade_lower_bounds
-from repro.search.znorm import (
-    gather_norm_windows,
-    sanitize_series,
-    window_finite_mask,
-    window_stats,
-    znorm,
+from repro.search.pipeline import (
+    MULTI_VARIANTS,
+    ROUND_DRIVERS,
+    VARIANTS,
+    _baseline_search_impl,
+    _offline_search_impl,
+    make_plan,
 )
 
-VARIANTS = ("full", "pruned", "eapruned", "eapruned_nolb")
-ROUND_DRIVERS = ("host", "persistent")
+__all__ = ["ROUND_DRIVERS", "VARIANTS", "SearchResult", "subsequence_search"]
 
 
 class SearchResult(NamedTuple):
@@ -106,258 +85,6 @@ class SearchResult(NamedTuple):
     rows: jax.Array         # DTW rows issued across all lanes (-1: fast round)
     cells: jax.Array        # admissible DTW cells across all lanes (-1: fast)
     quarantined: jax.Array  # windows excluded by the non-finite quarantine
-
-
-def _batch_distances(
-    variant, query_n, cand, ub, window, band_width, cb, knobs
-):
-    """Counter-free fast round: distances only, no pruning bookkeeping."""
-    if variant == "eapruned" or variant == "eapruned_nolb":
-        return ea_pruned_dtw_batch(
-            query_n, cand, ub, window=window, band_width=band_width, cb=cb,
-            **knobs,
-        )
-    if variant == "pruned":
-        fn = lambda c: pruned_dtw(query_n, c, ub, window=window)
-        return jax.vmap(fn)(cand)
-    if variant == "full":
-        fn = lambda c: dtw(query_n, c, window=window)
-        return jax.vmap(fn)(cand)
-    raise ValueError(f"unknown variant {variant!r}")
-
-
-def _batch_stats(variant, query_n, cand, ub, window, band_width, cb, knobs):
-    """Stats round: distances + (rows, cells) pruning counters."""
-    if variant in ("eapruned", "eapruned_nolb"):
-        d, info = ea_pruned_dtw_batch(
-            query_n, cand, ub, window=window, band_width=band_width, cb=cb,
-            with_info=True, **knobs,
-        )
-        return d, jnp.sum(info.rows), jnp.sum(info.cells)
-    if variant == "pruned":
-        d, info = jax.vmap(
-            lambda c: pruned_dtw(query_n, c, ub, window=window, with_info=True)
-        )(cand)
-        return d, jnp.sum(info.rows), jnp.sum(info.cells)
-    d = _batch_distances(variant, query_n, cand, ub, window, band_width, cb, knobs)
-    m = query_n.shape[-1]
-    k = cand.shape[0]
-    # full DTW issues every in-window cell
-    win_cells = m * (2 * window + 1) - window * (window + 1)
-    return d, jnp.asarray(k * m), jnp.asarray(k * min(win_cells, m * m))
-
-
-@partial(
-    jax.jit,
-    static_argnames=(
-        "length", "window", "variant", "batch", "band_width", "chunk",
-        "with_info", "backend", "rows_per_step", "block_k", "row_block",
-        "rounds", "quarantine",
-    ),
-)
-def _subsequence_search_impl(
-    ref: jax.Array,
-    query: jax.Array,
-    length: int,
-    window: int,
-    variant: str = "eapruned",
-    batch: int = 64,
-    band_width: int | None = None,
-    chunk: int = 4096,
-    with_info: bool = False,
-    backend: str | None = None,
-    rows_per_step: int = 1,
-    block_k: int = 8,
-    row_block: int = 128,
-    rounds: str = "host",
-    quarantine: bool = True,
-) -> SearchResult:
-    """Locate the closest z-normalized window of ``ref`` to ``query``.
-
-    Args:
-      ref: ``(N,)`` long reference series.
-      query: ``(l,)`` raw query (z-normalized internally); ``l == length``.
-      length: window/query length (static).
-      window: Sakoe-Chiba warping window in samples (static).
-      variant: one of ``VARIANTS``.
-      batch: candidates per shared-ub round (static; host driver only).
-      with_info: collect rows/cells pruning counters (stats rounds). The
-        default fast rounds leave ``SearchResult.rows``/``.cells`` at ``-1``.
-      backend: DTW batch backend (see ``core.backend``); ``None`` = auto.
-      rows_per_step: JAX-backend while_loop rows per iteration.
-      block_k, row_block: Pallas-backend grid tiling.
-      rounds: ``"host"`` (best-first rounds around the batch primitive) or
-        ``"persistent"`` (whole sweep in one dispatch with a block-granular
-        carried incumbent — see module docstring).
-      quarantine: exclude windows overlapping non-finite reference samples
-        (DESIGN.md §2.6); they ride the rounds as dead lanes and are counted
-        in ``SearchResult.quarantined``. ``False`` skips the prepass (the
-        caller then guarantees a finite reference).
-    """
-    assert variant in VARIANTS, variant
-    assert rounds in ROUND_DRIVERS, rounds
-    knobs = dict(
-        rows_per_step=rows_per_step, backend=backend, block_k=block_k,
-        row_block=row_block,
-    )
-    ref = jnp.asarray(ref)
-    query_n = znorm(jnp.asarray(query)[:length])
-    n_win = ref.shape[0] - length + 1
-    use_lb = variant != "eapruned_nolb"
-    use_cb = variant == "eapruned"
-
-    if quarantine:
-        finite_ok = window_finite_mask(ref, length)
-        n_quar = jnp.sum(~finite_ok).astype(jnp.int32)
-        ref = sanitize_series(ref)
-    else:
-        finite_ok = None
-        n_quar = jnp.asarray(0, jnp.int32)
-
-    mu, sigma = window_stats(ref, length)
-    if use_lb:
-        lbs = cascade_lower_bounds(
-            ref, query_n, mu, sigma, length, window, chunk=chunk
-        )
-        if quarantine:
-            # Quarantined windows get +inf lower bounds: the argsort pushes
-            # them behind every live candidate, the cascade stop never
-            # reaches them, and any that ride in a partially-live round are
-            # dead lanes (the same machinery as round padding).
-            lbs = jnp.where(finite_ok, lbs, jnp.inf)
-        order = jnp.argsort(lbs)
-        lb_sorted = lbs[order]
-    elif quarantine:
-        # No-cascade variant: natural scan order among surviving windows
-        # (stable argsort of the 0/+inf mask), poisoned windows at the back.
-        lbs = jnp.where(finite_ok, 0.0, jnp.inf).astype(query_n.dtype)
-        order = jnp.argsort(lbs)
-        lb_sorted = lbs[order]
-    else:
-        order = jnp.arange(n_win)
-        lb_sorted = jnp.zeros((n_win,), query_n.dtype)
-
-    u, low = envelope(query_n, window)
-
-    if rounds == "persistent":
-        assert not with_info, "persistent mode is counter-free"
-        # One gather of the whole best-first order; the sweep itself is a
-        # single dispatch with the incumbent carried across block_k-lane
-        # candidate blocks (core.batch.ea_pruned_dtw_persistent).
-        lb_p, order_p, _ = pad_lanes_to_blocks(block_k, lb_sorted, order)
-        cand_all = gather_norm_windows(ref, order_p, length, mu, sigma)
-        if variant in ("eapruned", "eapruned_nolb"):
-            envs = (u[None], low[None]) if use_cb else None
-            bd, bs, blocks = ea_pruned_dtw_persistent(
-                query_n[None], cand_all[None], lb_p[None], order_p[None],
-                jnp.full((1,), BIG, query_n.dtype), window=window,
-                band_width=band_width, envelopes=envs, **knobs,
-            )
-            best, ub, blocks = bs[0], bd[0], blocks[0]
-        else:
-            # full / pruned baselines: the shared block-granular sweep as a
-            # jitted loop (their per-lane kernels take no per-lane
-            # threshold, so there is no single-launch kernel form to hand
-            # off to; lane masking rides on the lb padding inside the sweep)
-            ub, best, blocks = block_sweep(
-                cand_all, lb_p, order_p, jnp.asarray(BIG, query_n.dtype),
-                block_k,
-                lambda c, lbb, ub_cur: _batch_distances(
-                    variant, query_n, c, ub_cur, window, band_width, None,
-                    knobs,
-                ),
-            )
-        # visited blocks are a best-first prefix, so only the final padded
-        # block can hold non-candidates — clamp to the real window count
-        lanes = jnp.minimum(blocks * block_k, n_win).astype(jnp.int32)
-        no_info = jnp.asarray(-1)
-        return SearchResult(
-            best_start=best,
-            best_dist=ub,
-            rounds=jnp.asarray(1),  # dispatches: one launch per search
-            lanes=lanes,
-            lb_pruned=jnp.asarray(n_win) - lanes,
-            rows=no_info,
-            cells=no_info,
-            quarantined=n_quar,
-        )
-
-    n_rounds = -(-n_win // batch)
-    pad = n_rounds * batch - n_win
-    order_p = jnp.concatenate([order, jnp.zeros((pad,), order.dtype)])
-    lb_p = jnp.concatenate([lb_sorted, jnp.full((pad,), jnp.inf, lb_sorted.dtype)])
-
-    class St(NamedTuple):
-        r: jax.Array
-        ub: jax.Array
-        best: jax.Array
-        lanes: jax.Array
-        rows: jax.Array
-        cells: jax.Array
-
-    def cond(st: St) -> jax.Array:
-        more = st.r < n_rounds
-        if not use_lb:
-            return more
-        next_lb = jax.lax.dynamic_slice(lb_p, (st.r * batch,), (1,))[0]
-        return jnp.logical_and(more, next_lb < st.ub)
-
-    def body(st: St) -> St:
-        starts = jax.lax.dynamic_slice(order_p, (st.r * batch,), (batch,))
-        lbs = jax.lax.dynamic_slice(lb_p, (st.r * batch,), (batch,))
-        cand = gather_norm_windows(ref, starts, length, mu, sigma)
-        cb = None
-        if use_cb:
-            cb = cascade_keogh_cumulative(cand, u, low)
-        if variant in ("eapruned", "eapruned_nolb"):
-            # Per-lane ub: quarantined and round-padding lanes (both marked
-            # by +inf lower bounds) ride as dead lanes — the kernel abandons
-            # them on row 0 instead of running a DP over masked garbage.
-            ub_b = jnp.where(jnp.isfinite(lbs), st.ub, DEAD_LANE_UB)
-        else:
-            ub_b = st.ub  # full/pruned kernels take a scalar threshold
-        if with_info:
-            d, rows, cells = _batch_stats(
-                variant, query_n, cand, ub_b, window, band_width, cb, knobs
-            )
-        else:
-            d = _batch_distances(
-                variant, query_n, cand, ub_b, window, band_width, cb, knobs
-            )
-            rows = cells = jnp.asarray(0)
-        d = jnp.where(jnp.isfinite(lbs), d, jnp.inf)  # padding lanes
-        k = jnp.argmin(d)
-        dmin = d[k]
-        improved = dmin < st.ub
-        return St(
-            r=st.r + 1,
-            ub=jnp.where(improved, dmin, st.ub),
-            best=jnp.where(improved, starts[k], st.best),
-            lanes=st.lanes + batch,
-            rows=st.rows + rows,
-            cells=st.cells + cells,
-        )
-
-    st0 = St(
-        r=jnp.asarray(0),
-        ub=jnp.asarray(BIG, query_n.dtype),
-        best=jnp.asarray(-1, order.dtype),
-        lanes=jnp.asarray(0),
-        rows=jnp.asarray(0),
-        cells=jnp.asarray(0),
-    )
-    st = jax.lax.while_loop(cond, body, st0)
-    no_info = jnp.asarray(-1)
-    return SearchResult(
-        best_start=st.best,
-        best_dist=st.ub,
-        rounds=st.r,
-        lanes=st.lanes,
-        lb_pruned=jnp.asarray(n_win) - jnp.minimum(st.lanes, n_win),
-        rows=st.rows if with_info else no_info,
-        cells=st.cells if with_info else no_info,
-        quarantined=n_quar,
-    )
 
 
 def subsequence_search(
@@ -380,9 +107,8 @@ def subsequence_search(
     """Locate the closest z-normalized window of ``ref`` to ``query``.
 
     Un-jitted entry point: resolves ``backend`` (including the
-    ``$REPRO_DTW_BACKEND`` env var, re-read every call) to a concrete name
-    that becomes a static argument of the jitted search — see
-    ``_subsequence_search_impl`` for the argument reference.
+    ``$REPRO_DTW_BACKEND`` env var, re-read every call) into the
+    ``SearchPlan`` that becomes a static argument of the jitted pipeline.
     ``rounds="persistent"`` runs the whole best-first sweep in one dispatch
     (module docstring); it is counter-free, so ``with_info`` is rejected.
     Input validation (``core.guards``): shapes/dtypes and knob sanity raise
@@ -391,6 +117,26 @@ def subsequence_search(
     instead — their windows are excluded, counted in
     ``SearchResult.quarantined``, and the search over the remaining windows
     stays exact).
+
+    Args:
+      ref: ``(N,)`` long reference series.
+      query: ``(l,)`` raw query (z-normalized internally); ``l == length``.
+      length: window/query length (static).
+      window: Sakoe-Chiba warping window in samples (static).
+      variant: one of ``VARIANTS``.
+      batch: candidates per shared-ub round (static; host driver only).
+      with_info: collect rows/cells pruning counters (stats rounds). The
+        default fast rounds leave ``SearchResult.rows``/``.cells`` at ``-1``.
+      backend: DTW batch backend (see ``core.backend``); ``None`` = auto.
+      rows_per_step: JAX-backend while_loop rows per iteration.
+      block_k, row_block: Pallas-backend grid tiling.
+      rounds: ``"host"`` (best-first rounds around the batch primitive) or
+        ``"persistent"`` (whole sweep in one dispatch with a block-granular
+        carried incumbent — see module docstring).
+      quarantine: exclude windows overlapping non-finite reference samples
+        (DESIGN.md §2.6); they ride the rounds as dead lanes and are counted
+        in ``SearchResult.quarantined``. ``False`` skips the prepass (the
+        caller then guarantees a finite reference).
     """
     if rounds not in ROUND_DRIVERS:
         raise ValueError(f"rounds {rounds!r} not in {ROUND_DRIVERS}")
@@ -400,7 +146,8 @@ def subsequence_search(
             "with_info stats rounds"
         )
     guards.ensure_series(ref, "ref", ndim=1, min_len=length)
-    if jnp.ndim(query) == 1:
+    univariate = jnp.ndim(query) == 1
+    if univariate:
         guards.ensure_series(query, "query", ndim=1, min_len=length)
     else:
         guards.ensure_series(query, "query", ndim=2)  # (l, dims) multivariate
@@ -409,14 +156,30 @@ def subsequence_search(
                 f"query length {jnp.shape(query)[0]} < length {length}"
             )
     guards.ensure_finite(query, "query")
-    guards.ensure_knobs(
-        length=length, window=window, batch=batch, band_width=band_width,
-        block_k=block_k, row_block=row_block, rows_per_step=rows_per_step,
+    plan = make_plan(
+        length=length, window=window, variant=variant, batch=batch,
+        band_width=band_width, chunk=chunk, backend=backend,
+        rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
+        rounds=rounds, quarantine=quarantine, with_info=with_info,
     )
-    return _subsequence_search_impl(
-        ref, query, length=length, window=window, variant=variant,
-        batch=batch, band_width=band_width, chunk=chunk, with_info=with_info,
-        backend=resolve_backend(backend), rows_per_step=rows_per_step,
-        block_k=block_k, row_block=row_block, rounds=rounds,
-        quarantine=quarantine,
+    if univariate and variant in MULTI_VARIANTS:
+        # Q=1 of the multi-query pipeline core: same executors, one lane set.
+        state, stats, n_quar = _offline_search_impl(
+            ref, jnp.asarray(query)[None, :], None, plan, with_info
+        )
+    else:
+        # full/pruned baselines and multivariate queries: the pipeline's
+        # dedicated single-query core (scalar-threshold kernels).
+        state, stats, n_quar = _baseline_search_impl(
+            ref, query, plan, with_info
+        )
+    return SearchResult(
+        best_start=state.best[0],
+        best_dist=state.ub[0],
+        rounds=stats.rounds[0],
+        lanes=stats.lanes[0],
+        lb_pruned=stats.lb_pruned[0],
+        rows=stats.rows[0],
+        cells=stats.cells[0],
+        quarantined=n_quar,
     )

@@ -53,7 +53,8 @@ import jax.numpy as jnp
 
 from repro.core import guards
 from repro.core.lower_bounds import envelope
-from repro.search.multi import MULTI_VARIANTS
+from repro.search.incumbents import QuarantineLedger
+from repro.search.pipeline import MULTI_VARIANTS
 from repro.search.streaming import (
     ingest_chunk,
     initial_incumbents,
@@ -203,9 +204,9 @@ class StreamSearchEngine:
         self._lanes = jnp.asarray(0, jnp.int32)
         self.quarantine = bool(quarantine)
         self.debug_checks = guards.debug_checks_enabled(debug_checks)
-        self._quarantined = jnp.asarray(0, jnp.int32)
-        self._bad_samples = jnp.asarray(0, jnp.int32)
-        self._readmitted = 0
+        # One source of truth for the §2.6 counters — shared semantics with
+        # IngestResult accounting (search.incumbents.QuarantineLedger).
+        self._ledger = QuarantineLedger()
         self._pending_rescore: list[tuple[np.ndarray, np.ndarray]] = []
         self._ring = (
             _Ring(ring_capacity, np.dtype(self._dtype))
@@ -241,17 +242,17 @@ class StreamSearchEngine:
     @property
     def quarantined_windows(self) -> int:
         """Windows excluded from search by the non-finite quarantine."""
-        return int(self._quarantined)
+        return int(self._ledger.windows)
 
     @property
     def quarantined_samples(self) -> int:
         """Non-finite raw samples seen on the stream so far."""
-        return int(self._bad_samples)
+        return int(self._ledger.samples)
 
     @property
     def readmitted_windows(self) -> int:
         """Quarantined windows re-admitted (rescored) after ``correct``."""
-        return self._readmitted
+        return self._ledger.readmitted
 
     @property
     def pending_rescore(self) -> int:
@@ -361,7 +362,7 @@ class StreamSearchEngine:
             if self._ring is not None and p >= ring_base:
                 self._ring.patch(p - ring_base, values[i])
         self._tail = jnp.asarray(tail_np, self._dtype)
-        self._bad_samples = self._bad_samples - jnp.asarray(k, jnp.int32)
+        self._ledger.correct_samples(k)
 
         # Fully-past windows revived by this patch: starts overlapping the
         # corrected region whose whole [s, s + length) is retained in the
@@ -400,9 +401,7 @@ class StreamSearchEngine:
             rows_per_step=self.rows_per_step, block_k=self.block_k,
             row_block=self.row_block,
         )
-        n = int(starts.shape[0])
-        self._quarantined = self._quarantined - jnp.asarray(n, jnp.int32)
-        self._readmitted += n
+        self._ledger.readmit(int(starts.shape[0]))
 
     # -- checkpoint -------------------------------------------------------
     def save_state(self) -> dict:
@@ -426,10 +425,8 @@ class StreamSearchEngine:
             "n_chunks": np.asarray(self._n_chunks, np.int64),
             "rounds": np.asarray(self._rounds, np.int32),
             "lanes": np.asarray(self._lanes, np.int32),
-            "quarantined": np.asarray(self._quarantined, np.int32),
-            "bad_samples": np.asarray(self._bad_samples, np.int32),
-            "readmitted": np.asarray(self._readmitted, np.int64),
         }
+        state.update(self._ledger.state_dict())
         if self._ring is not None:
             state["ring_buf"] = self._ring.buf.copy()
             state["ring_count"] = np.asarray(self._ring.count, np.int64)
@@ -471,11 +468,10 @@ class StreamSearchEngine:
         self._n_chunks = int(state["n_chunks"])
         self._rounds = jnp.asarray(state["rounds"], jnp.int32)
         self._lanes = jnp.asarray(state["lanes"], jnp.int32)
-        self._quarantined = jnp.asarray(state["quarantined"], jnp.int32)
-        self._bad_samples = jnp.asarray(state["bad_samples"], jnp.int32)
-        # Older checkpoints predate re-admission; snapshots never carry a
-        # pending queue (save_state flushes first).
-        self._readmitted = int(state.get("readmitted", 0))
+        # The ledger owns the quarantine keys (including the older-checkpoint
+        # fallback for snapshots that predate re-admission); snapshots never
+        # carry a pending queue (save_state flushes first).
+        self._ledger.load_state_dict(state)
         self._pending_rescore = []
         if self._ring is not None:
             buf = np.asarray(state["ring_buf"])
@@ -505,8 +501,8 @@ class StreamSearchEngine:
             return self.best()
         if self.quarantine:
             # Lazy device accumulation, like the work counters below.
-            self._bad_samples = self._bad_samples + jnp.sum(
-                ~jnp.isfinite(chunk), dtype=jnp.int32
+            self._ledger.note_samples(
+                jnp.sum(~jnp.isfinite(chunk), dtype=jnp.int32)
             )
         if self._ring is not None:
             self._ring.extend(np.asarray(chunk))
@@ -560,6 +556,6 @@ class StreamSearchEngine:
         # arrival with this dispatch.
         self._rounds = self._rounds + jnp.max(res.rounds)
         self._lanes = self._lanes + jnp.sum(res.lanes)
-        self._quarantined = self._quarantined + res.quarantined
+        self._ledger.note_windows(res.quarantined)
         self._n_seen += int(chunk.shape[0])
         self._n_chunks += 1

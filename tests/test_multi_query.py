@@ -188,16 +188,16 @@ def test_warm_start_changes_work_not_results():
 def test_env_var_reread_between_calls(monkeypatch):
     """REPRO_DTW_BACKEND is resolved per call in the un-jitted wrapper: the
     backend reaching the jitted search flips when the env var flips."""
-    import repro.search.subsequence as subseq
+    import repro.search.pipeline as pipeline
 
     seen = []
-    real = subseq.ea_pruned_dtw_batch
+    real = pipeline.ea_pruned_dtw_multi_batch
 
     def recorder(*args, **kwargs):
         seen.append(kwargs.get("backend"))
         return real(*args, **kwargs)
 
-    monkeypatch.setattr(subseq, "ea_pruned_dtw_batch", recorder)
+    monkeypatch.setattr(pipeline, "ea_pruned_dtw_multi_batch", recorder)
     rng = np.random.default_rng(17)
     # unique shape so each backend traces fresh through the recorder
     ref = jnp.asarray(np.cumsum(rng.normal(size=777)))

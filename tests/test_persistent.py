@@ -238,3 +238,36 @@ def test_persistent_tuning_knobs_same_answer():
         np.testing.assert_allclose(
             float(got.best_dist), float(base.best_dist), rtol=1e-5
         )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_persistent_warm_start_folds_into_seed(backend):
+    """``warm_start`` + ``rounds="persistent"`` keeps the prepass result.
+
+    The prepass full-DPs the best-LB candidates per query — with LB-ordered
+    candidates that set usually contains the global winner, so the
+    persistent sweep's seed equals the winner's exact distance and the
+    kernel reports the seed unbeaten (start -1). The driver must fold the
+    prepass-achieved (start, dist) back in rather than dropping it: the
+    regression this pins returned the warm bound with no achieving start.
+    """
+    rng = np.random.default_rng(23)
+    ref = jnp.asarray(np.cumsum(rng.normal(size=900)))
+    queries = jnp.asarray(np.cumsum(rng.normal(size=(4, 96)), axis=1))
+    base = multi_query_search(
+        ref, queries, length=96, window=9, batch=64, backend=backend,
+    )
+    for ws in (8, 64):
+        warm = multi_query_search(
+            ref, queries, length=96, window=9, batch=64, backend=backend,
+            rounds="persistent", warm_start=ws,
+        )
+        assert np.array_equal(
+            np.asarray(base.best_start), np.asarray(warm.best_start)
+        ), ws
+        np.testing.assert_allclose(
+            np.asarray(warm.best_dist, np.float64),
+            np.asarray(base.best_dist, np.float64), rtol=DIST_RTOL,
+        )
+        # the prepass dispatch counts as one extra round
+        assert np.all(np.asarray(warm.rounds) == 2)

@@ -1,0 +1,189 @@
+"""Golden parity: ONE scenario through all five search frontends.
+
+The pipeline refactor's acceptance gate (DESIGN.md §2.8): every frontend —
+``subsequence_search``, ``multi_query_search``, streaming ``ingest_chunk``,
+the ``make_distributed_search`` / ``make_distributed_multi_search`` mesh
+programs, and ``resilient_search`` under injected shard faults — is a thin
+adapter over the same staged program (prepare → cascade → execute → fold),
+so one fixed (series, queries, faults) scenario must come out with
+*identical* per-query ``(best_start, best_dist)`` incumbents and identical
+§2.6 quarantine counts from every one of them, on both the ``jax`` and
+``pallas_interpret`` backends.
+
+The scenario deliberately includes a non-finite sensor burst (so the
+quarantine mask is live, not vacuous) and, for the resilient frontend, a
+flaky range plus a dead shard (so the answer survives retry + reassignment,
+not just the clean path). The seeded ``scripts/check.sh`` pass varies the
+data draw via ``$REPRO_FAULT_SEED``.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from faults import ShardFaultInjector, fault_seed
+from repro.search import (
+    ingest_chunk,
+    initial_incumbents,
+    make_distributed_multi_search,
+    make_distributed_search,
+    multi_query_search,
+    resilient_search,
+    subsequence_search,
+)
+from repro.search.resilient import partition_ranges
+
+BACKENDS = ("jax", "pallas_interpret")
+LENGTH, WINDOW = 96, 9
+N_REF, N_QUERIES = 1100, 3
+DIST_RTOL = 2e-5
+
+
+def _scenario():
+    """The one fixed (series, queries) draw, with a quarantine-live burst."""
+    rng = np.random.default_rng(1234 + fault_seed())
+    ref = np.cumsum(rng.normal(size=N_REF))
+    ref[300:304] = np.nan  # dropout burst -> LENGTH + 3 poisoned windows
+    queries = np.cumsum(rng.normal(size=(N_QUERIES, LENGTH)), axis=1)
+    return jnp.asarray(ref), jnp.asarray(queries)
+
+
+def _golden(backend):
+    """The multi-query host driver is the reference the others must match."""
+    ref, queries = _scenario()
+    res = multi_query_search(
+        ref, queries, length=LENGTH, window=WINDOW, batch=64,
+        backend=backend,
+    )
+    return (
+        np.asarray(res.best_start, np.int64),
+        np.asarray(res.best_dist, np.float64),
+        int(res.quarantined),
+    )
+
+
+def _assert_matches(starts, dists, n_quar, backend):
+    g_starts, g_dists, g_quar = _golden(backend)
+    assert np.array_equal(np.asarray(starts, np.int64), g_starts)
+    np.testing.assert_allclose(
+        np.asarray(dists, np.float64), g_dists, rtol=DIST_RTOL
+    )
+    assert int(n_quar) == g_quar
+
+
+def test_scenario_quarantine_is_live():
+    """Guard the guard: the burst must actually condemn windows."""
+    _, _, g_quar = _golden("jax")
+    assert g_quar == LENGTH + 3
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_parity_subsequence(backend):
+    ref, queries = _scenario()
+    starts, dists, quars = [], [], []
+    for q in np.asarray(queries):
+        res = subsequence_search(
+            ref, jnp.asarray(q), length=LENGTH, window=WINDOW, batch=64,
+            backend=backend,
+        )
+        starts.append(int(res.best_start))
+        dists.append(float(res.best_dist))
+        quars.append(int(res.quarantined))
+    assert len(set(quars)) == 1  # query-independent window property
+    _assert_matches(starts, dists, quars[0], backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_parity_multi_persistent(backend):
+    ref, queries = _scenario()
+    res = multi_query_search(
+        ref, queries, length=LENGTH, window=WINDOW, batch=64,
+        backend=backend, rounds="persistent",
+    )
+    _assert_matches(res.best_start, res.best_dist, res.quarantined, backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_parity_streaming(backend):
+    """Mixed-size chunking (ragged final chunk included) of the same stream."""
+    ref, queries = _scenario()
+    from repro.core.lower_bounds import envelope
+    from repro.search.znorm import znorm
+
+    queries_n = znorm(queries)
+    u, low = jax.vmap(envelope, in_axes=(0, None))(queries_n, WINDOW)
+    ub, best = initial_incumbents(N_QUERIES, ref.dtype)
+    tail = jnp.zeros((0,), ref.dtype)
+    offset = 0
+    quarantined = 0
+    pos = 0
+    for size in (137, 400, 263, N_REF):  # last slice is the ragged remainder
+        chunk = ref[pos : pos + size]
+        if chunk.shape[0] == 0:
+            break
+        tail, res = ingest_chunk(
+            tail, chunk, queries_n, u, low, ub, best, offset,
+            length=LENGTH, window=WINDOW, batch=64, backend=backend,
+        )
+        ub, best = res.ub, res.best
+        quarantined += int(res.quarantined)
+        pos += int(chunk.shape[0])
+        offset = pos - int(tail.shape[0])
+    _assert_matches(best, ub, quarantined, backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_parity_distributed(backend):
+    """Both mesh frontends on a 1-device mesh (the SPMD program itself)."""
+    mesh = jax.make_mesh((1,), ("d",))
+    multi_fn = make_distributed_multi_search(
+        mesh, ("d",), length=LENGTH, window=WINDOW, batch=64,
+        backend=backend,
+    )
+    ref, queries = _scenario()
+    res = multi_fn(ref, queries)
+    _assert_matches(res.best_start, res.best_dist, res.quarantined, backend)
+
+    scalar_fn = make_distributed_search(
+        mesh, ("d",), length=LENGTH, window=WINDOW, batch=64,
+        backend=backend,
+    )
+    g_starts, g_dists, g_quar = _golden(backend)
+    for q in range(N_QUERIES):
+        one = scalar_fn(ref, queries[q])
+        assert int(one.best_start) == g_starts[q]
+        np.testing.assert_allclose(
+            float(one.best_dist), g_dists[q], rtol=DIST_RTOL
+        )
+        assert int(one.quarantined) == g_quar
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_parity_resilient_under_faults(backend):
+    """Retry + reassignment must not change the answer or the accounting."""
+    ref, queries = _scenario()
+    n_win = N_REF - LENGTH + 1
+
+    def runner(shard, lo, hi, ub):
+        seg = ref[lo : hi + LENGTH - 1]
+        res = multi_query_search(
+            seg, queries, length=LENGTH, window=WINDOW, batch=64,
+            backend=backend, ub_init=jnp.asarray(ub, queries.dtype),
+        )
+        s = np.asarray(res.best_start, np.int64)
+        return (
+            np.where(s >= 0, s + lo, -1),
+            np.asarray(res.best_dist, np.float64),
+            int(res.quarantined),
+        )
+
+    flaky_lo = partition_ranges(n_win, 4)[2][0]
+    inj = ShardFaultInjector(runner, dead_shards={1}, flaky_ranges={flaky_lo})
+    res = resilient_search(
+        ref, queries, LENGTH, WINDOW, n_shards=4, runner=inj,
+        backoff=0.0, sleep=lambda _dt: None,
+    )
+    assert res.coverage == 1.0
+    assert res.failed_shards == (1,)
+    _assert_matches(res.best_start, res.best_dist, res.quarantined, backend)
