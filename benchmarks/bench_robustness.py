@@ -1,6 +1,9 @@
 """search/robustness: quarantine-prepass overhead on clean data.
 Also search/resilient (``run_resilient``): the fault-tolerant sharded
 executor's overhead over the plain offline driver on a healthy system.
+Also search/hedged (``run_hedged``): hedged dispatch's healthy-path
+overhead and its deterministic tail win under one injected straggler
+(DESIGN.md §2.9).
 
 The non-finite quarantine (DESIGN.md §2.6) is on by default, so its cost on
 *clean* data is a tax every search pays. The contract is that the tax is one
@@ -186,8 +189,148 @@ def run_resilient(
     ]
 
 
+class _VirtualClock:
+    """Deterministic clock the straggler arm races on (no wall time)."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self) -> float:
+        return self.now
+
+
+def run_hedged(
+    ref_len: int = 16_000,
+    length: int = 128,
+    window_ratio: float = 0.1,
+    n_queries: int = 4,
+    n_shards: int = 4,
+    pairs: int = 5,
+    backend: str = "jax",
+    dataset: str = "ECG",
+    slow_dt: float = 50.0,
+):
+    """search/hedged: hedged dispatch vs plain resilient (DESIGN.md §2.9).
+
+    Two claims, two arms:
+
+      * **Healthy path is (almost) free** — ``hedge=True`` with a hedge
+        delay that never fires adds only per-attempt health bookkeeping
+        (EWMA + breaker updates) to the resilient executor. Measured
+        wall-clock with the alternating paired protocol; the contract is
+        overhead ≲5%, and the ``speedup=`` row gates >20% drift in
+        bench-diff.
+      * **Stragglers stop setting the tail** — one shard completes
+        correctly but ``slow_dt``× slower (injected on a *virtual* clock,
+        so the row is exact and noise-free). The plain executor's summed
+        effective latency waits the straggler out; the hedged executor
+        races a healthy backup after the hedge delay and finishes at the
+        backup's virtual completion time. Answers are asserted bit-equal
+        between the arms before any ratio is reported.
+
+    CSV rows (name,us_per_call,derived):
+      search/hedged/q{Q}/l{l}/s{S}/{backend}/healthy-plain    — best-of us
+      search/hedged/q{Q}/l{l}/s{S}/{backend}/healthy-hedged   — best-of us
+      search/hedged/q{Q}/l{l}/s{S}/{backend}/healthy-overhead — best-of
+        ratio (plain/hedged; ``speedup=`` gates bench-diff,
+        ``overhead_pct`` is the ≲5% headline)
+      search/hedged/q{Q}/l{l}/s{S}/{backend}/straggler-tail   — virtual
+        latency ratio (plain/hedged under one straggler; deterministic,
+        ``speedup=`` gates bench-diff, ``hedges_won`` recorded)
+    """
+    from repro.search import multi_query_search, resilient_search
+
+    w = max(int(length * window_ratio), 1)
+    ref = jnp.asarray(make_dataset(dataset, ref_len, seed=0), jnp.float32)
+    queries = jnp.asarray(
+        make_queries(dataset, n_queries, length, seed=1), jnp.float32
+    )
+
+    def search(hedge):
+        # A delay this large never fires on the healthy path: the arm pays
+        # only the health/scheduling bookkeeping, which is the overhead
+        # under test.
+        return resilient_search(
+            ref, queries, length, w, n_shards=n_shards, backend=backend,
+            hedge=hedge, hedge_delay=1e9,
+        )
+
+    # warm both paths, then pin healthy-path parity before timing
+    p, h = search(False), search(True)
+    agree = bool(
+        h.coverage == 1.0
+        and h.hedges_launched == 0
+        and np.array_equal(h.best_start, p.best_start)
+        and np.array_equal(h.best_dist, p.best_dist)
+    )
+    assert agree, "healthy-path hedged executor diverged from plain"
+
+    t_plain, t_hedged, ratios = [], [], []
+    for _ in range(pairs):
+        t0 = time.time()
+        search(False)
+        tp = time.time() - t0
+        t0 = time.time()
+        search(True)
+        th = time.time() - t0
+        t_plain.append(tp)
+        t_hedged.append(th)
+        ratios.append(tp / th if th > 0 else 0.0)
+    median_ratio = statistics.median(ratios)
+    ratio = min(t_plain) / min(t_hedged) if min(t_hedged) > 0 else 0.0
+    overhead_pct = (1.0 / ratio - 1.0) * 100.0 if ratio > 0 else float("inf")
+
+    # -- straggler arm: exact, on the virtual timeline --------------------
+    def straggler_run(hedge):
+        clock = _VirtualClock()
+        slow_shard = 1 % n_shards
+
+        def runner(shard, lo, hi, ub):
+            seg = jnp.asarray(ref[lo : hi + length - 1])
+            res = multi_query_search(
+                seg, queries, length, w, backend=backend,
+                ub_init=jnp.asarray(ub, queries.dtype),
+            )
+            clock.now += slow_dt if shard == slow_shard else 1.0
+            s = np.asarray(res.best_start, np.int64)
+            return (
+                np.where(s >= 0, s + lo, -1),
+                np.asarray(res.best_dist, np.float64),
+                int(res.quarantined),
+            )
+
+        return resilient_search(
+            ref, queries, length, w, n_shards=n_shards, runner=runner,
+            hedge=hedge, hedge_delay=3.0, clock=clock,
+            sleep=lambda _t: None,
+        )
+
+    sp, sh = straggler_run(False), straggler_run(True)
+    tail_agree = bool(
+        sh.coverage == 1.0
+        and np.array_equal(sh.best_start, sp.best_start)
+        and np.array_equal(sh.best_dist, sp.best_dist)
+    )
+    assert tail_agree, "hedged straggler run diverged from plain"
+    tail_ratio = sp.latency / sh.latency if sh.latency > 0 else 0.0
+
+    tag = f"search/hedged/q{n_queries}/l{length}/s{n_shards}/{backend}"
+    return [
+        (f"{tag}/healthy-plain", min(t_plain) * 1e6, f"agree={agree}"),
+        (f"{tag}/healthy-hedged", min(t_hedged) * 1e6,
+         f"agree={agree};hedges_launched={h.hedges_launched}"),
+        (f"{tag}/healthy-overhead", ratio,
+         f"speedup={ratio:.4f};overhead_pct={overhead_pct:.2f};"
+         f"median_pair_ratio={median_ratio:.4f};pairs={pairs}"),
+        (f"{tag}/straggler-tail", tail_ratio,
+         f"speedup={tail_ratio:.4f};hedges_won={sh.hedges_won};"
+         f"plain_latency={sp.latency:.1f};hedged_latency={sh.latency:.1f};"
+         f"virtual=1"),
+    ]
+
+
 def main() -> None:
-    rows = run() + run_resilient()
+    rows = run() + run_resilient() + run_hedged()
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 

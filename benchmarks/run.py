@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV:
                      (must sit within noise of the prepass compiled out)
   * search/resilient/* — fault-tolerant sharded executor vs the plain
                      offline driver on a healthy system (coverage 1.0)
+  * search/hedged/* — hedged dispatch: healthy-path overhead (≲5%) plus
+                     the deterministic tail win under one injected
+                     straggler on a virtual clock (DESIGN.md §2.9)
   * search/persistent/* — one-launch persistent sweep vs host round driver
                      (both backends; dispatch counts in the speedup rows)
   * search/pipeline/* — frontend wrapper (validation + plan resolution)
@@ -79,8 +82,8 @@ def main() -> None:
     artifact = {
         "meta": {"quick": bool(args.quick), "backend": jax.default_backend()},
         "suites": [], "multiq": [], "stream": [], "robustness": [],
-        "resilient": [], "persistent": [], "pipeline": [], "dtw": [],
-        "roofline": [],
+        "resilient": [], "hedged": [], "persistent": [], "pipeline": [],
+        "dtw": [], "roofline": [],
     }
 
     print("name,us_per_call,derived")
@@ -128,6 +131,16 @@ def main() -> None:
     for name, us, derived in rs_rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
         artifact["resilient"].append(_suite_record(name, us, derived))
+
+    if args.quick:
+        # the straggler-tail row is exact (virtual clock) at any scale, so
+        # quick mode only shrinks the wall-clock healthy-overhead arm
+        hg_rows = bench_robustness.run_hedged(ref_len=6_000, pairs=5)
+    else:
+        hg_rows = bench_robustness.run_hedged()
+    for name, us, derived in hg_rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+        artifact["hedged"].append(_suite_record(name, us, derived))
 
     if args.quick:
         # more pairs than the other quick suites: the two arms are within

@@ -23,8 +23,8 @@ import sys
 import tempfile
 
 SECTIONS = (
-    "suites", "multiq", "stream", "robustness", "resilient", "persistent",
-    "pipeline", "dtw",
+    "suites", "multiq", "stream", "robustness", "resilient", "hedged",
+    "persistent", "pipeline", "dtw",
 )
 
 

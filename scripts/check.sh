@@ -21,14 +21,16 @@ echo "== kernel program on CPU (pallas_interpret) =="
 # not just on TPU.
 REPRO_DTW_BACKEND=pallas_interpret python -m pytest -x -q \
     tests/test_backend.py tests/test_multi_query.py tests/test_streaming.py \
-    tests/test_persistent.py tests/test_robustness.py tests/test_resilient.py
+    tests/test_persistent.py tests/test_robustness.py tests/test_resilient.py \
+    tests/test_hedged.py
 
 echo "== seeded fault pass (REPRO_FAULT_SEED=7, pallas_interpret) =="
 # Re-run the fault-injection suites on a different data draw: recovery,
-# coverage accounting, and re-admission must not depend on one lucky series.
+# coverage accounting, re-admission, and the hedging scenario (straggler +
+# dead shard) must not depend on one lucky series.
 REPRO_FAULT_SEED=7 REPRO_DTW_BACKEND=pallas_interpret python -m pytest -x -q \
     tests/test_robustness.py tests/test_resilient.py \
-    tests/test_pipeline_parity.py
+    tests/test_pipeline_parity.py tests/test_hedged.py
 
 echo "== benchmark smoke (--quick) + SPEEDUP regression gate =="
 # One quick bench run serves both purposes: diff its artifact against the

@@ -86,6 +86,28 @@ Resilience knobs (DESIGN.md §2.7; ``search.resilient`` / ``serve``):
                           the ingest thread (``train.checkpoint
                           .AsyncCheckpointer``; restore paths barrier on
                           in-flight writes).
+
+Hedging / health knobs (DESIGN.md §2.9; ``search.resilient`` /
+``search.pipeline.HedgedExecutor``):
+
+  ``hedge``             — race attempts that exceed the hedge delay on a
+                          healthy backup shard; duplicate completions merge
+                          through the strict-improvement fold, so hedging
+                          can change latency but never the answer.
+  ``hedge_delay``       — explicit hedge delay in seconds; ``None`` derives
+                          it as ``threshold × EWMA`` from the straggler
+                          monitor (no hedging until a baseline exists).
+  ``hedge_max_inflight``— backup attempts raced against one straggling
+                          primary (the hedging ladder depth).
+  ``breaker_threshold`` — consecutive failures before a shard's circuit
+                          breaker opens and routing avoids it (a pause, not
+                          a verdict — distinct from ``shard_max_retries``
+                          marking a shard failed).
+  ``breaker_cooldown``  — seconds an open breaker sheds load before it
+                          earns a single half-open probe.
+  ``retry_jitter``      — decorrelate retry backoff sleeps
+                          (``$REPRO_FAULT_SEED``-seeded); avoids lockstep
+                          retry bursts across simultaneously-failed shards.
 """
 from dataclasses import dataclass
 
@@ -116,6 +138,12 @@ class SearchConfig:
     shard_timeout: float | None = None  # soft per-range wall-clock budget
     require_full_coverage: bool = False  # degraded result -> CoverageError
     async_ckpt: bool = False         # off-thread supervisor checkpoints
+    hedge: bool = False              # race stragglers on a backup shard (§2.9)
+    hedge_delay: float | None = None  # None = threshold x EWMA from monitor
+    hedge_max_inflight: int = 2      # backups raced per straggling attempt
+    breaker_threshold: int = 3       # consecutive failures to open breaker
+    breaker_cooldown: float = 1.0    # open-breaker load-shed seconds
+    retry_jitter: bool = True        # decorrelated retry backoff (§2.9)
 
     @property
     def window(self) -> int:

@@ -13,6 +13,17 @@ tests:
     the flagged hook triggers re-scheduling, here it records and reports.
     Lockstep designs (search rounds, microbatch scans) bound a straggler's
     blast radius to one round, see search/distributed.py.
+  * ``CircuitBreaker`` / ``WorkerHealth`` — the per-worker health model the
+    hedged scheduling layer (DESIGN.md §2.9) routes on: an EWMA latency
+    estimate (a ``StragglerMonitor`` per worker) composed with a
+    consecutive-failure breaker (closed → open → half-open → closed).
+  * ``DecorrelatedJitterBackoff`` — retry sleeps drawn from
+    ``uniform(base, 3 * prev)`` capped at ``cap`` (the AWS "decorrelated
+    jitter" schedule), so simultaneously-failed workers do not retry in
+    lockstep; seeded from ``$REPRO_FAULT_SEED`` by default so the fault
+    suites stay reproducible.
+  * ``hedge_race`` — the deterministic host emulation of racing backup
+    attempts against a straggling primary (DESIGN.md §2.9).
 
 The serving tier mirrors this shape: ``serve.supervisor.SearchSupervisor``
 wraps ``StreamSearchEngine`` with the same checkpoint/retry/replay
@@ -26,13 +37,25 @@ idiom across training and serving.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
+
+import numpy as np
 
 import jax
 
+from repro.core import guards
 from repro.train import checkpoint as ckpt_lib
+
+# The transient/guard split shared by every supervisor in the repo: these
+# retry (a device falling over, a flaky allocator, an RPC deadline —
+# TimeoutError is an OSError); the typed guard errors (SearchInputError,
+# StreamStateError) are caller bugs and must re-raise immediately. Guard
+# errors subclass ValueError/RuntimeError, so catch them FIRST.
+TRANSIENT = (RuntimeError, ValueError, OSError)
+GUARD_ERRORS = (guards.SearchInputError, guards.StreamStateError)
 
 
 @dataclass
@@ -57,6 +80,249 @@ class StragglerMonitor:
             dt, self.ewma * self.threshold
         )
         return is_straggler
+
+
+class CircuitBreaker:
+    """Consecutive-failure circuit breaker (DESIGN.md §2.9).
+
+    State machine: **closed** (normal) → **open** after ``threshold``
+    consecutive failures (the worker sheds load for ``cooldown`` seconds)
+    → **half_open** once the cooldown elapses and a scheduler *acquires*
+    the one probe slot → **closed** on probe success, back to **open**
+    (cooldown restarted) on probe failure.
+
+    ``ready()`` is a pure read — schedulers may call it on every candidate
+    while routing without consuming anything; ``acquire()`` is called only
+    on the worker actually picked, and is what converts an elapsed cooldown
+    into the single half-open probe.
+    """
+
+    def __init__(
+        self,
+        threshold: int = 3,
+        cooldown: float = 1.0,
+        clock: Callable[[], float] = time.time,
+    ):
+        if threshold < 1:
+            raise guards.SearchInputError("breaker threshold must be >= 1")
+        if cooldown < 0:
+            raise guards.SearchInputError("breaker cooldown must be >= 0")
+        self.threshold = int(threshold)
+        self.cooldown = float(cooldown)
+        self._clock = clock
+        self.state = "closed"
+        self.consecutive_failures = 0
+        self.failures = 0
+        self.trips = 0
+        self.opened_at: float | None = None
+
+    def ready(self) -> bool:
+        """May an attempt be routed here? (Pure; consumes nothing.)"""
+        if self.state == "closed":
+            return True
+        if self.state == "open":
+            return (
+                self.opened_at is not None
+                and self._clock() - self.opened_at >= self.cooldown
+            )
+        return False  # half_open: the one probe is already outstanding
+
+    def acquire(self) -> None:
+        """An attempt is about to run here; claim the half-open probe slot
+        when the cooldown has elapsed."""
+        if self.state == "open" and self.ready():
+            self.state = "half_open"
+
+    def record_success(self) -> None:
+        self.consecutive_failures = 0
+        self.state = "closed"
+        self.opened_at = None
+
+    def record_failure(self) -> None:
+        self.failures += 1
+        self.consecutive_failures += 1
+        if (
+            self.state == "half_open"
+            or self.consecutive_failures >= self.threshold
+        ):
+            if self.state != "open":
+                self.trips += 1
+            self.state = "open"
+            self.opened_at = self._clock()
+
+
+class HealthSnapshot(NamedTuple):
+    """Read-only view of one worker's health, surfaced on results."""
+    state: str               # breaker state: closed | open | half_open
+    ewma: float | None       # EWMA attempt latency (None: never observed)
+    attempts: int            # completed attempts observed
+    failures: int            # total failures recorded
+    consecutive_failures: int
+    trips: int               # times the breaker opened
+
+
+class WorkerHealth:
+    """Per-worker health: EWMA latency + circuit breaker (DESIGN.md §2.9).
+
+    The unit the hedged scheduling layer routes on — one per shard in
+    ``search.resilient.resilient_search``, one per wrapped executor in
+    ``search.pipeline.HedgedExecutor``. Composes a per-worker
+    ``StragglerMonitor`` (the latency estimate that derives hedge delays
+    and classifies a worker as degraded) with a ``CircuitBreaker`` (the
+    availability gate that routes load off a repeatedly-failing worker).
+    """
+
+    def __init__(
+        self,
+        *,
+        threshold: float = 3.0,
+        alpha: float = 0.2,
+        breaker_threshold: int = 3,
+        breaker_cooldown: float = 1.0,
+        clock: Callable[[], float] = time.time,
+    ):
+        self.monitor = StragglerMonitor(threshold=threshold, alpha=alpha)
+        self.breaker = CircuitBreaker(
+            breaker_threshold, breaker_cooldown, clock
+        )
+        self.attempts = 0
+
+    @property
+    def ewma(self) -> float | None:
+        return self.monitor.ewma
+
+    def observe(self, dt: float) -> bool:
+        """A completed attempt took ``dt`` seconds (closes the breaker)."""
+        self.attempts += 1
+        flagged = self.monitor.observe(self.attempts - 1, dt)
+        self.breaker.record_success()
+        return flagged
+
+    def fail(self) -> None:
+        self.breaker.record_failure()
+
+    def ready(self) -> bool:
+        return self.breaker.ready()
+
+    def acquire(self) -> None:
+        self.breaker.acquire()
+
+    def snapshot(self) -> HealthSnapshot:
+        return HealthSnapshot(
+            state=self.breaker.state,
+            ewma=self.monitor.ewma,
+            attempts=self.attempts,
+            failures=self.breaker.failures,
+            consecutive_failures=self.breaker.consecutive_failures,
+            trips=self.breaker.trips,
+        )
+
+
+class DecorrelatedJitterBackoff:
+    """Retry sleeps with decorrelated jitter: ``uniform(base, 3 * prev)``.
+
+    The plain exponential schedule (``base * 2**k``) retries every
+    simultaneously-failed worker in lockstep — exactly the synchronized
+    burst that knocked them over in the first place. The decorrelated form
+    (Brooker, "Exponential Backoff and Jitter") keeps the exponential
+    envelope in expectation while spreading retries over the interval.
+
+    Deterministic given its seed; ``seed=None`` reads ``$REPRO_FAULT_SEED``
+    (default 0) so the seeded check.sh fault pass varies the draw while any
+    single run stays reproducible. ``reset()`` starts a fresh retry
+    sequence (call it when a new failure episode begins).
+    """
+
+    def __init__(
+        self,
+        base: float,
+        cap: float | None = None,
+        seed: int | None = None,
+    ):
+        if base < 0:
+            raise guards.SearchInputError("backoff base must be >= 0")
+        self.base = float(base)
+        self.cap = float(cap) if cap is not None else self.base * 16.0
+        if seed is None:
+            seed = int(os.environ.get("REPRO_FAULT_SEED", 0))
+        self._rng = np.random.default_rng(seed)
+        self._prev = self.base
+
+    def reset(self) -> None:
+        self._prev = self.base
+
+    def next(self) -> float:
+        if self.base == 0.0:
+            return 0.0
+        lo, hi = self.base, max(self._prev * 3.0, self.base)
+        self._prev = min(self.cap, float(self._rng.uniform(lo, hi)))
+        return self._prev
+
+
+class HedgeOutcome(NamedTuple):
+    """One hedged attempt's adjudication (all times in ``clock`` units)."""
+    launched: int        # backup attempts actually launched
+    won: bool            # a backup (virtually) finished before the primary
+    effective_dt: float  # min over completions of their virtual finish time
+    completions: tuple   # ((tag, result, backup_dt), ...) completed backups
+
+
+def hedge_race(
+    primary_dt: float,
+    delay: float,
+    backups,
+    *,
+    clock: Callable[[], float] = time.time,
+    max_inflight: int = 2,
+    on_failure: Callable[[Any, BaseException], None] | None = None,
+) -> HedgeOutcome:
+    """Race backup attempts against a primary that took ``primary_dt``.
+
+    The deterministic host emulation of hedged dispatch (DESIGN.md §2.9):
+    the host runs attempts sequentially, so the primary has already
+    *completed* (in ``primary_dt`` seconds of the injectable clock) by the
+    time this adjudicator runs. The race is replayed on the virtual
+    timeline a concurrent deployment would see: backup ``k`` (1-based)
+    launches at ``k * delay`` — but only if nothing has virtually finished
+    by then — runs for its measured ``dt_k``, and finishes at
+    ``k * delay + dt_k``. ``effective_dt`` is the latency a client would
+    have observed: the min finish time over the primary and every
+    completed backup. ``max_inflight`` caps how many backups may race one
+    straggling primary (the ladder depth).
+
+    ``backups`` yields ``(tag, thunk)`` lazily so the caller can pick each
+    next-healthiest worker *at launch time*. A backup raising a transient
+    error is reported to ``on_failure`` and contributes nothing; guard
+    errors re-raise (caller bugs are never hedged away).
+    """
+    launched = 0
+    best_eff = primary_dt
+    completions = []
+    for k, (tag, thunk) in enumerate(backups, start=1):
+        if launched >= max_inflight:
+            break
+        launch_t = k * delay
+        if best_eff <= launch_t:
+            break  # someone already (virtually) finished; no more hedges
+        launched += 1
+        t0 = clock()
+        try:
+            result = thunk()
+        except GUARD_ERRORS:
+            raise
+        except TRANSIENT as e:
+            if on_failure is not None:
+                on_failure(tag, e)
+            continue
+        dt_k = clock() - t0
+        completions.append((tag, result, dt_k))
+        best_eff = min(best_eff, launch_t + dt_k)
+    return HedgeOutcome(
+        launched=launched,
+        won=best_eff < primary_dt,
+        effective_dt=best_eff,
+        completions=tuple(completions),
+    )
 
 
 class TrainingSupervisor:

@@ -21,6 +21,7 @@ from repro.search.incumbents import (
     fold_min,
     fold_np,
     initial_state,
+    merge_states,
 )
 from repro.search.multi import (
     DistMultiSearchResult,
@@ -30,6 +31,7 @@ from repro.search.multi import (
 )
 from repro.search.pipeline import (
     Executor,
+    HedgedExecutor,
     HostRoundsExecutor,
     PersistentExecutor,
     RangeResult,
@@ -45,6 +47,7 @@ from repro.search.resilient import (
 )
 from repro.search.streaming import (
     IngestResult,
+    StreamIngestExecutor,
     ingest_chunk,
     initial_incumbents,
     rescore_windows,
@@ -65,6 +68,7 @@ __all__ = [
     "DistMultiSearchResult",
     "DistSearchResult",
     "Executor",
+    "HedgedExecutor",
     "HostRoundsExecutor",
     "IncumbentState",
     "IngestResult",
@@ -76,6 +80,7 @@ __all__ = [
     "SearchPlan",
     "SearchResult",
     "ShardedExecutor",
+    "StreamIngestExecutor",
     "VARIANTS",
     "append_window_stats",
     "cascade",
@@ -91,6 +96,7 @@ __all__ = [
     "make_distributed_multi_search",
     "make_distributed_search",
     "make_plan",
+    "merge_states",
     "multi_query_search",
     "rescore_windows",
     "resilient_search",

@@ -22,6 +22,13 @@ bookkeeping, with subtle drift). This module is now the single owner:
     state (device-side, used inside every jitted round loop).
   * ``fold_np`` — the same rule on host numpy arrays (the resilient
     executor folds completed ranges on the host).
+  * ``merge_states`` — two full incumbent snapshots merged under the same
+    strict-improvement rule. This is what makes hedged dispatch
+    (DESIGN.md §2.9) *provably idempotent*: duplicate completions of the
+    same range, seeded with the same incumbents, return identical
+    ``(start, dist)`` pairs, and folding the same pair twice is a no-op
+    under strict improvement (``d < ub`` is false the second time) — so a
+    hedge can change latency but never the answer.
   * ``DEAD_LANE_UB`` re-export — the negative sentinel that kills a lane
     on row 0; any lane whose lower bound is non-finite (padding,
     quarantined, inactive query) must be submitted with it.
@@ -92,6 +99,24 @@ def fold_np(ub: np.ndarray, best: np.ndarray, starts, dists):
     d = np.asarray(dists, np.float64)
     improved = np.logical_and(s >= 0, d < ub)
     return np.where(improved, d, ub), np.where(improved, s, best)
+
+
+def merge_states(a: IncumbentState, b: IncumbentState) -> IncumbentState:
+    """Merge two incumbent snapshots under strict improvement.
+
+    Used by the hedged executor (DESIGN.md §2.9) to fold a backup
+    completion into the primary's: per query, ``b`` wins only where its
+    bound is *strictly* tighter, so merging a duplicate completion (same
+    range, same seed → identical arrays) reproduces ``a`` bit-exactly —
+    duplicate completions are idempotent. On an exact distance tie the
+    first argument's achiever is kept (the same first-strict-improvement
+    rule every fold in this repo applies).
+    """
+    take_b = b.ub < a.ub
+    return IncumbentState(
+        ub=jnp.where(take_b, b.ub, a.ub),
+        best=jnp.where(take_b, b.best, a.best),
+    )
 
 
 class QuarantineLedger:

@@ -36,10 +36,14 @@ Executor seam
 :class:`Executor` (``run_range(plan, state, lo, hi) -> RangeResult``) is the
 unit the fault-tolerant layer schedules: ``resilient_search`` retries,
 reassigns and coverage-accounts *ranges*, never caring which executor runs
-them — so hedged dispatch ("race two executors on one range") is a
-follow-up, not a rewrite. Window starts ``[lo, hi)`` of the bound reference
-are searched against the carried incumbents; results come back in global
-window coordinates.
+them. Window starts ``[lo, hi)`` of the bound reference are searched
+against the carried incumbents; results come back in global window
+coordinates. :class:`HedgedExecutor` composes on the same seam: it wraps N
+executors behind one ``run_range`` (and ``run_ingest``, for streaming
+executors), races a straggling attempt on the next-healthiest wrapped
+executor, and merges duplicate completions through the strict-improvement
+fold — provably idempotent, see ``incumbents.merge_states`` and
+DESIGN.md §2.9.
 
 Frontend ↔ executor binding (public signatures unchanged):
 
@@ -57,6 +61,7 @@ Frontend ↔ executor binding (public signatures unchanged):
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass
 from functools import partial
 from typing import NamedTuple, Protocol
@@ -83,8 +88,20 @@ from repro.core.lower_bounds import (
     lb_kim_fl,
 )
 from repro.core.pruned_dtw import pruned_dtw
+from repro.distributed.fault_tolerance import (
+    GUARD_ERRORS,
+    TRANSIENT,
+    StragglerMonitor,
+    WorkerHealth,
+    hedge_race,
+)
 from repro.search.cascade import cascade_lower_bounds
-from repro.search.incumbents import IncumbentState, fold_min, initial_state
+from repro.search.incumbents import (
+    IncumbentState,
+    fold_min,
+    initial_state,
+    merge_states,
+)
 from repro.search.znorm import (
     gather_norm_windows,
     sanitize_series,
@@ -1155,3 +1172,193 @@ def get_executor(
     if plan.rounds == "persistent":
         return PersistentExecutor(ref, queries)
     return HostRoundsExecutor(ref, queries)
+
+
+def _merge_range_results(a: RangeResult, b: RangeResult) -> RangeResult:
+    """Fold a duplicate completion into the primary's (idempotent).
+
+    Incumbents merge under strict improvement; stats and the quarantine
+    count stay the primary's — both attempts scanned the same windows, so
+    counting the backup's quarantined windows again would double-count.
+    """
+    return a._replace(state=merge_states(a.state, b.state))
+
+
+def _merge_ingest_results(a, b):
+    """Same rule for ``run_ingest``'s ``(new_tail, IngestResult)`` pairs."""
+    tail_a, res_a = a
+    _tail_b, res_b = b
+    merged = merge_states(
+        IncumbentState(ub=res_a.ub, best=res_a.best),
+        IncumbentState(ub=res_b.ub, best=res_b.best),
+    )
+    return tail_a, res_a._replace(ub=merged.ub, best=merged.best)
+
+
+class HedgedExecutor:
+    """Race a straggling attempt on the next-healthiest wrapped executor.
+
+    Wraps N executors behind the same seam (``run_range``, and
+    ``run_ingest`` when the wrapped executors are streaming ingest
+    executors). Every attempt runs on the healthiest available executor;
+    when it takes longer than the hedge delay — explicit ``hedge_delay``,
+    or derived as ``threshold × EWMA`` of the fleet's attempt latency —
+    the same work is raced on up to ``hedge_max_inflight`` backups and the
+    race is adjudicated on the virtual timeline
+    (``fault_tolerance.hedge_race``; DESIGN.md §2.9 spells out the
+    host-serialized emulation vs a concurrent RPC deployment). Duplicate
+    completions merge through the strict-improvement fold
+    (``incumbents.merge_states``), so a hedge can never change the answer
+    — only the latency.
+
+    Health: one ``WorkerHealth`` (EWMA + circuit breaker) per wrapped
+    executor. Routing prefers breaker-ready executors that are not
+    straggling (EWMA ≤ ``threshold ×`` the fleet EWMA), in index order —
+    deterministic whenever the clock is. A transient failure of the
+    *primary* attempt records breaker state and re-raises: retry policy
+    belongs to the layer above (``resilient_search``, the supervisor),
+    composing instead of duplicating it. Backup failures are absorbed —
+    the primary's completed result stands.
+
+    Counters: ``hedges_launched`` / ``hedges_won`` (a backup virtually
+    finished first) / ``last_effective_dt`` (the latency a client of the
+    race would have seen, which is what callers should feed their own
+    monitors). ``clock`` is injectable; with a fake clock every race is
+    deterministic in tests.
+    """
+
+    def __init__(
+        self,
+        executors,
+        *,
+        hedge_delay: float | None = None,
+        hedge_max_inflight: int = 2,
+        threshold: float = 3.0,
+        alpha: float = 0.2,
+        breaker_threshold: int = 3,
+        breaker_cooldown: float = 1.0,
+        clock=time.time,
+    ):
+        self._executors = tuple(executors)
+        if not self._executors:
+            raise guards.SearchInputError(
+                "HedgedExecutor needs at least one executor"
+            )
+        if hedge_max_inflight < 1:
+            raise guards.SearchInputError("hedge_max_inflight must be >= 1")
+        self.hedge_delay = hedge_delay
+        self.hedge_max_inflight = int(hedge_max_inflight)
+        self._clock = clock
+        self.monitor = StragglerMonitor(threshold=threshold, alpha=alpha)
+        self.health = tuple(
+            WorkerHealth(
+                threshold=threshold, alpha=alpha,
+                breaker_threshold=breaker_threshold,
+                breaker_cooldown=breaker_cooldown, clock=clock,
+            )
+            for _ in self._executors
+        )
+        self.hedges_launched = 0
+        self.hedges_won = 0
+        self.last_effective_dt: float | None = None
+        self._steps = 0
+
+    # -- routing ----------------------------------------------------------
+    def _order(self) -> list[int]:
+        """Executor indices, healthiest first: breaker-ready before open,
+        non-straggling before straggling, index order as the tiebreak."""
+        fleet = self.monitor.ewma
+
+        def key(i: int):
+            h = self.health[i]
+            slow = (
+                h.ewma is not None
+                and fleet is not None
+                and h.ewma > self.monitor.threshold * fleet
+            )
+            return (0 if h.ready() else 1, 1 if slow else 0, i)
+
+        return sorted(range(len(self._executors)), key=key)
+
+    def _delay(self) -> float | None:
+        if self.hedge_delay is not None:
+            return self.hedge_delay
+        if self.monitor.ewma is None:
+            return None  # no baseline yet: never hedge the first attempt
+        return self.monitor.threshold * self.monitor.ewma
+
+    def health_snapshots(self) -> tuple:
+        return tuple(h.snapshot() for h in self.health)
+
+    # -- the race ---------------------------------------------------------
+    def _attempt(self, method: str, args, kwargs, merge):
+        primary = self._order()[0]
+        self.health[primary].acquire()
+        t0 = self._clock()
+        try:
+            result = getattr(self._executors[primary], method)(
+                *args, **kwargs
+            )
+        except GUARD_ERRORS:
+            raise
+        except TRANSIENT:
+            self.health[primary].fail()
+            raise
+        dt_p = self._clock() - t0
+        delay = self._delay()  # pre-observe: the baseline excludes this dt
+        self.health[primary].observe(dt_p)
+        effective = dt_p
+        if delay is not None and dt_p > delay and len(self._executors) > 1:
+            used = {primary}
+
+            def backups():
+                while True:
+                    cands = [
+                        i for i in self._order()
+                        if i not in used and self.health[i].ready()
+                    ]
+                    if not cands:
+                        return
+                    i = cands[0]
+                    used.add(i)
+
+                    def thunk(i=i):
+                        self.health[i].acquire()
+                        return getattr(self._executors[i], method)(
+                            *args, **kwargs
+                        )
+
+                    yield i, thunk
+
+            race = hedge_race(
+                dt_p, delay, backups(), clock=self._clock,
+                max_inflight=self.hedge_max_inflight,
+                on_failure=lambda tag, _e: self.health[tag].fail(),
+            )
+            self.hedges_launched += race.launched
+            if race.won:
+                self.hedges_won += 1
+            for tag, res_b, dt_b in race.completions:
+                self.health[tag].observe(dt_b)
+                result = merge(result, res_b)
+            effective = race.effective_dt
+        self.monitor.observe(self._steps, effective)
+        self._steps += 1
+        self.last_effective_dt = effective
+        return result
+
+    # -- the seam ---------------------------------------------------------
+    def run_range(
+        self, plan: SearchPlan, state: IncumbentState, lo: int, hi: int
+    ) -> RangeResult:
+        return self._attempt(
+            "run_range", (plan, state, lo, hi), {}, _merge_range_results
+        )
+
+    def run_ingest(self, *args, **kwargs):
+        """Forward one streaming ingest through the race (duck-typed: the
+        wrapped executors must expose ``run_ingest``, e.g.
+        ``search.streaming.StreamIngestExecutor``)."""
+        return self._attempt(
+            "run_ingest", args, kwargs, _merge_ingest_results
+        )

@@ -15,10 +15,14 @@ Failure story (DESIGN.md §2.7):
 
   * **Bounded retry with backoff** — a transient range failure
     (``RuntimeError`` / ``ValueError`` / ``OSError``, which includes
-    ``TimeoutError``) sleeps an exponential backoff and retries on the same
-    shard up to ``max_retries`` times. Typed guard errors
-    (``SearchInputError``, ``StreamStateError``) are caller bugs and
-    re-raise immediately — the same split as the serving supervisor.
+    ``TimeoutError``) sleeps a decorrelated-jitter backoff
+    (``fault_tolerance.DecorrelatedJitterBackoff``: exponential envelope,
+    but simultaneously-failed shards do not retry in lockstep; seeded via
+    ``$REPRO_FAULT_SEED``, disable with ``jitter=False`` for the plain
+    ``backoff * 2**k`` schedule) and retries on the same shard up to
+    ``max_retries`` times. Typed guard errors (``SearchInputError``,
+    ``StreamStateError``) are caller bugs and re-raise immediately — the
+    same split as the serving supervisor.
   * **Reassignment** — a range that exhausts its retries marks its shard
     failed; the range moves to the next healthy shard with a fresh retry
     budget, and every later range still assigned to the failed shard skips
@@ -51,6 +55,31 @@ Failure story (DESIGN.md §2.7):
     reassigned. (A runner that wants hard timeouts raises
     ``TimeoutError`` itself — e.g. an RPC deadline — which takes the
     transient-retry path above.)
+  * **Shard health & circuit breaking** (DESIGN.md §2.9) — every shard
+    carries a ``WorkerHealth``: a latency EWMA plus a
+    closed/open/half-open circuit breaker that opens after
+    ``breaker_threshold`` *consecutive* failures. Fresh ranges and retry
+    reroutes prefer breaker-ready, non-straggling shards (shard-id order
+    as the tiebreak, so routing stays deterministic); a range popped for
+    a shard whose breaker is open moves to a ready shard without
+    touching the degraded one. Unlike ``failed_shards``, a breaker is a
+    pause, not a verdict: after ``breaker_cooldown`` the shard earns one
+    half-open probe, and a success puts it back in rotation.
+    ``shard_health`` on the result snapshots all of this.
+  * **Hedged dispatch** (``hedge=True``; DESIGN.md §2.9) — when a
+    completed attempt exceeded the hedge delay (explicit ``hedge_delay``,
+    or derived as ``threshold × EWMA`` from the fleet monitor), the same
+    range is raced on up to ``hedge_max_inflight`` healthy backups and
+    adjudicated on the virtual timeline of
+    ``fault_tolerance.hedge_race``. Backups are seeded with the same
+    *pre-fold* incumbents as the primary, so a duplicate completion
+    returns identical ``(start, dist)`` pairs and the strict-improvement
+    fold makes the merge a no-op — a hedge can change latency but never
+    the answer. Quarantine and coverage are counted once (the primary's:
+    both attempts scanned the same windows), and the soft-timeout strike
+    is judged on the *effective* latency, so a won hedge also saves the
+    straggler shard's range from burning the full ``timeout``.
+    ``hedges_launched`` / ``hedges_won`` report the outcome.
 
 The executor is deliberately sequential on the host: determinism makes the
 fault recipes in ``tests/faults.py`` exactly reproducible, and the ranges
@@ -67,13 +96,16 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import guards
-from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.distributed.fault_tolerance import (
+    GUARD_ERRORS,
+    TRANSIENT,
+    DecorrelatedJitterBackoff,
+    StragglerMonitor,
+    WorkerHealth,
+    hedge_race,
+)
 from repro.search.incumbents import IncumbentState, fold_np
 from repro.search.pipeline import MULTI_VARIANTS, HostRoundsExecutor, make_plan
-
-# The transient/guard split shared with serve.supervisor: retry these,
-# re-raise typed guard errors (caller bugs) immediately.
-_TRANSIENT = (RuntimeError, ValueError, OSError)
 
 
 class CoverageError(RuntimeError):
@@ -91,8 +123,12 @@ class ResilientSearchResult(NamedTuple):
     uncovered: tuple         # ((lo, hi), ...) window-start ranges not searched
     quarantined: int         # non-finite-quarantined windows over the covered set
     attempts: int            # range attempts issued (including failures)
-    reassignments: int       # ranges moved off a failed shard
+    reassignments: int       # ranges moved off a failed/degraded shard
     failed_shards: tuple     # shard ids marked failed
+    hedges_launched: int = 0  # backup attempts raced against stragglers
+    hedges_won: int = 0       # races a backup (virtually) finished first
+    shard_health: tuple = ()  # per-shard HealthSnapshot, indexed by shard id
+    latency: float = 0.0      # summed per-range effective latency (clock units)
 
 
 def partition_ranges(n_win: int, n_shards: int) -> list[tuple[int, int]]:
@@ -135,7 +171,14 @@ def resilient_search(
     quarantine: bool = True,
     max_retries: int = 2,
     backoff: float = 0.05,
+    jitter: bool = True,
     timeout: float | None = None,
+    hedge: bool = False,
+    hedge_delay: float | None = None,
+    hedge_max_inflight: int = 2,
+    breaker_threshold: int = 3,
+    breaker_cooldown: float = 1.0,
+    n_ranges: int | None = None,
     require_full_coverage: bool = False,
     runner: Callable | None = None,
     sleep: Callable[[float], None] = time.sleep,
@@ -160,9 +203,25 @@ def resilient_search(
       max_retries: transient failures tolerated per (range, shard) before
         the shard is marked failed and the range reassigned; also the
         soft-timeout strike budget per shard.
-      backoff: base retry sleep in seconds (doubles per consecutive retry).
+      backoff: base retry sleep in seconds (exponential envelope).
+      jitter: decorrelate retry sleeps (module docstring); ``False``
+        restores the deterministic ``backoff * 2**k`` schedule.
       timeout: soft per-attempt wall-clock budget in seconds (see module
-        docstring); ``None`` disables.
+        docstring); ``None`` disables. Judged on the *effective* latency,
+        so a won hedge saves the strike.
+      hedge: race straggling attempts on healthy backup shards (module
+        docstring). Never changes the answer, only the latency.
+      hedge_delay: explicit hedge delay in clock seconds; ``None`` derives
+        ``threshold × EWMA`` from ``monitor`` (no hedging until the
+        monitor has a baseline).
+      hedge_max_inflight: max backups raced against one straggling attempt.
+      breaker_threshold: consecutive failures before a shard's circuit
+        breaker opens (routing avoids it without marking it failed).
+      breaker_cooldown: seconds an open breaker sheds load before it earns
+        one half-open probe.
+      n_ranges: how many work ranges to partition the windows into
+        (default ``n_shards``); more ranges than shards gives the breaker
+        and the hedger something to re-route mid-search.
       require_full_coverage: raise ``CoverageError`` instead of returning a
         degraded result.
       runner: injection point for the per-range search:
@@ -179,6 +238,10 @@ def resilient_search(
         raise guards.SearchInputError("n_shards must be >= 1")
     if max_retries < 0:
         raise guards.SearchInputError("max_retries must be >= 0")
+    if n_ranges is not None and n_ranges < 1:
+        raise guards.SearchInputError("n_ranges must be >= 1")
+    if hedge_max_inflight < 1:
+        raise guards.SearchInputError("hedge_max_inflight must be >= 1")
     queries = jnp.atleast_2d(jnp.asarray(queries))
     guards.ensure_series(ref, "ref", ndim=1, min_len=length)
     guards.ensure_series(queries, "queries", ndim=2, min_len=length)
@@ -187,6 +250,15 @@ def resilient_search(
     nq = int(queries.shape[0])
     n_win = int(ref.shape[0]) - length + 1
     monitor = monitor or StragglerMonitor()
+    health = {
+        s: WorkerHealth(
+            threshold=monitor.threshold, alpha=monitor.alpha,
+            breaker_threshold=breaker_threshold,
+            breaker_cooldown=breaker_cooldown, clock=clock,
+        )
+        for s in range(n_shards)
+    }
+    backoffs = {s: DecorrelatedJitterBackoff(backoff) for s in range(n_shards)}
 
     if ub_init is None:
         ub = np.full((nq,), np.inf)
@@ -222,7 +294,7 @@ def resilient_search(
 
     work = deque(
         (lo, hi, i % n_shards, 0) for i, (lo, hi) in
-        enumerate(partition_ranges(n_win, n_shards))
+        enumerate(partition_ranges(n_win, n_ranges or n_shards))
     )
     healthy = set(range(n_shards))
     strikes = {s: 0 for s in range(n_shards)}
@@ -231,18 +303,37 @@ def resilient_search(
     attempts = 0
     reassignments = 0
     quarantined = 0
+    hedges_launched = 0
+    hedges_won = 0
+    latency = 0.0
 
     def _fold(starts, dists):
         nonlocal ub, best
         ub, best = fold_np(ub, best, starts, dists)
 
+    def _order(exclude=frozenset()):
+        # Healthiest first: breaker-ready before open, non-straggling
+        # before straggling (EWMA > threshold x the fleet EWMA), shard id
+        # as the tiebreak — id order whenever health is uniform, which
+        # keeps routing deterministic and matches the pre-health behavior.
+        fleet = monitor.ewma
+
+        def key(s):
+            h = health[s]
+            slow = (
+                h.ewma is not None and fleet is not None
+                and h.ewma > monitor.threshold * fleet
+            )
+            return (0 if h.ready() else 1, 1 if slow else 0, s)
+
+        return sorted((s for s in healthy if s not in exclude), key=key)
+
     def _reassign(lo, hi, off_shard):
         nonlocal reassignments
-        for cand in sorted(healthy):
-            if cand != off_shard:
-                work.append((lo, hi, cand, 0))
-                reassignments += 1
-                return
+        for cand in _order(exclude={off_shard}):
+            work.append((lo, hi, cand, 0))
+            reassignments += 1
+            return
         uncovered.append((lo, hi))
 
     while work:
@@ -250,14 +341,26 @@ def resilient_search(
         if shard not in healthy:
             _reassign(lo, hi, shard)
             continue
+        if tries == 0 and not health[shard].ready():
+            # Fresh range on a shard whose breaker is open: route it to a
+            # ready shard instead (counted as a reassignment, but the
+            # shard is NOT marked failed — the breaker may yet recover).
+            alt = [s for s in _order(exclude={shard}) if health[s].ready()]
+            if alt:
+                work.append((lo, hi, alt[0], 0))
+                reassignments += 1
+                continue
+        ub_pre = ub.copy()
         try:
             attempts += 1
+            health[shard].acquire()
             t0 = clock()
             starts, dists, n_quar = runner(shard, lo, hi, ub)
             dt = clock() - t0
-        except (guards.SearchInputError, guards.StreamStateError):
+        except GUARD_ERRORS:
             raise  # caller bug: retrying identical bad input cannot help
-        except _TRANSIENT as e:
+        except TRANSIENT as e:
+            health[shard].fail()
             # Admissible partial progress: achieved (start, distance) pairs
             # only — see the module docstring for why a bare bound is not.
             p_ub = getattr(e, "partial_ub", None)
@@ -269,15 +372,75 @@ def resilient_search(
             if tries > max_retries:
                 healthy.discard(shard)
                 _reassign(lo, hi, shard)
+                continue
+            alt = [s for s in _order(exclude={shard}) if health[s].ready()]
+            if not health[shard].ready() and alt:
+                # The breaker just opened mid-retry: move the range rather
+                # than hammer a shard the breaker took out of rotation.
+                work.append((lo, hi, alt[0], 0))
+                reassignments += 1
             else:
-                sleep(backoff * (2 ** (tries - 1)))
+                if jitter:
+                    sleep(backoffs[shard].next())
+                else:
+                    sleep(backoff * (2 ** (tries - 1)))
                 work.appendleft((lo, hi, shard, tries))
             continue
-        monitor.observe(attempts - 1, dt)
+        # Hedge-delay derivation must precede this attempt's observation —
+        # a straggler should be judged against the baseline, not against a
+        # baseline it already contaminated.
+        delay = None
+        if hedge:
+            if hedge_delay is not None:
+                delay = hedge_delay
+            elif monitor.ewma is not None:
+                delay = monitor.threshold * monitor.ewma
+        health[shard].observe(dt)
+        backoffs[shard].reset()
         _fold(starts, dists)
+        effective = dt
+        if delay is not None and dt > delay:
+            used = {shard}
+
+            def backups():
+                while True:
+                    cands = [
+                        s for s in _order(exclude=used) if health[s].ready()
+                    ]
+                    if not cands:
+                        return
+                    s = cands[0]
+                    used.add(s)
+
+                    def thunk(s=s):
+                        nonlocal attempts
+                        attempts += 1
+                        health[s].acquire()
+                        return runner(s, lo, hi, ub_pre)
+
+                    yield s, thunk
+
+            race = hedge_race(
+                dt, delay, backups(), clock=clock,
+                max_inflight=hedge_max_inflight,
+                on_failure=lambda tag, _e: health[tag].fail(),
+            )
+            hedges_launched += race.launched
+            if race.won:
+                hedges_won += 1
+            effective = race.effective_dt
+            for tag, res_b, dt_b in race.completions:
+                health[tag].observe(dt_b)
+                b_starts, b_dists, _b_quar = res_b
+                # Idempotent under strict improvement; the backup's
+                # quarantine count is deliberately dropped (the primary
+                # already accounted these very windows).
+                _fold(b_starts, b_dists)
+        monitor.observe(attempts - 1, effective)
+        latency += effective
         quarantined += int(n_quar)
         covered.append((lo, hi))
-        if timeout is not None and dt > timeout:
+        if timeout is not None and effective > timeout:
             # The result stands (it is a completed, exact range) but the
             # shard is now suspect for *future* assignments.
             strikes[shard] += 1
@@ -302,4 +465,8 @@ def resilient_search(
         attempts=attempts,
         reassignments=reassignments,
         failed_shards=tuple(sorted(set(range(n_shards)) - healthy)),
+        hedges_launched=hedges_launched,
+        hedges_won=hedges_won,
+        shard_health=tuple(health[s].snapshot() for s in range(n_shards)),
+        latency=latency,
     )

@@ -414,3 +414,78 @@ def initial_incumbents(
     """
     state = initial_state(nq, dtype, ub_init)
     return state.ub, state.best
+
+
+class StreamIngestExecutor:
+    """One stream's ingest dispatch bound as an executor-seam worker.
+
+    The streaming analogue of the offline ``run_range`` executors
+    (DESIGN.md §2.8): the per-stream statics (normalized queries,
+    envelopes, dispatch knobs) bind once at construction, and each call to
+    ``run_ingest`` advances one chunk of carried state. The seam exists so
+    ``serve.stream.StreamSearchEngine`` can be pointed at *any* object
+    with this method — in particular ``search.pipeline.HedgedExecutor``
+    wrapping several of these (DESIGN.md §2.9) — and gain hedging and
+    health-aware routing with zero streaming-specific recovery code.
+
+    ``run_ingest`` is a pure function of its arguments (all carried state
+    rides in ``tail``/``ub``/``best``/``offset``), which is exactly what
+    makes a duplicate hedged call safe: same inputs, same
+    ``(new_tail, IngestResult)``, and the strict-improvement merge of a
+    duplicate completion is a no-op.
+    """
+
+    def __init__(
+        self,
+        queries_n: jax.Array,
+        u: jax.Array,
+        low: jax.Array,
+        *,
+        length: int,
+        window: int,
+        variant: str = "eapruned",
+        batch: int = 64,
+        band_width: int | None = None,
+        chunk_lb: int = 4096,
+        backend: str | None = None,
+        rows_per_step: int = 1,
+        block_k: int = 8,
+        row_block: int = 128,
+        quarantine: bool = True,
+    ):
+        self.queries_n = queries_n
+        self.u = u
+        self.low = low
+        self.length = int(length)
+        self.window = int(window)
+        self.variant = variant
+        self.batch = int(batch)
+        self.band_width = band_width
+        self.chunk_lb = int(chunk_lb)
+        self.backend = backend
+        self.rows_per_step = int(rows_per_step)
+        self.block_k = int(block_k)
+        self.row_block = int(row_block)
+        self.quarantine = bool(quarantine)
+
+    def run_ingest(
+        self,
+        tail: jax.Array,
+        chunk: jax.Array,
+        ub: jax.Array,
+        best: jax.Array,
+        offset,
+        *,
+        pad_to: int | None = None,
+        chunk_index: int | None = None,
+    ) -> tuple[jax.Array, IngestResult]:
+        """Advance the carried stream state over one chunk (the seam call)."""
+        return ingest_chunk(
+            tail, chunk, self.queries_n, self.u, self.low, ub, best, offset,
+            length=self.length, window=self.window, variant=self.variant,
+            batch=self.batch, band_width=self.band_width,
+            chunk_lb=self.chunk_lb, backend=self.backend,
+            rows_per_step=self.rows_per_step, block_k=self.block_k,
+            row_block=self.row_block, pad_to=pad_to,
+            quarantine=self.quarantine, chunk_index=chunk_index,
+        )

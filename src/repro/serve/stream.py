@@ -56,7 +56,7 @@ from repro.core.lower_bounds import envelope
 from repro.search.incumbents import QuarantineLedger
 from repro.search.pipeline import MULTI_VARIANTS
 from repro.search.streaming import (
-    ingest_chunk,
+    StreamIngestExecutor,
     initial_incumbents,
     rescore_windows,
 )
@@ -144,6 +144,13 @@ class StreamSearchEngine:
         production. For checkify-compatible pieces there is also
         ``core.guards.checked_call`` (the DTW round loop itself is outside
         checkify's support; see ``core.guards`` docstring).
+      executor: the ingest dispatch seam (DESIGN.md §2.8/§2.9). ``None``
+        builds the plain ``search.streaming.StreamIngestExecutor`` bound
+        to this engine's knobs. Pass an object with ``run_ingest`` (e.g. a
+        ``search.pipeline.HedgedExecutor`` wrapping several ingest
+        executors) to substitute it, or a callable — it receives the
+        default executor and returns the one to use, so a wrapper does not
+        need to re-derive the engine's bound statics.
     """
 
     def __init__(
@@ -164,6 +171,7 @@ class StreamSearchEngine:
         stream_chunk: int | None = None,
         quarantine: bool = True,
         debug_checks: bool | None = None,
+        executor=None,
     ):
         if variant not in MULTI_VARIANTS:
             raise ValueError(f"variant must be one of {MULTI_VARIANTS}")
@@ -213,6 +221,27 @@ class StreamSearchEngine:
             if ring_capacity is not None
             else None
         )
+        # The ingest dispatch seam: every round of device work the engine
+        # issues goes through self._executor.run_ingest (see the executor
+        # arg in the class docstring).
+        default_executor = StreamIngestExecutor(
+            self.queries_n, self.u, self.low,
+            length=self.length, window=self.window, variant=self.variant,
+            batch=self.batch, band_width=self.band_width,
+            chunk_lb=self.chunk_lb, backend=self.backend,
+            rows_per_step=self.rows_per_step, block_k=self.block_k,
+            row_block=self.row_block, quarantine=self.quarantine,
+        )
+        if executor is None:
+            executor = default_executor
+        elif callable(executor) and not hasattr(executor, "run_ingest"):
+            executor = executor(default_executor)
+        if not hasattr(executor, "run_ingest"):
+            raise guards.SearchInputError(
+                "executor must expose run_ingest (or be a factory that "
+                "returns one when called with the default executor)"
+            )
+        self._executor = executor
 
     # -- state ------------------------------------------------------------
     @property
@@ -525,20 +554,10 @@ class StreamSearchEngine:
             self._n_chunks += 1
             return
         offset = self._n_seen - tail_len  # stream coordinate of tail[0]
-
-        def dispatch():
-            return ingest_chunk(
-                self._tail, chunk, self.queries_n, self.u, self.low,
-                self._ub, self._best, offset,
-                length=self.length, window=self.window, variant=self.variant,
-                batch=self.batch, band_width=self.band_width,
-                chunk_lb=self.chunk_lb, backend=self.backend,
-                rows_per_step=self.rows_per_step, block_k=self.block_k,
-                row_block=self.row_block, pad_to=pad_to,
-                quarantine=self.quarantine, chunk_index=self._n_chunks,
-            )
-
-        self._tail, res = dispatch()
+        self._tail, res = self._executor.run_ingest(
+            self._tail, chunk, self._ub, self._best, offset,
+            pad_to=pad_to, chunk_index=self._n_chunks,
+        )
         if self.debug_checks:
             # Synchronous tripwire: a NaN must never reach the carried
             # incumbents (the quarantine exists to guarantee exactly this).

@@ -52,10 +52,14 @@ from typing import Callable
 import numpy as np
 
 from repro.core import guards
-from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.distributed.fault_tolerance import (
+    GUARD_ERRORS,
+    TRANSIENT,
+    DecorrelatedJitterBackoff,
+    StragglerMonitor,
+    WorkerHealth,
+)
 from repro.train import checkpoint as ckpt_lib
-
-_TRANSIENT = (RuntimeError, ValueError, OSError)
 
 
 class SearchSupervisor:
@@ -68,8 +72,21 @@ class SearchSupervisor:
         buffer.
       max_retries: consecutive transient failures tolerated per arrival.
       backoff: base retry sleep in seconds (doubles per consecutive retry).
+      jitter: decorrelate retry sleeps (``DecorrelatedJitterBackoff``,
+        seeded via ``$REPRO_FAULT_SEED``). Off by default — a single
+        supervised engine has no fleet to decorrelate from, and the
+        deterministic schedule keeps replay tests exact; turn it on when
+        many supervisors share a backend.
       keep: checkpoints retained on disk (older ones pruned).
       sleep: injection point for the backoff sleep (tests pass a recorder).
+      clock: injection point for latency measurement (tests pass a fake).
+      breaker_threshold, breaker_cooldown: the engine's dispatch circuit
+        breaker (``fault_tolerance.WorkerHealth``; DESIGN.md §2.9). With a
+        single engine there is nowhere to route *away* to, so an open
+        breaker sheds load in time instead of space: after the breaker
+        trips, the retry path waits out ``breaker_cooldown`` before the
+        half-open probe. ``health`` on the supervisor snapshots the state
+        for operators.
       async_ckpt: move checkpoint serialization off the ingest thread
         (``train.checkpoint.AsyncCheckpointer``); restore paths barrier on
         in-flight writes first. Call ``close()`` at shutdown to flush.
@@ -82,8 +99,12 @@ class SearchSupervisor:
         ckpt_every: int = 16,
         max_retries: int = 3,
         backoff: float = 0.05,
+        jitter: bool = False,
         keep: int = 3,
         sleep: Callable[[float], None] = time.sleep,
+        clock: Callable[[], float] = time.time,
+        breaker_threshold: int = 3,
+        breaker_cooldown: float = 1.0,
         async_ckpt: bool = False,
     ):
         if ckpt_every < 1:
@@ -95,9 +116,16 @@ class SearchSupervisor:
         self.ckpt_every = int(ckpt_every)
         self.max_retries = int(max_retries)
         self.backoff = float(backoff)
+        self.jitter = bool(jitter)
         self.keep = int(keep)
         self._sleep = sleep
+        self._clock = clock
         self.monitor = StragglerMonitor()
+        self.health = WorkerHealth(
+            breaker_threshold=breaker_threshold,
+            breaker_cooldown=breaker_cooldown, clock=clock,
+        )
+        self._backoffs = DecorrelatedJitterBackoff(self.backoff)
         self.restarts = 0
         self.chunks_done = 0          # arrivals fully absorbed
         self._pending: list = []      # arrivals since the last snapshot
@@ -188,13 +216,18 @@ class SearchSupervisor:
             try:
                 if fail_injector is not None:
                     fail_injector(self.chunks_done)
-                t0 = time.time()
+                self.health.acquire()
+                t0 = self._clock()
                 out = self.engine.ingest(chunk)
-                self.monitor.observe(self.chunks_done, time.time() - t0)
+                dt = self._clock() - t0
+                self.monitor.observe(self.chunks_done, dt)
+                self.health.observe(dt)
+                self._backoffs.reset()
                 break
-            except (guards.SearchInputError, guards.StreamStateError):
+            except GUARD_ERRORS:
                 raise  # caller bug: retrying identical bad input cannot help
-            except _TRANSIENT as e:
+            except TRANSIENT as e:
+                self.health.fail()
                 self.restarts += 1
                 retries += 1
                 if retries > self.max_retries:
@@ -202,7 +235,14 @@ class SearchSupervisor:
                         f"exceeded {self.max_retries} retries at arrival "
                         f"{self.chunks_done}"
                     ) from e
-                self._sleep(self.backoff * (2 ** (retries - 1)))
+                if self.jitter:
+                    self._sleep(self._backoffs.next())
+                else:
+                    self._sleep(self.backoff * (2 ** (retries - 1)))
+                if not self.health.ready():
+                    # Tripped breaker, single engine: shed load in time —
+                    # wait out the cooldown before the half-open probe.
+                    self._sleep(self.health.breaker.cooldown)
                 self._rollback()
         self._pending.append(chunk)
         self.chunks_done += 1

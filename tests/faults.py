@@ -24,6 +24,13 @@ Failure families, matching what a long-lived search service actually sees
     ``tests/test_resilient.py`` drives them; ``$REPRO_FAULT_SEED`` (see
     ``fault_seed``) varies the data so ``scripts/check.sh`` can run a
     seeded pass.
+  * **Stragglers on a fake timeline** — ``FakeClock`` is the injectable
+    deterministic clock every hedging/breaker test runs on;
+    ``ShardFaultInjector(slow_shards={...}, clock=...)`` makes chosen
+    shards *complete correctly but slowly* (advancing the fake clock, not
+    wall time), and ``SlowIngestExecutor`` is the streaming analogue for
+    ``serve.stream.StreamSearchEngine(executor=HedgedExecutor([...]))``.
+    ``tests/test_hedged.py`` drives both.
 """
 from __future__ import annotations
 
@@ -105,6 +112,24 @@ def adversarial_chunkings(n, length):
     ]
 
 
+class FakeClock:
+    """Deterministic clock for hedging/breaker tests (no wall time).
+
+    Call it like ``time.time``; ``advance(dt)`` moves the timeline. Inject
+    it as both the scheduler's ``clock`` and the injector's, so measured
+    attempt latencies are exactly the declared ones.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        self.now += float(dt)
+
+
 class ShardFaultInjector:
     """Wrap a resilient-search runner with declarative shard/range faults.
 
@@ -124,6 +149,11 @@ class ShardFaultInjector:
                            (``partial_best`` / ``partial_ub``) to its
                            exception, as a runner that crashed mid-range
                            would.
+      ``slow_shards``    — ``{shard_id: dt}`` with ``clock`` a
+                           ``FakeClock``: the shard completes *correctly*
+                           but advances the fake timeline by ``dt`` (a
+                           straggler, the hedging trigger). Every other
+                           call advances by ``base_dt``.
 
     Every call is recorded in ``calls`` as ``(shard, lo, hi, ok)``.
     """
@@ -137,6 +167,9 @@ class ShardFaultInjector:
         dead_ranges=(),
         fail_after=None,
         partial=None,
+        slow_shards=None,
+        clock=None,
+        base_dt: float = 1.0,
     ):
         self._runner = runner
         self.dead_shards = set(dead_shards)
@@ -145,6 +178,9 @@ class ShardFaultInjector:
         self.dead_ranges = set(dead_ranges)
         self.fail_after = dict(fail_after or {})
         self.partial = dict(partial or {})
+        self.slow_shards = dict(slow_shards or {})
+        self.clock = clock
+        self.base_dt = float(base_dt)
         self.calls = []
         self._per_shard = {}
 
@@ -175,7 +211,36 @@ class ShardFaultInjector:
             self.calls.append((shard, lo, hi, False))
             self._raise(RuntimeError(f"injected shard {shard} fault"), lo)
         out = self._runner(shard, lo, hi, ub)
+        if self.clock is not None:
+            self.clock.advance(self.slow_shards.get(shard, self.base_dt))
         self.calls.append((shard, lo, hi, True))
+        return out
+
+
+class SlowIngestExecutor:
+    """Streaming-seam proxy: correct ``run_ingest``, declared fake latency.
+
+    Wraps a ``search.streaming.StreamIngestExecutor`` (or anything with
+    ``run_ingest``) and advances a ``FakeClock`` by ``slow_dt`` on the call
+    indices in ``slow_at`` (0-based, counted per proxy) and ``base_dt``
+    otherwise — the straggler recipe for hedged streaming ingest. ``calls``
+    counts invocations so tests can assert which executor actually ran.
+    """
+
+    def __init__(self, executor, clock, base_dt=1.0, slow_dt=10.0,
+                 slow_at=()):
+        self._executor = executor
+        self.clock = clock
+        self.base_dt = float(base_dt)
+        self.slow_dt = float(slow_dt)
+        self.slow_at = set(int(i) for i in slow_at)
+        self.calls = 0
+
+    def run_ingest(self, *args, **kwargs):
+        i = self.calls
+        self.calls += 1
+        out = self._executor.run_ingest(*args, **kwargs)
+        self.clock.advance(self.slow_dt if i in self.slow_at else self.base_dt)
         return out
 
 

@@ -1,0 +1,648 @@
+"""Hedged dispatch and health-aware scheduling (DESIGN.md §2.9).
+
+The contracts under test:
+
+  * **Hedging never changes the answer** — with a deterministic
+    ``FakeClock``, a hedge that fires (straggler shard) and a hedge where
+    both attempts complete produce incumbents *bit-identical* to the
+    un-hedged run, including the quarantine count (the backup's windows
+    are never double-counted). Pinned on the jax and pallas_interpret
+    backends.
+  * **Hedging changes the latency** — a won hedge completes the
+    straggler's range at the backup's virtual finish time instead of
+    waiting out the soft ``timeout`` (so the straggler shard is not
+    struck), and ``hedge_max_inflight`` bounds the ladder.
+  * **Circuit breaker** — ``breaker_threshold`` consecutive failures
+    route subsequent ranges off the shard with zero further attempts on
+    it (a pause, not a verdict: ``failed_shards`` stays empty), and after
+    ``breaker_cooldown`` a half-open probe success puts it back.
+  * **Primitives** — ``CircuitBreaker`` state machine, ``hedge_race``
+    virtual-timeline adjudication, ``merge_states`` idempotence,
+    ``DecorrelatedJitterBackoff`` seeding.
+  * **Streaming seam** — a ``StreamSearchEngine`` built over a
+    ``HedgedExecutor`` of ingest executors serves bit-identical results.
+
+``$REPRO_FAULT_SEED`` (via ``faults.fault_seed``) varies the data draw
+for the seeded check.sh pass; every race here runs on the fake timeline,
+so the assertions are exact regardless of wall time.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import SearchInputError
+from repro.distributed.fault_tolerance import (
+    CircuitBreaker,
+    DecorrelatedJitterBackoff,
+    WorkerHealth,
+    hedge_race,
+)
+from repro.search import (
+    HedgedExecutor,
+    IncumbentState,
+    get_executor,
+    make_plan,
+    merge_states,
+    multi_query_search,
+    resilient_search,
+)
+from repro.search.pipeline import MULTI_VARIANTS
+from repro.serve import SearchSupervisor, StreamSearchEngine
+
+from faults import (
+    FakeClock,
+    FaultyEngine,
+    ShardFaultInjector,
+    SlowIngestExecutor,
+    plant_nonfinite,
+)
+from test_resilient import _mk, _real_runner
+
+
+# -- primitives -----------------------------------------------------------
+
+def test_circuit_breaker_state_machine():
+    clock = FakeClock()
+    br = CircuitBreaker(threshold=2, cooldown=5.0, clock=clock)
+    assert br.state == "closed" and br.ready()
+    br.record_failure()
+    assert br.state == "closed" and br.ready()  # 1 < threshold
+    br.record_failure()
+    assert br.state == "open" and br.trips == 1
+    assert not br.ready()  # cooldown not elapsed
+    clock.advance(5.0)
+    assert br.ready()  # cooled: eligible for one probe
+    br.acquire()
+    assert br.state == "half_open"
+    assert not br.ready()  # the probe slot is taken
+    br.record_failure()  # probe failed: straight back to open
+    assert br.state == "open" and br.trips == 2
+    clock.advance(5.0)
+    br.acquire()
+    br.record_success()
+    assert br.state == "closed" and br.ready()
+    assert br.consecutive_failures == 0 and br.failures == 3
+
+
+def test_circuit_breaker_success_resets_consecutive():
+    br = CircuitBreaker(threshold=3, cooldown=0.0, clock=FakeClock())
+    for _ in range(2):
+        br.record_failure()
+    br.record_success()
+    for _ in range(2):
+        br.record_failure()
+    assert br.state == "closed"  # never 3 *consecutive*
+
+
+def test_circuit_breaker_validates_knobs():
+    with pytest.raises(SearchInputError):
+        CircuitBreaker(threshold=0)
+    with pytest.raises(SearchInputError):
+        CircuitBreaker(cooldown=-1.0)
+
+
+def test_hedge_race_virtual_timeline():
+    # Primary took 50; delay 5; one fast backup (dt 1) finishes at 5+1=6.
+    clock = FakeClock()
+
+    def backup():
+        clock.advance(1.0)
+        return "b"
+
+    out = hedge_race(50.0, 5.0, iter([("x", backup)]), clock=clock)
+    assert out.won and out.launched == 1
+    assert out.effective_dt == 6.0
+    assert out.completions == (("x", "b", 1.0),)
+
+
+def test_hedge_race_ladder_and_inflight_cap():
+    clock = FakeClock()
+    ran = []
+
+    def mk(tag, dt):
+        def thunk():
+            ran.append(tag)
+            clock.advance(dt)
+            return tag
+        return tag, thunk
+
+    # Both backups slow: the ladder launches max_inflight=2 rungs (at 5 and
+    # 10 — nothing virtually finished by then), then stops; rung 3 (which
+    # would have won) is never reached.
+    out = hedge_race(
+        50.0, 5.0, iter([mk("a", 50.0), mk("b", 50.0), mk("c", 1.0)]),
+        clock=clock, max_inflight=2,
+    )
+    assert ran == ["a", "b"] and out.launched == 2
+    # a finishes at 5+50=55, b at 10+50=60: neither beats the primary's 50
+    assert not out.won and out.effective_dt == 50.0
+
+
+def test_hedge_race_stops_once_someone_finished():
+    clock = FakeClock()
+    ran = []
+
+    def mk(tag, dt):
+        def thunk():
+            ran.append(tag)
+            clock.advance(dt)
+            return tag
+        return tag, thunk
+
+    # Fast first backup finishes at 5+1=6 < second rung's launch time 10:
+    # the second backup is never launched.
+    out = hedge_race(
+        50.0, 5.0, iter([mk("a", 1.0), mk("b", 1.0)]),
+        clock=clock, max_inflight=4,
+    )
+    assert ran == ["a"] and out.launched == 1
+    assert out.won and out.effective_dt == 6.0
+
+
+def test_hedge_race_backup_failure_reported_not_fatal():
+    clock = FakeClock()
+    failed = []
+
+    def bad():
+        raise RuntimeError("backup down")
+
+    def good():
+        clock.advance(1.0)
+        return "ok"
+
+    out = hedge_race(
+        50.0, 5.0, iter([("bad", bad), ("good", good)]), clock=clock,
+        on_failure=lambda tag, e: failed.append(tag),
+    )
+    assert failed == ["bad"]
+    # The failed rung still occupied ladder slot 1; the good backup
+    # launched at 2*5=10 and finished at 11.
+    assert out.won and out.effective_dt == 11.0
+    assert out.completions[0][0] == "good"
+
+
+def test_merge_states_idempotent_and_strict():
+    a = IncumbentState(ub=jnp.asarray([1.0, 2.0, 3.0]),
+                       best=jnp.asarray([10, 20, 30]))
+    same = merge_states(a, a)  # duplicate completion: a no-op
+    assert np.array_equal(np.asarray(same.ub), np.asarray(a.ub))
+    assert np.array_equal(np.asarray(same.best), np.asarray(a.best))
+    b = IncumbentState(ub=jnp.asarray([0.5, 2.0, 9.0]),
+                       best=jnp.asarray([11, 21, 31]))
+    m = merge_states(a, b)
+    # strictly tighter wins; ties keep the first argument's achiever
+    assert np.asarray(m.ub).tolist() == [0.5, 2.0, 3.0]
+    assert np.asarray(m.best).tolist() == [11, 20, 30]
+
+
+def test_jitter_backoff_seeded_and_bounded(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULT_SEED", "13")
+    a = DecorrelatedJitterBackoff(0.01)
+    b = DecorrelatedJitterBackoff(0.01)
+    seq_a = [a.next() for _ in range(6)]
+    seq_b = [b.next() for _ in range(6)]
+    assert seq_a == seq_b  # same seed, same draw
+    assert all(0.01 <= s <= 0.01 * 16 for s in seq_a)  # [base, cap]
+    a.reset()
+    assert 0.01 <= a.next() < 0.03  # fresh episode: uniform(base, 3*base)
+    assert DecorrelatedJitterBackoff(0.0).next() == 0.0
+
+
+# -- resilient_search: hedging --------------------------------------------
+
+def _hedged_pair(backend, *, dirty=False, **kw):
+    """Run the same straggler scenario hedged and un-hedged; return both."""
+    ref, queries = _mk()
+    if dirty:
+        ref = plant_nonfinite(ref, [(100, 4, np.nan), (250, 2, np.inf)])
+    length, w = queries.shape[1], 5
+
+    def run(hedge):
+        clock = FakeClock()
+        inj = ShardFaultInjector(
+            _runner(ref, queries, length, w, backend),
+            slow_shards={1: 50.0}, clock=clock, base_dt=1.0,
+        )
+        res = resilient_search(
+            ref, queries, length, w, n_shards=3, runner=inj,
+            hedge=hedge, hedge_delay=5.0, timeout=10.0, max_retries=0,
+            backoff=0.0, sleep=lambda _t: None, clock=clock, **kw,
+        )
+        return res, inj
+
+    return (ref, queries, length, w), run(False), run(True)
+
+
+def _runner(ref, queries, length, w, backend):
+    """Like test_resilient._real_runner but with a selectable backend."""
+
+    def runner(shard, lo, hi, ub):
+        seg = jnp.asarray(ref[lo : hi + length - 1])
+        res = multi_query_search(
+            seg, jnp.asarray(queries), length, w, backend=backend,
+            ub_init=jnp.asarray(ub, jnp.float64),
+        )
+        s = np.asarray(res.best_start, np.int64)
+        return (
+            np.where(s >= 0, s + lo, -1),
+            np.asarray(res.best_dist, np.float64),
+            int(res.quarantined),
+        )
+
+    return runner
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas_interpret"])
+def test_hedge_win_is_bit_identical_and_skips_timeout(backend):
+    """The acceptance scenario: one straggler shard, deterministic clock.
+
+    The hedged run must (a) return bit-identical incumbents and quarantine
+    counts to the un-hedged run, (b) complete the straggler's range via a
+    won hedge (effective latency 5+1=6 < timeout 10) instead of waiting
+    out the soft timeout — the un-hedged run strikes shard 1 off
+    (max_retries=0), the hedged run keeps it.
+    """
+    _, (plain, _inj_p), (hedged, inj_h) = _hedged_pair(backend)
+    assert np.array_equal(hedged.best_start, plain.best_start)
+    assert np.array_equal(hedged.best_dist, plain.best_dist)  # bitwise
+    assert hedged.quarantined == plain.quarantined
+    assert hedged.coverage == 1.0 and plain.coverage == 1.0
+    assert hedged.hedges_launched == 1 and hedged.hedges_won == 1
+    assert plain.hedges_launched == 0 and plain.hedges_won == 0
+    # the un-hedged run burned the soft timeout and struck the straggler
+    assert plain.failed_shards == (1,)
+    assert hedged.failed_shards == ()
+    # the backup ran the same (lo, hi) range the straggler completed
+    straggler_ranges = [(lo, hi) for s, lo, hi, ok in inj_h.calls if s == 1]
+    backup = [c for c in inj_h.calls if c[0] != 1 and c[1:3] ==
+              straggler_ranges[0][0:2]]
+    assert backup, "hedge backup never ran the straggler's range"
+
+
+def test_hedge_duplicate_completion_folds_idempotently():
+    """Both attempts complete (the host emulation always completes the
+    primary): duplicate fold must not change counts or incumbents, dirty
+    data included."""
+    (ref, queries, length, w), (plain, _), (hedged, inj) = _hedged_pair(
+        "jax", dirty=True
+    )
+    base = multi_query_search(jnp.asarray(ref), jnp.asarray(queries),
+                              length, w, backend="jax")
+    assert np.array_equal(hedged.best_start, plain.best_start)
+    assert np.array_equal(hedged.best_dist, plain.best_dist)
+    assert np.array_equal(hedged.best_start, np.asarray(base.best_start))
+    # quarantine counted once despite two completions of the range
+    assert hedged.quarantined == int(base.quarantined) == plain.quarantined
+    # both the primary and the backup really completed (ok=True twice on
+    # the straggler's range)
+    lo = [c[1] for c in inj.calls if c[0] == 1][0]
+    oks = [c for c in inj.calls if c[1] == lo and c[3]]
+    assert len(oks) == 2
+
+
+def test_hedge_determinism_same_seed():
+    _, _, (h1, _) = _hedged_pair("jax")
+    _, _, (h2, _) = _hedged_pair("jax")
+    assert np.array_equal(h1.best_start, h2.best_start)
+    assert np.array_equal(h1.best_dist, h2.best_dist)
+    assert h1.attempts == h2.attempts
+    assert h1.hedges_launched == h2.hedges_launched
+    assert h1.hedges_won == h2.hedges_won
+    assert h1.latency == h2.latency
+
+
+def test_hedge_delay_derived_from_ewma():
+    """No explicit hedge_delay: the monitor's threshold x EWMA fires the
+    hedge once fast shards establish a baseline (shard 2 is the straggler
+    so ranges 0 and 1 seed the EWMA first)."""
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    clock = FakeClock()
+    inj = ShardFaultInjector(
+        _real_runner(ref, queries, length, w),
+        slow_shards={2: 50.0}, clock=clock, base_dt=1.0,
+    )
+    res = resilient_search(
+        ref, queries, length, w, n_shards=3, runner=inj,
+        hedge=True, backoff=0.0, sleep=lambda _t: None, clock=clock,
+    )
+    base = multi_query_search(jnp.asarray(ref), jnp.asarray(queries),
+                              length, w, backend="jax")
+    # EWMA after two fast ranges is 1.0 -> delay 3.0; dt 50 > 3 fires it.
+    assert res.hedges_launched >= 1 and res.hedges_won == 1
+    assert res.coverage == 1.0
+    assert np.array_equal(res.best_start, np.asarray(base.best_start))
+
+
+def test_hedge_first_attempt_has_no_baseline():
+    """Derived delay with no EWMA yet: the very first attempt can never
+    hedge, however slow (there is nothing to judge it against)."""
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    clock = FakeClock()
+    inj = ShardFaultInjector(
+        _real_runner(ref, queries, length, w),
+        slow_shards={0: 50.0}, clock=clock, base_dt=1.0,
+    )
+    res = resilient_search(
+        ref, queries, length, w, n_shards=3, runner=inj,
+        hedge=True, backoff=0.0, sleep=lambda _t: None, clock=clock,
+    )
+    assert res.hedges_launched == 0 and res.hedges_won == 0
+    assert res.coverage == 1.0
+
+
+def test_hedge_max_inflight_bounds_the_ladder():
+    """Two slow shards: with a ladder depth of 1 the single backup is also
+    a straggler and the hedge cannot win; depth 2 reaches the fast shard."""
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+
+    def run(depth):
+        clock = FakeClock()
+        inj = ShardFaultInjector(
+            _real_runner(ref, queries, length, w),
+            slow_shards={0: 50.0, 1: 50.0}, clock=clock, base_dt=1.0,
+        )
+        return resilient_search(
+            ref, queries, length, w, n_shards=3, runner=inj,
+            hedge=True, hedge_delay=5.0, hedge_max_inflight=depth,
+            backoff=0.0, sleep=lambda _t: None, clock=clock,
+        )
+
+    shallow = run(1)
+    deep = run(2)
+    # Both slow shards' ranges hedge (dt 50 > delay 5). At depth 1 the
+    # single backup rung is the *other* slow shard for range 0 (id order,
+    # no baseline yet) and slow shard 0 for range 1 — no race is won.
+    assert shallow.hedges_launched == 2 and shallow.hedges_won == 0
+    # Depth 2 reaches fast shard 2 on range 0's rung 2 (finishes at
+    # 10+1=11 < 50); by range 1 the EWMA marks shard 0 a straggler, so
+    # shard 2 is rung 1 there and wins again.
+    assert deep.hedges_launched == 3 and deep.hedges_won == 2
+    assert np.array_equal(shallow.best_start, deep.best_start)
+    assert np.array_equal(shallow.best_dist, deep.best_dist)
+
+
+# -- resilient_search: circuit breaker ------------------------------------
+
+def test_breaker_routes_ranges_off_tripped_shard():
+    """The acceptance scenario: shard 0 dead, breaker_threshold=2 with a
+    generous retry budget. Two failures open the breaker; every later
+    range assigned to shard 0 is rerouted at pop time with ZERO further
+    attempts on it, and the shard is never marked failed."""
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    clock = FakeClock()
+    inj = ShardFaultInjector(
+        _real_runner(ref, queries, length, w),
+        dead_shards={0}, clock=clock,
+    )
+    res = resilient_search(
+        ref, queries, length, w, n_shards=2, n_ranges=6, runner=inj,
+        max_retries=5, breaker_threshold=2, breaker_cooldown=1000.0,
+        backoff=0.0, sleep=lambda _t: None, clock=clock,
+    )
+    base = multi_query_search(jnp.asarray(ref), jnp.asarray(queries),
+                              length, w, backend="jax")
+    shard0_calls = [c for c in inj.calls if c[0] == 0]
+    assert len(shard0_calls) == 2  # exactly breaker_threshold, then routed off
+    assert res.failed_shards == ()  # a pause, not a verdict
+    assert res.coverage == 1.0
+    # range 0 rerouted mid-retry + ranges 2 and 4 rerouted at pop time
+    assert res.reassignments == 3
+    assert np.array_equal(res.best_start, np.asarray(base.best_start))
+    health0 = res.shard_health[0]
+    assert health0.state == "open" and health0.trips == 1
+    assert health0.consecutive_failures == 2
+
+
+def test_breaker_half_open_probe_recovers_shard():
+    """A shard that fails twice then heals: once the cooldown elapses on
+    the fake clock, the next range probes it half-open, succeeds, and the
+    breaker closes."""
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    clock = FakeClock()
+    real = _real_runner(ref, queries, length, w)
+    fails = {"n": 2}
+
+    def flaky(shard, lo, hi, ub):
+        if shard == 0 and fails["n"] > 0:
+            fails["n"] -= 1
+            raise RuntimeError("shard 0 hiccup")
+        out = real(shard, lo, hi, ub)
+        clock.advance(1.0)
+        return out
+
+    calls = []
+
+    def recorder(shard, lo, hi, ub):
+        out = flaky(shard, lo, hi, ub)
+        calls.append(shard)
+        return out
+
+    res = resilient_search(
+        ref, queries, length, w, n_shards=2, n_ranges=6, runner=recorder,
+        max_retries=5, breaker_threshold=2, breaker_cooldown=2.0,
+        backoff=0.0, sleep=lambda _t: None, clock=clock,
+    )
+    assert res.coverage == 1.0 and res.failed_shards == ()
+    # shard 0 came back: while the breaker cooled, its ranges rerouted to
+    # shard 1; once the fake clock passed the cooldown (t=2), the next
+    # shard-0 range ran there as the half-open probe and succeeded
+    assert calls.count(0) == 1
+    assert res.shard_health[0].state == "closed"
+    assert res.shard_health[0].trips == 1
+
+
+def test_hedge_backups_avoid_tripped_shards():
+    """Hedge routing composes with the breaker: the backup ladder skips a
+    shard whose breaker is open, even if it is next in id order."""
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    clock = FakeClock()
+    inj = ShardFaultInjector(
+        _real_runner(ref, queries, length, w),
+        dead_shards={1}, slow_shards={2: 50.0}, clock=clock,
+    )
+    res = resilient_search(
+        ref, queries, length, w, n_shards=4, runner=inj,
+        hedge=True, hedge_delay=5.0, max_retries=5,
+        breaker_threshold=2, breaker_cooldown=1000.0,
+        backoff=0.0, sleep=lambda _t: None, clock=clock,
+    )
+    assert res.coverage == 1.0
+    assert res.hedges_won >= 1
+    # shard 1's breaker opened before the straggler's hedge; no hedge
+    # backup may have landed on it (its only calls are its own 2 failures)
+    shard1 = [c for c in inj.calls if c[0] == 1]
+    assert len(shard1) == 2 and not any(ok for *_x, ok in shard1)
+
+
+def test_seeded_straggler_plus_dead_shard():
+    """The check.sh seeded-scenario recipe: one straggler AND one dead
+    shard under $REPRO_FAULT_SEED. Hedging and recovery compose; results
+    stay exact with full coverage."""
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    clock = FakeClock()
+    inj = ShardFaultInjector(
+        _real_runner(ref, queries, length, w),
+        dead_shards={3}, slow_shards={1: 50.0}, clock=clock, base_dt=1.0,
+    )
+    res = resilient_search(
+        ref, queries, length, w, n_shards=4, runner=inj,
+        hedge=True, hedge_delay=5.0, max_retries=1,
+        backoff=0.0, sleep=lambda _t: None, clock=clock,
+    )
+    base = multi_query_search(jnp.asarray(ref), jnp.asarray(queries),
+                              length, w, backend="jax")
+    assert res.coverage == 1.0
+    assert res.failed_shards == (3,)
+    assert res.hedges_won >= 1
+    assert np.array_equal(res.best_start, np.asarray(base.best_start))
+    np.testing.assert_allclose(res.best_dist, np.asarray(base.best_dist),
+                               rtol=2e-5)
+
+
+# -- HedgedExecutor on the run_range seam ---------------------------------
+
+class _SlowRangeExecutor:
+    """run_range proxy with declared fake latency (straggler recipe)."""
+
+    def __init__(self, executor, clock, dt):
+        self._executor = executor
+        self.clock = clock
+        self.dt = float(dt)
+        self.calls = 0
+
+    def run_range(self, plan, state, lo, hi):
+        self.calls += 1
+        out = self._executor.run_range(plan, state, lo, hi)
+        self.clock.advance(self.dt)
+        return out
+
+
+def test_hedged_executor_run_range_parity():
+    """HedgedExecutor over two real executors: identical RangeResult state
+    to the plain executor, with the race won by the fast wrapper."""
+    ref, queries = _mk()
+    length, w = queries.shape[1], 5
+    plan = make_plan(length=length, window=w, backend="jax",
+                     allowed_variants=MULTI_VARIANTS)
+    base_exec = get_executor(plan, jnp.asarray(ref), jnp.asarray(queries))
+    clock = FakeClock()
+    slow = _SlowRangeExecutor(base_exec, clock, 50.0)
+    fast = _SlowRangeExecutor(base_exec, clock, 1.0)
+    hedged = HedgedExecutor([slow, fast], hedge_delay=5.0, clock=clock)
+
+    nq = queries.shape[0]
+    state0 = IncumbentState(ub=jnp.full((nq,), jnp.inf, jnp.float64),
+                            best=jnp.full((nq,), -1, jnp.int64))
+    n_win = len(ref) - length + 1
+    rr_plain = base_exec.run_range(plan, state0, 0, n_win)
+    rr_hedged = hedged.run_range(plan, state0, 0, n_win)
+    assert np.array_equal(np.asarray(rr_hedged.state.ub),
+                          np.asarray(rr_plain.state.ub))
+    assert np.array_equal(np.asarray(rr_hedged.state.best),
+                          np.asarray(rr_plain.state.best))
+    assert rr_hedged.quarantined == rr_plain.quarantined
+    assert hedged.hedges_launched == 1 and hedged.hedges_won == 1
+    assert slow.calls == 1 and fast.calls == 1
+    assert hedged.last_effective_dt == 6.0  # 1*delay + backup dt
+
+
+def test_hedged_executor_validates_knobs():
+    with pytest.raises(SearchInputError):
+        HedgedExecutor([])
+    with pytest.raises(SearchInputError):
+        HedgedExecutor([object()], hedge_max_inflight=0)
+
+
+# -- streaming through the hedged seam ------------------------------------
+
+def test_streaming_hedged_executor_bit_identical():
+    """StreamSearchEngine(executor=HedgedExecutor([...])): same stream,
+    same chunking, bit-identical incumbents and counters to the plain
+    engine — with the hedge demonstrably firing on an injected straggler
+    ingest."""
+    ref, queries = _mk(n_ref=500)
+    length, w = queries.shape[1], 5
+    dirty = plant_nonfinite(ref, [(200, 3, np.nan)])
+    clock = FakeClock()
+    captured = {}
+
+    def factory(default):
+        slow = SlowIngestExecutor(default, clock, base_dt=1.0,
+                                  slow_dt=50.0, slow_at={2})
+        fast = SlowIngestExecutor(default, clock, base_dt=1.0)
+        hedged = HedgedExecutor([slow, fast], hedge_delay=5.0, clock=clock)
+        captured["hedged"] = hedged
+        captured["fast"] = fast
+        return hedged
+
+    eng_plain = StreamSearchEngine(jnp.asarray(queries), length=length,
+                                   window=w, stream_chunk=64)
+    eng_hedged = StreamSearchEngine(jnp.asarray(queries), length=length,
+                                    window=w, stream_chunk=64,
+                                    executor=factory)
+    for pos in range(0, len(dirty), 80):
+        eng_plain.ingest(dirty[pos : pos + 80])
+        eng_hedged.ingest(dirty[pos : pos + 80])
+    assert captured["hedged"].hedges_won == 1
+    assert captured["fast"].calls >= 1
+    sp, dp = eng_plain.best()
+    sh, dh = eng_hedged.best()
+    assert np.array_equal(np.asarray(sh), np.asarray(sp))
+    assert np.array_equal(np.asarray(dh), np.asarray(dp))  # bitwise
+    assert eng_hedged.quarantined_windows == eng_plain.quarantined_windows
+    assert eng_hedged.rounds == eng_plain.rounds
+    assert eng_hedged.lanes == eng_plain.lanes
+
+
+def test_stream_engine_rejects_bad_executor():
+    _, queries = _mk()
+    length, w = queries.shape[1], 5
+    with pytest.raises(SearchInputError):
+        StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                           executor=object())
+
+
+# -- supervisor health ----------------------------------------------------
+
+def test_supervisor_breaker_sheds_load_in_time(tmp_path):
+    """With a single engine there is nowhere to route away to: a tripped
+    breaker waits out its cooldown (one extra recorded sleep) before the
+    half-open probe, then closes on success."""
+    _, queries = _mk()
+    length, w = queries.shape[1], 5
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             stream_chunk=64)
+    faulty = FaultyEngine(eng, fail_at={0, 1})
+    sleeps = []
+    clock = FakeClock()
+    sup = SearchSupervisor(faulty, str(tmp_path),
+                           max_retries=5, backoff=0.01,
+                           breaker_threshold=2, breaker_cooldown=7.0,
+                           sleep=sleeps.append, clock=clock)
+    sup.ingest(np.ones(100))
+    # fail 1: plain backoff; fail 2: backoff, breaker opens -> cooldown
+    assert sleeps == [0.01, 0.02, 7.0]
+    assert sup.restarts == 2
+    assert sup.health.snapshot().state == "closed"  # probe succeeded
+    assert sup.health.snapshot().trips == 1
+
+
+def test_supervisor_jitter_opt_in(tmp_path):
+    _, queries = _mk()
+    length, w = queries.shape[1], 5
+    eng = StreamSearchEngine(jnp.asarray(queries), length=length, window=w,
+                             stream_chunk=64)
+    faulty = FaultyEngine(eng, fail_at={0})
+    sleeps = []
+    sup = SearchSupervisor(faulty, str(tmp_path), backoff=0.01, jitter=True,
+                           sleep=sleeps.append)
+    sup.ingest(np.ones(100))
+    assert len(sleeps) == 1 and 0.01 <= sleeps[0] < 0.03
