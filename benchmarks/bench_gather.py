@@ -1,0 +1,163 @@
+"""search/gather: fused in-kernel window gather vs the pre-gathered slab.
+
+The tentpole micro-bench for the §2.10 fused normalization path: the same
+``subsequence_search`` workload run with ``gather="fused"`` (the DTW stage
+slices + z-normalizes each candidate from the resident reference, O(N + K)
+working set) against ``gather="slab"`` (the retired default: an O(K·l)
+normalized window matrix — and, for the eapruned host driver, an equally
+sized cb slab — materialized host-side before every dispatch). The bench
+asserts ``best_start`` parity (and ``best_dist`` to float tolerance) before
+timing, so the speedup row never reports a wrong answer faster.
+
+The headline structural win is the candidate working set, carried as derived
+fields of every speedup row:
+
+  ``cand_bytes_slab``  — bytes of candidate slab the slab arm materializes
+                         per dispatch: ``lanes x l x 4`` for the normalized
+                         windows, doubled for the host driver's cb slab.
+  ``cand_bytes_fused`` — bytes the fused arm ships per lane instead:
+                         ``lanes x 12`` (int32 start + f32 mu + f32 sigma).
+  ``cand_bytes_ratio`` — their ratio; at l=128 the host/eapruned pair is
+                         ``2*128*4 / 12 = 85.3x`` (the slab_ratio gate in
+                         bench_diff asserts >= l/2 = 64x).
+  ``ref_bytes``        — the O(N) resident reference the fused arm reads
+                         from, reported separately: it is paid once per
+                         search, not per lane, and the slab arm reads the
+                         same reference to build its slabs.
+
+Wall-clock is the secondary signal (the two arms do identical DP work, so
+CPU times sit near 1.0x): the ``speedup=`` field rides the same paired
+protocol as ``bench_persistent`` (arms alternate so both see the same
+background load; best-of vs best-of, with the median of per-pair ratios
+alongside) and bench_diff's ±20% guard keeps the fused default honest.
+
+Both drivers pair up: ``host`` (per-round ``(Q x batch)`` slabs vs fused
+rounds) and ``persistent`` (the whole best-first order as ONE O(N·l) slab —
+the memory cliff the fused sweep removes — vs the addressed fused sweep).
+``jax`` is the honest CPU comparison; ``pallas_interpret`` validates the
+exact kernel programs under the interpreter.
+
+CSV rows (name,us_per_call,derived):
+  search/gather/l{l}/r{ratio}/{backend}/{rounds}/slab    — best-of us
+  search/gather/l{l}/r{ratio}/{backend}/{rounds}/fused   — best-of us
+  search/gather/l{l}/r{ratio}/{backend}/{rounds}/speedup — best-of ratio
+      (+ ``speedup=``, ``median_pair_ratio=``, ``cand_bytes_*=``,
+      ``ref_bytes=``)
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import make_dataset, make_queries
+from repro.search import subsequence_search
+
+FUSED_LANE_BYTES = 12  # int32 start + f32 mu + f32 sigma per candidate lane
+
+
+def _cand_bytes(rounds: str, lanes: int, length: int, batch: int) -> tuple[int, int]:
+    """(slab_bytes, fused_bytes) of candidate working set per search.
+
+    Host driver: every round re-materializes a ``batch x l`` normalized
+    window slab plus the cb slab of the same shape (eapruned), so the slab
+    bytes scale with the lanes actually submitted. Persistent driver: one
+    ``k_pad x l`` slab for the whole best-first order up front, regardless
+    of how early the sweep's LB gate stops — that is the O(N·l) cliff.
+    """
+    if rounds == "persistent":
+        slab = lanes * length * 4
+    else:
+        slab = lanes * length * 4 * 2  # cand + cb slabs per round
+    return slab, lanes * FUSED_LANE_BYTES
+
+
+def run(
+    ref_len: int = 20_000,
+    length: int = 128,
+    window_ratio: float = 0.1,
+    batch: int = 64,
+    block_k: int = 16,
+    pairs: int = 7,
+    backends=("jax", "pallas_interpret"),
+    drivers=("host", "persistent"),
+    dataset: str = "ECG",
+):
+    w = max(int(length * window_ratio), 1)
+    ref = jnp.asarray(make_dataset(dataset, ref_len, seed=0), jnp.float32)
+    q = jnp.asarray(make_queries(dataset, 1, length, seed=1)[0], jnp.float32)
+    n_win = ref_len - length + 1
+
+    rows = []
+    for backend in backends:
+        for rounds in drivers:
+            def arm(gather):
+                return subsequence_search(
+                    ref, q, length=length, window=w, batch=batch,
+                    backend=backend, rounds=rounds, block_k=block_k,
+                    gather=gather,
+                )
+
+            # warmup/compile both arms, then result parity before timing
+            f = arm("fused")
+            s = arm("slab")
+            jax.block_until_ready(f.best_dist)
+            agree = int(f.best_start) == int(s.best_start)
+            rel = abs(float(f.best_dist) - float(s.best_dist)) / max(
+                abs(float(s.best_dist)), 1e-12
+            )
+            if not agree or rel > 1e-5:
+                raise RuntimeError(
+                    f"fused/slab parity broken on {backend}/{rounds}: "
+                    f"starts {int(f.best_start)} vs {int(s.best_start)}, "
+                    f"rel dist err {rel:.2e}"
+                )
+
+            # the persistent slab covers the padded best-first order; the
+            # host slabs cover the lanes the rounds actually submitted
+            if rounds == "persistent":
+                lanes = -(-n_win // block_k) * block_k
+            else:
+                lanes = int(s.lanes)
+            slab_b, fused_b = _cand_bytes(rounds, lanes, length, batch)
+
+            t_slab, t_fused, ratios = [], [], []
+            for _ in range(pairs):
+                t0 = time.time()
+                jax.block_until_ready(arm("slab").best_dist)
+                ts = time.time() - t0
+                t0 = time.time()
+                jax.block_until_ready(arm("fused").best_dist)
+                tf = time.time() - t0
+                t_slab.append(ts)
+                t_fused.append(tf)
+                ratios.append(ts / tf if tf > 0 else 0.0)
+            median_ratio = statistics.median(ratios)
+            ratio = min(t_slab) / min(t_fused) if min(t_fused) > 0 else 0.0
+
+            tag = f"search/gather/l{length}/r{window_ratio}/{backend}/{rounds}"
+            rows += [
+                (f"{tag}/slab", min(t_slab) * 1e6,
+                 f"agree={agree};cand_bytes={slab_b}"),
+                (f"{tag}/fused", min(t_fused) * 1e6,
+                 f"agree={agree};rel_dist_err={rel:.2e};"
+                 f"cand_bytes={fused_b}"),
+                (f"{tag}/speedup", ratio,
+                 f"speedup={ratio:.4f};median_pair_ratio={median_ratio:.4f};"
+                 f"cand_bytes_slab={slab_b};cand_bytes_fused={fused_b};"
+                 f"cand_bytes_ratio={slab_b / fused_b:.1f};"
+                 f"ref_bytes={ref_len * 4};lanes={lanes};pairs={pairs}"),
+            ]
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

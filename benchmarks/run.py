@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV:
                      straggler on a virtual clock (DESIGN.md §2.9)
   * search/persistent/* — one-launch persistent sweep vs host round driver
                      (both backends; dispatch counts in the speedup rows)
+  * search/gather/* — fused in-kernel window gather + z-normalization vs
+                     the pre-gathered O(K·l) candidate slab (§2.10); the
+                     speedup rows carry the working-set byte accounting
   * search/pipeline/* — frontend wrapper (validation + plan resolution)
                      vs the bare jitted pipeline core; the overhead ratio
                      must stay ≈1 (the §2.8 refactor's dispatch guard)
@@ -66,6 +69,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_dtw_micro,
+        bench_gather,
         bench_kernels,
         bench_multiq,
         bench_persistent,
@@ -82,8 +86,8 @@ def main() -> None:
     artifact = {
         "meta": {"quick": bool(args.quick), "backend": jax.default_backend()},
         "suites": [], "multiq": [], "stream": [], "robustness": [],
-        "resilient": [], "hedged": [], "persistent": [], "pipeline": [],
-        "dtw": [], "roofline": [],
+        "resilient": [], "hedged": [], "persistent": [], "gather": [],
+        "pipeline": [], "dtw": [], "roofline": [],
     }
 
     print("name,us_per_call,derived")
@@ -152,6 +156,17 @@ def main() -> None:
     for name, us, derived in ps_rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
         artifact["persistent"].append(_suite_record(name, us, derived))
+
+    if args.quick:
+        # identical DP work on both arms (the slab is the only difference),
+        # so the wall-clock ratio needs extra pairs on a noisy box; the
+        # byte-accounting fields are exact at any scale
+        gt_rows = bench_gather.run(ref_len=4_000, pairs=9)
+    else:
+        gt_rows = bench_gather.run()
+    for name, us, derived in gt_rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+        artifact["gather"].append(_suite_record(name, us, derived))
 
     if args.quick:
         # the two arms are one wrapper apart, so the overhead ratio sits

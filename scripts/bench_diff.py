@@ -24,7 +24,7 @@ import tempfile
 
 SECTIONS = (
     "suites", "multiq", "stream", "robustness", "resilient", "hedged",
-    "persistent", "pipeline", "dtw",
+    "persistent", "gather", "pipeline", "dtw",
 )
 
 

@@ -22,7 +22,7 @@ echo "== kernel program on CPU (pallas_interpret) =="
 REPRO_DTW_BACKEND=pallas_interpret python -m pytest -x -q \
     tests/test_backend.py tests/test_multi_query.py tests/test_streaming.py \
     tests/test_persistent.py tests/test_robustness.py tests/test_resilient.py \
-    tests/test_hedged.py
+    tests/test_hedged.py tests/test_fused_gather.py
 
 echo "== seeded fault pass (REPRO_FAULT_SEED=7, pallas_interpret) =="
 # Re-run the fault-injection suites on a different data draw: recovery,
@@ -30,7 +30,8 @@ echo "== seeded fault pass (REPRO_FAULT_SEED=7, pallas_interpret) =="
 # dead shard) must not depend on one lucky series.
 REPRO_FAULT_SEED=7 REPRO_DTW_BACKEND=pallas_interpret python -m pytest -x -q \
     tests/test_robustness.py tests/test_resilient.py \
-    tests/test_pipeline_parity.py tests/test_hedged.py
+    tests/test_pipeline_parity.py tests/test_hedged.py \
+    tests/test_fused_gather.py
 
 echo "== benchmark smoke (--quick) + SPEEDUP regression gate =="
 # One quick bench run serves both purposes: diff its artifact against the

@@ -16,6 +16,13 @@ fails the check when the import graph regresses:
   3. **The serving layer binds to frontends, not siblings' privates** —
      ``serve/*`` may import any ``search.*`` public surface but also must
      not touch ``repro.kernels`` directly.
+  4. **The O(K·l) candidate slab stays retired** (DESIGN.md §2.10) —
+     ``gather_norm_windows`` is the pre-gathered comparison baseline; only
+     its sanctioned homes (``search.znorm`` itself, ``search.pipeline``'s
+     baseline cores / explicit ``gather="slab"`` arms, and the paired
+     gather benchmark) may name it. A new import elsewhere is the O(N·l)
+     working set sneaking back in — use ``core.common.norm_window_slice``
+     or the fused batch primitives instead.
 
 Pure-AST: no imports are executed, so the lint is safe to run before the
 package itself is importable (and costs milliseconds in check.sh).
@@ -35,6 +42,14 @@ FRONTENDS = {
     for m in ("subsequence", "multi", "streaming", "distributed", "resilient")
 }
 KERNELS = f"{PKG}.kernels"
+
+# Rule 4: the O(K·l) slab gather may only be named here (DESIGN.md §2.10).
+SLAB_FN = "gather_norm_windows"
+SLAB_SANCTIONED = {
+    f"{PKG}.search.znorm",     # definition + docstring contract
+    f"{PKG}.search.pipeline",  # baseline cores + explicit gather="slab" arms
+    f"{PKG}.search",           # package re-export (public surface)
+}
 
 
 def module_name(path: Path) -> str:
@@ -62,6 +77,18 @@ def imported_modules(path: Path, mod: str):
             yield node.lineno, name
 
 
+def slab_references(path: Path):
+    """Yield linenos where ``gather_norm_windows`` is imported or accessed."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name == SLAB_FN:
+                    yield node.lineno
+        elif isinstance(node, ast.Attribute) and node.attr == SLAB_FN:
+            yield node.lineno
+
+
 def check() -> list[str]:
     errors = []
     for path in sorted((SRC / PKG).rglob("*.py")):
@@ -69,6 +96,15 @@ def check() -> list[str]:
         in_search = mod.startswith(f"{PKG}.search")
         in_serve = mod.startswith(f"{PKG}.serve")
         is_frontend = mod in FRONTENDS
+        if mod not in SLAB_SANCTIONED:
+            for lineno in slab_references(path):
+                errors.append(
+                    f"{path.relative_to(REPO)}:{lineno}: {mod} references "
+                    f"{SLAB_FN} — the O(K·l) slab is retired outside its "
+                    "sanctioned baselines (DESIGN.md §2.10); use "
+                    "core.common.norm_window_slice or the fused batch "
+                    "primitives"
+                )
         for lineno, target in imported_modules(path, mod):
             loc = f"{path.relative_to(REPO)}:{lineno}"
             if (in_search or in_serve) and (

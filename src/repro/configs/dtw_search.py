@@ -28,9 +28,22 @@ rules):
                       collapses the whole sweep into a single launch with
                       the incumbent carried across candidate blocks on
                       device (SMEM on the Pallas backend) — O(1) dispatches,
-                      block-granular ``ub`` tightening, at the cost of
-                      gathering the full window matrix up front (see
+                      block-granular ``ub`` tightening (see
                       ``search.subsequence`` for the full trade-off).
+
+Candidate materialization knobs (DESIGN.md §2.10):
+
+  ``gather``        — ``"fused"`` (default): the DTW stage receives the raw
+                      reference once plus per-lane ``(start, mu, sigma)``
+                      and slices + z-normalizes each candidate inside the
+                      batch primitive / Pallas kernel — O(N + K) working
+                      set. ``"slab"``: pre-gather the O(K·l) normalized
+                      window matrix host-side (the retired default, kept as
+                      a comparison arm). Results are identical.
+  ``slab_budget``   — optional byte cap on any host-side candidate slab;
+                      a ``"slab"`` dispatch that would exceed it raises
+                      ``SearchInputError`` at trace time instead of
+                      allocating (fused paths never materialize one).
 
 Multi-query serving knobs (``search.multi.multi_query_search``):
 
@@ -126,6 +139,8 @@ class SearchConfig:
     block_k: int = 8                 # Pallas candidate lanes per block
     row_block: int = 128             # Pallas rows per sequential grid step
     rounds: str = "host"             # round driver: "host" | "persistent"
+    gather: str = "fused"            # candidate materialization (§2.10)
+    slab_budget: int | None = None   # byte cap on host-side slabs (§2.10)
     n_queries: int = 8               # multi-query workload size (search.multi)
     warm_start: int = 0              # multi-query incumbent-seeding prepass
     stream_chunk: int = 8192         # samples per streaming ingest (serve.stream)
@@ -172,6 +187,8 @@ class SearchConfig:
             rounds=self.rounds,
             quarantine=self.quarantine,
             warm_start=self.warm_start,
+            gather=self.gather,
+            slab_budget=self.slab_budget,
         )
         kw.update(overrides)
         return make_plan(**kw)

@@ -42,6 +42,18 @@ two implementations:
 queries always take the ``jax`` path. ``with_info=True`` additionally
 returns per-lane ``EAInfo`` pruning counters; the default is counter-free —
 search fast rounds pay no bookkeeping.
+
+Fused-gather primitives (DESIGN.md §2.10, ``gather="fused"`` — the search
+default): ``ea_pruned_dtw_multi_batch_fused`` and
+``ea_pruned_dtw_persistent_fused`` take the raw reference series plus
+per-lane starts and the O(N) ``(mu, sigma)`` stats tables instead of a
+pre-gathered ``(Q, K, m)`` window slab. On the Pallas backends the slicing
+and z-normalization happen inside the kernel; on the jax backend the same
+fusion is a vmapped ``dynamic_slice`` + normalize inlined into the round
+body (and, for persistent mode, into each ``while_loop`` block step — an
+O(N + block_k·m) working set matching the kernel, where the slab form
+materialized all O(K·m) up front). Values are bit-identical to the slab
+form: same copies, same ``clamp_sigma``, same op order.
 """
 from __future__ import annotations
 
@@ -53,9 +65,27 @@ import jax.numpy as jnp
 
 from repro.core import guards
 from repro.core.backend import resolve_backend
-from repro.core.common import DEAD_LANE_UB, pad_lanes_to_blocks
+from repro.core.common import (
+    DEAD_LANE_UB,
+    clamp_sigma,
+    pad_lanes_to_blocks,
+)
 from repro.core.ea_pruned_dtw import EAInfo, ea_pruned_dtw_banded
 from repro.core.lower_bounds import cascade_keogh_cumulative
+
+
+def _slice_norm(ref, starts, length, mu_l, sg_l):
+    """Fused normalize-on-slice of one lane set (``(K, length)``).
+
+    ``mu_l``/``sg_l`` are per-lane (already indexed by start, sigma
+    pre-clamped) — the trace-inlined form of ``common.norm_window_slice``
+    used inside round and while_loop bodies, where the stats lookups have
+    already been hoisted.
+    """
+    win = jax.vmap(
+        lambda s: jax.lax.dynamic_slice(ref, (s,), (length,))
+    )(starts)
+    return (win - mu_l[:, None]) / sg_l[:, None]
 
 
 def _kernel_ops():
@@ -261,6 +291,140 @@ def ea_pruned_dtw_multi_batch(
     return out
 
 
+@partial(
+    jax.jit,
+    static_argnames=(
+        "window", "length", "band_width", "rows_per_step", "with_info",
+        "use_cb",
+    ),
+)
+def _multi_jax_fused(
+    queries, ref, starts, mu_l, sg_l, ub, u, low, window, length,
+    band_width, rows_per_step, with_info, use_cb,
+):
+    """Fused-gather ``_multi_jax``: slice + normalize inside the round body.
+
+    Per query, the candidate tile is built by vmapped ``dynamic_slice`` of
+    the resident reference and normalized in place of arriving as a
+    pre-gathered operand; with ``use_cb`` the cb suffix is computed from the
+    just-built tile (per-lane sequential cumsum — bit-identical to the
+    gathered jax path). The CPU ``lax.map`` + dead-query ``cond`` structure
+    mirrors ``_multi_jax``, so a finished query skips its gather too.
+    """
+    ub_lanes = jnp.broadcast_to(jnp.asarray(ub), starts.shape)
+
+    def _mapped(fn, ops):
+        if with_info:
+            return jax.lax.map(lambda t: fn(*t), ops)
+        out_sd = jax.eval_shape(fn, *jax.tree.map(lambda x: x[0], ops))
+
+        def dead():
+            return jax.tree.map(
+                lambda sd: jnp.full(sd.shape, jnp.inf, sd.dtype), out_sd
+            )
+
+        return jax.lax.map(
+            lambda t: jax.lax.cond(
+                jnp.any(t[4] >= 0), lambda: fn(*t), dead
+            ),
+            ops,
+        )
+
+    def fn(q, sq, muq, sgq, us, uq, lowq):
+        c = _slice_norm(ref, sq, length, muq, sgq)
+        cb = None
+        if use_cb:
+            cb = jax.vmap(
+                lambda cc: cascade_keogh_cumulative(cc, uq, lowq)
+            )(c)
+        return _batch_jax(
+            q, c, us, window, band_width, cb, rows_per_step, with_info
+        )
+
+    ops_t = (queries, starts, mu_l, sg_l, ub_lanes, u, low)
+    if jax.default_backend() == "cpu":
+        return _mapped(fn, ops_t)
+    return jax.vmap(fn)(*ops_t)
+
+
+def ea_pruned_dtw_multi_batch_fused(
+    queries: jax.Array,
+    ref: jax.Array,
+    starts: jax.Array,
+    ub: jax.Array,
+    window: int,
+    mu: jax.Array,
+    sigma: jax.Array,
+    envelopes: tuple[jax.Array, jax.Array] | None = None,
+    band_width: int | None = None,
+    rows_per_step: int = 1,
+    backend: str | None = None,
+    block_k: int = 8,
+    row_block: int = 128,
+    with_info: bool = False,
+    ref_budget: int | None = None,
+):
+    """Fused-gather ``ea_pruned_dtw_multi_batch``: no candidate slab.
+
+    Candidate windows are described, not materialized: the raw (sanitized)
+    reference rides in once per dispatch and each lane carries
+    ``(start, mu, sigma)``. Slicing + z-normalization happen inside the
+    kernel (Pallas) or inside the jitted round body (jax) — results are
+    bit-identical to gathering with ``gather_norm_windows`` first, because
+    the copies, ``clamp_sigma``, and op order are the same.
+
+    Args (where they differ from ``ea_pruned_dtw_multi_batch``):
+      ref: ``(N,)`` raw (sanitized) reference series.
+      starts: ``(Q, K)`` int32 window start per lane.
+      mu, sigma: full ``(N_win,)`` per-window stats tables
+        (``znorm.window_stats``); indexed by ``starts`` here — ``sigma`` is
+        raw, the clamp is applied at this boundary.
+      envelopes: optional ``(u, low)`` pair of ``(Q, m)`` query envelopes —
+        enables UCR ``cb`` tightening, computed from the fused tile (the
+        Pallas round kernel builds it in-kernel with a tree-order suffix
+        sum: the documented O(1)-ulp reformulation; the jax path is
+        bit-identical to the gathered jax path).
+      ref_budget: Pallas-only — VMEM byte budget for the reference operand
+        (above it the kernel DMA-streams windows from HBM).
+
+    Returns: as ``ea_pruned_dtw_multi_batch``.
+    """
+    if jnp.ndim(queries) != 2:
+        raise guards.SearchInputError(
+            "fused multi batch requires (Q, m) univariate queries"
+        )
+    length = int(queries.shape[1])
+    starts = jnp.asarray(starts, jnp.int32)
+    mu_l = jnp.asarray(mu)[starts]
+    sg_l = clamp_sigma(jnp.asarray(sigma))[starts]
+    use_cb = envelopes is not None
+    u, low = envelopes if use_cb else (None, None)
+    resolved = resolve_backend(backend)
+    if resolved == "jax":
+        nq, m = queries.shape
+        dt = queries.dtype
+        if u is None:
+            u_arr = jnp.zeros((nq, m), dt)
+            low_arr = jnp.zeros((nq, m), dt)
+        else:
+            u_arr, low_arr = jnp.asarray(u, dt), jnp.asarray(low, dt)
+        return _multi_jax_fused(
+            queries, ref, starts, mu_l, sg_l, ub, u_arr, low_arr, window,
+            length, band_width, rows_per_step, with_info, use_cb,
+        )
+    interpret = True if resolved == "pallas_interpret" else None
+    out = _kernel_ops().dtw_ea_multi_fused(
+        queries, ref, starts, mu_l, sg_l, ub, window, length,
+        u=u, low=low, use_cb=use_cb, band_width=band_width,
+        block_k=block_k, row_block=row_block, interpret=interpret,
+        with_info=with_info, ref_budget=ref_budget,
+    )
+    if with_info:
+        d, rows, cells = out
+        return d, EAInfo(rows=rows, cells=cells)
+    return out
+
+
 def block_sweep(cand, lb, starts, ub0, block_k, block_fn):
     """Best-first sweep over ``block_k``-lane candidate blocks, carried ub.
 
@@ -433,6 +597,170 @@ def ea_pruned_dtw_persistent(
         queries, candidates, lb, starts, ub_init, window, u=u, low=low,
         use_cb=use_cb, band_width=band_width, block_k=block_k,
         row_block=row_block, interpret=interpret,
+    )
+
+
+def block_sweep_fused(lb, starts, mu_l, sg_l, ub0, block_k, block_fn):
+    """``block_sweep`` without the candidate matrix: lanes are descriptors.
+
+    The while_loop state and stop condition are identical to
+    ``block_sweep``; the body slices the per-block ``(starts, mu, sigma)``
+    descriptors instead of a ``(K_pad, m)`` window matrix and hands them to
+    ``block_fn(starts_b, mu_b, sg_b, lb_b, ub)``, which materializes the
+    O(block_k · length) tile itself — the jax-backend analogue of the
+    persistent kernel's in-kernel gather. Nothing O(K·m) exists at any
+    point of the sweep.
+    """
+    k_pad = lb.shape[0]
+    n_blocks = k_pad // block_k
+
+    class St(NamedTuple):
+        b: jax.Array     # next block index
+        ub: jax.Array    # carried incumbent
+        best: jax.Array  # carried best start
+
+    def cond(st: St) -> jax.Array:
+        head = jax.lax.dynamic_slice(
+            lb, (jnp.minimum(st.b, n_blocks - 1) * block_k,), (1,)
+        )[0]
+        return jnp.logical_and(st.b < n_blocks, head < st.ub)
+
+    def body(st: St) -> St:
+        o = st.b * block_k
+        lbb = jax.lax.dynamic_slice(lb, (o,), (block_k,))
+        sb = jax.lax.dynamic_slice(starts, (o,), (block_k,))
+        mub = jax.lax.dynamic_slice(mu_l, (o,), (block_k,))
+        sgb = jax.lax.dynamic_slice(sg_l, (o,), (block_k,))
+        d = block_fn(sb, mub, sgb, lbb, st.ub)
+        d = jnp.where(jnp.isfinite(lbb), d, jnp.inf)  # padding lanes
+        j = jnp.argmin(d)
+        dmin = d[j]
+        improved = dmin < st.ub  # strict: ties keep the incumbent
+        return St(
+            b=st.b + 1,
+            ub=jnp.where(improved, dmin, st.ub),
+            best=jnp.where(improved, sb[j], st.best),
+        )
+
+    st0 = St(
+        b=jnp.asarray(0, jnp.int32),
+        ub=jnp.asarray(ub0),
+        best=jnp.asarray(-1, starts.dtype),
+    )
+    st = jax.lax.while_loop(cond, body, st0)
+    return st.ub, st.best, st.b
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "window", "length", "band_width", "rows_per_step", "block_k",
+        "use_cb",
+    ),
+)
+def _persistent_jax_fused(
+    queries, ref, lb, starts, mu_l, sg_l, ub_init, u, low, window, length,
+    band_width, rows_per_step, block_k, use_cb,
+):
+    """JAX-backend fused persistent sweep: gather per block, in the loop.
+
+    The slab form (``_persistent_jax``) receives the full candidate matrix
+    even though the sweep visits blocks sequentially; here each while_loop
+    step slices + normalizes only its own ``block_k`` windows out of the
+    resident reference — O(N + block_k·m) live at any point, matching the
+    fused kernel. Per-lane arithmetic is still ``_batch_jax``, so surviving
+    distances stay bit-equal to the slab form.
+    """
+
+    def one(q, lbq, sq, muq, sgq, ub0, uq, lowq):
+        def block_fn(sb, mub, sgb, lbb, ub):
+            c = _slice_norm(ref, sb, length, mub, sgb)
+            cb = None
+            if use_cb:
+                cb = cascade_keogh_cumulative(c, uq, lowq)
+            # Lane gating: a lane whose own bound reaches the incumbent is
+            # submitted dead (same sentinel the kernel writes).
+            ubl = jnp.where(lbb < ub, ub, DEAD_LANE_UB)
+            return _batch_jax(
+                q, c, ubl, window, band_width, cb, rows_per_step, False
+            )
+
+        return block_sweep_fused(
+            lbq, sq, muq, sgq, jnp.asarray(ub0, queries.dtype), block_k,
+            block_fn,
+        )
+
+    ops = (queries, lb, starts, mu_l, sg_l, ub_init, u, low)
+    if jax.default_backend() == "cpu":
+        # Per-query trip counts (see _multi_jax on why lax.map here).
+        return jax.lax.map(lambda t: one(*t), ops)
+    return jax.vmap(one)(*ops)
+
+
+def ea_pruned_dtw_persistent_fused(
+    queries: jax.Array,
+    ref: jax.Array,
+    lb: jax.Array,
+    starts: jax.Array,
+    ub_init: jax.Array,
+    window: int,
+    mu: jax.Array,
+    sigma: jax.Array,
+    envelopes: tuple[jax.Array, jax.Array] | None = None,
+    band_width: int | None = None,
+    rows_per_step: int = 1,
+    backend: str | None = None,
+    block_k: int = 8,
+    row_block: int = 128,
+    ref_budget: int | None = None,
+):
+    """Fused-gather persistent sweep: whole search, O(N + K) operands.
+
+    ``ea_pruned_dtw_persistent`` without the O(K·m) best-first window
+    matrix: lanes arrive as ``(start, lb)`` descriptors plus the O(N)
+    stats tables, and each visited block's tile is materialized inside the
+    sweep (in-kernel on Pallas, inside the while_loop body on jax). This is
+    the form that completes sweeps over references whose window slab could
+    never be allocated.
+
+    Args (where they differ from ``ea_pruned_dtw_persistent``):
+      ref: ``(N,)`` raw (sanitized) reference series.
+      mu, sigma: full ``(N_win,)`` per-window stats tables (``sigma`` raw;
+        clamped at this boundary).
+      ref_budget: Pallas-only VMEM byte budget for the reference operand.
+
+    Returns: ``(best_dist, best_start, blocks)`` — as the slab form.
+    """
+    if jnp.ndim(queries) != 2:
+        raise ValueError("persistent sweep requires (Q, m) univariate queries")
+    length = int(queries.shape[1])
+    use_cb = envelopes is not None
+    u, low = envelopes if use_cb else (None, None)
+    dt = queries.dtype
+    lb_arr, starts_arr, _ = pad_lanes_to_blocks(
+        block_k, jnp.asarray(lb, dt), jnp.asarray(starts, jnp.int32)
+    )
+    mu_l = jnp.asarray(mu, dt)[starts_arr]
+    sg_l = clamp_sigma(jnp.asarray(sigma, dt))[starts_arr]
+    resolved = resolve_backend(backend)
+    if resolved == "jax":
+        nq, m = queries.shape
+        if u is None:
+            u_arr = jnp.zeros((nq, m), dt)
+            low_arr = jnp.zeros((nq, m), dt)
+        else:
+            u_arr, low_arr = jnp.asarray(u, dt), jnp.asarray(low, dt)
+        return _persistent_jax_fused(
+            queries, ref, lb_arr, starts_arr, mu_l, sg_l,
+            jnp.asarray(ub_init, dt), u_arr, low_arr,
+            window, length, band_width, rows_per_step, block_k, use_cb,
+        )
+    interpret = True if resolved == "pallas_interpret" else None
+    return _kernel_ops().dtw_ea_persistent_fused(
+        queries, ref, lb_arr, starts_arr, mu_l, sg_l, ub_init, window,
+        length, u=u, low=low, use_cb=use_cb, band_width=band_width,
+        block_k=block_k, row_block=row_block, interpret=interpret,
+        ref_budget=ref_budget,
     )
 
 

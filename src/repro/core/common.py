@@ -19,6 +19,42 @@ BIG = 1.0e30  # pruned-cell sentinel (finite stand-in for +inf)
 # driver must agree on it, or lane gating diverges between backends.
 DEAD_LANE_UB = -1.0
 
+# Sigma floor for z-normalization of flat (constant) windows. Lives here —
+# not in search.znorm — because the fused gather path normalizes inside
+# ``core.batch`` / the kernels, and core must not import search. The search
+# layer re-exports both names from ``search.znorm``.
+EPS = 1e-8
+
+
+def clamp_sigma(sigma: jax.Array) -> jax.Array:
+    """The one sanctioned sigma clamp: keeps flat windows finite under
+    normalization (they become all-zero, their true z-normal form limit)."""
+    return jnp.maximum(sigma, EPS)
+
+
+def norm_window_slice(
+    ref: jax.Array, starts: jax.Array, length: int, mu: jax.Array,
+    sigma: jax.Array,
+) -> jax.Array:
+    """Fused normalize-on-slice: ``(K, length)`` z-normalized windows.
+
+    The sanctioned replacement for ``search.znorm.gather_norm_windows``:
+    per-lane contiguous ``dynamic_slice`` of the raw reference plus the
+    ``(mu, sigma)`` table lookups, normalized in one vectorized step —
+    identical values (same copies, same op order, same ``clamp_sigma``), but
+    expressed as window *slices* of the O(N)-resident series rather than an
+    arbitrary-index gather, which is what the jax fused backends inline into
+    their round/while_loop bodies and what the Pallas fused kernels mirror
+    on device. ``mu``/``sigma`` are the full per-window stats tables indexed
+    by start; ``sigma`` is raw (clamped here).
+    """
+    win = jax.vmap(
+        lambda s: jax.lax.dynamic_slice(ref, (s,), (length,))
+    )(starts)
+    m = mu[starts][:, None]
+    s = clamp_sigma(sigma[starts])[:, None]
+    return (win - m) / s
+
 
 def pad_lanes_to_blocks(block_k: int, lb, starts, candidates=None):
     """Pad the lane axis to a ``block_k`` multiple, the one shared rule.

@@ -78,6 +78,26 @@ host neither materializes nor streams a ``cb`` slab. One launch per search,
 O(1) dispatches instead of O(rounds), with ``ub`` tightening at candidate-
 block granularity instead of round granularity.
 
+Fused in-kernel gather + z-normalization (DESIGN.md §2.10): the default
+operand form no longer ships pre-gathered ``(block_k, m)`` normalized
+windows. Instead the kernels take the **raw reference series** — resident
+once, O(N) — plus per-lane ``(start, mu, sigma)`` vectors, and each block's
+``_init`` phase slices its lanes' windows out of the series and normalizes
+them into VMEM scratch (``_gather_norm_block``): per-lane lane-uniform
+``pl.ds(start, m)`` copies (the Python loop over the static ``block_k`` lane
+index unrolls at trace time) followed by one vectorized
+``(cand - mu) / sigma``. ``sigma`` arrives pre-clamped by the host wrapper
+(``clamp_sigma``), so flat windows normalize to exactly the same zeros as
+the retired host-side slab. For references too large to hold in VMEM the
+reference operand stays in HBM (``memory_space=ANY``) and the per-lane
+window copies become explicit DMAs (``make_async_copy`` + a DMA semaphore)
+— the slab-streaming tier (``ref_in_vmem=False``). The working set drops
+from O(N·l) (every overlapping window re-copied) to O(N + block_k·m), which
+is what lets persistent mode sweep references whose window slab could never
+be materialized. The UCR ``cb`` suffix is likewise built in-kernel from the
+just-normalized tile (LB_Keogh terms + tree-order suffix sum — the same
+documented O(1)-ulp reformulation as the persistent prologue below).
+
 Validated against ``ref.py`` and the banded JAX path in interpret mode on
 CPU; written for TPU as the target.
 """
@@ -132,6 +152,42 @@ def _prefix_min(x: jax.Array) -> jax.Array:
         x = jnp.minimum(x, _shift_right(x, off, jnp.inf))
         off *= 2
     return x
+
+
+def _gather_norm_block(
+    ref_ref,      # (1, N_pad) raw reference (VMEM, or HBM when not ref_in_vmem)
+    starts_ref,   # (block_k, 1) int32 window start per lane
+    mu_ref,       # (block_k, 1) per-lane window mean
+    sg_ref,       # (block_k, 1) per-lane window sigma (pre-clamped)
+    cand_ref,     # (block_k, m) VMEM scratch: normalized windows out
+    sem,          # DMA semaphore scratch (used iff not ref_in_vmem)
+    *,
+    ref_in_vmem: bool,
+):
+    """Slice + z-normalize one block's candidate windows in-kernel.
+
+    The fused replacement for the host-side ``gather_norm_windows`` slab:
+    each lane's window is a contiguous ``pl.ds(start, m)`` slice of the
+    O(N)-resident reference. The lane index is static (the Python loop
+    unrolls at trace time), so only the slice *start* is dynamic — a
+    supported lane-uniform dynamic slice per unrolled step. VMEM tier copies
+    directly; the HBM tier (reference too large for VMEM) issues an explicit
+    DMA per lane. Normalization is one vectorized step over the whole tile;
+    ``sg_ref`` is pre-clamped on the host (``clamp_sigma``), making the
+    output bit-identical to the retired pre-gathered slab.
+    """
+    block_k, m = cand_ref.shape
+    for k in range(block_k):
+        s = starts_ref[k, 0]
+        if ref_in_vmem:
+            cand_ref[k, :] = ref_ref[0, pl.ds(s, m)]
+        else:
+            cp = pltpu.make_async_copy(
+                ref_ref.at[0, pl.ds(s, m)], cand_ref.at[k], sem
+            )
+            cp.start()
+            cp.wait()
+    cand_ref[...] = (cand_ref[...] - mu_ref[...]) / sg_ref[...]
 
 
 def _dp_row(
@@ -249,15 +305,25 @@ def _dp_row(
         ).astype(jnp.int32)
 
 
-def _dtw_ea_kernel(
-    # VMEM operands
-    ub_ref,      # (block_k, 1) per-lane upper bounds
-    q_ref,       # (1, row_block) query slice for this (query, row) block
-    cand_ref,    # (block_k, m) candidate block (lanes share one query)
-    cb_ref,      # (block_k, m) cumulative LB suffix (zeros if disabled)
-    # outputs
-    out_ref,     # (block_k,) distances
-    *rest,       # [rows_out, cells_out] if emit_info, then scratch
+def _round_init_scratch(
+    prev_ref, ns_ref, flags_ref, rows_ref, cells_ref, done_ref,
+    *, band_width: int, emit_info: bool,
+):
+    """Reset one block's DP scratch at its first row block."""
+    block_k = prev_ref.shape[0]
+    prev_ref[...] = jnp.full((block_k, band_width), BIG, jnp.float32)
+    ns_ref[...] = jnp.zeros((block_k, 1), jnp.int32)
+    flags_ref[...] = jnp.zeros((block_k, 2), jnp.int32)
+    if emit_info:
+        rows_ref[...] = jnp.zeros((block_k, 1), jnp.int32)
+        cells_ref[...] = jnp.zeros((block_k, 1), jnp.int32)
+    done_ref[0] = jnp.asarray(0, jnp.int32)  # literal 0 is int64 under x64
+
+
+def _round_sweep(
+    ri, ub_ref, q_ref, cand_ref, cb_ref, out_ref, rows_out, cells_out,
+    prev_ref, ns_ref, flags_ref, rows_ref, cells_ref, done_ref,
+    *,
     n_rows: int,
     window: int,
     row_block: int,
@@ -265,25 +331,10 @@ def _dtw_ea_kernel(
     use_cb: bool,
     emit_info: bool,
 ):
-    if emit_info:
-        rows_out, cells_out = rest[0], rest[1]
-        rest = rest[2:]
-    prev_ref, ns_ref, flags_ref, rows_ref, cells_ref, done_ref = rest
-
-    ri = pl.program_id(2)
+    """Row sweep + finish shared by the gathered and fused round kernels."""
     block_k, m = cand_ref.shape
     bw = band_width
     lo_max = m - bw  # 0 in full-width mode
-
-    @pl.when(ri == 0)
-    def _init():
-        prev_ref[...] = jnp.full((block_k, bw), BIG, jnp.float32)
-        ns_ref[...] = jnp.zeros((block_k, 1), jnp.int32)
-        flags_ref[...] = jnp.zeros((block_k, 2), jnp.int32)
-        if emit_info:
-            rows_ref[...] = jnp.zeros((block_k, 1), jnp.int32)
-            cells_ref[...] = jnp.zeros((block_k, 1), jnp.int32)
-        done_ref[0] = jnp.asarray(0, jnp.int32)  # literal 0 is int64 under x64
 
     @pl.when(done_ref[0] == 0)
     def _rows():
@@ -316,30 +367,143 @@ def _dtw_ea_kernel(
             cells_out[...] = cells_ref[:, 0]
 
 
-def _dtw_ea_persistent_kernel(
-    # operands
-    ub_init_ref,  # (Q,) SMEM per-query initial incumbents
-    q_ref,        # (1, row_block) query slice for this (query, row) block
-    cand_ref,     # (block_k, m) candidate block, best-first order
-    lb_ref,       # (block_k, 1) per-lane sorted lower bounds (+inf padding)
-    starts_ref,   # (block_k, 1) int32 global window start per lane
-    u_ref,        # (1, m) query envelope upper (read iff use_cb)
-    low_ref,      # (1, m) query envelope lower (read iff use_cb)
-    # outputs (one slot per query)
-    dist_ref,     # (1,) best distance (== ub_init when unbeaten)
-    idx_ref,      # (1,) best window start (-1 when unbeaten)
-    blocks_ref,   # (1,) candidate blocks actually evaluated
-    # scratch
-    prev_ref, ns_ref, flags_ref, ubv_ref, cb_ref,
-    done_ref, ub_s, best_s, blocks_s,
-    *,
+def _dtw_ea_kernel(
+    # VMEM operands
+    ub_ref,      # (block_k, 1) per-lane upper bounds
+    q_ref,       # (1, row_block) query slice for this (query, row) block
+    cand_ref,    # (block_k, m) candidate block (lanes share one query)
+    cb_ref,      # (block_k, m) cumulative LB suffix (zeros if disabled)
+    # outputs
+    out_ref,     # (block_k,) distances
+    *rest,       # [rows_out, cells_out] if emit_info, then scratch
     n_rows: int,
     window: int,
     row_block: int,
     band_width: int,
     use_cb: bool,
+    emit_info: bool,
+):
+    """Gathered-slab round kernel (``gather="slab"`` comparison arm)."""
+    if emit_info:
+        rows_out, cells_out = rest[0], rest[1]
+        rest = rest[2:]
+    else:
+        rows_out = cells_out = None
+    prev_ref, ns_ref, flags_ref, rows_ref, cells_ref, done_ref = rest
+
+    ri = pl.program_id(2)
+
+    @pl.when(ri == 0)
+    def _init():
+        _round_init_scratch(
+            prev_ref, ns_ref, flags_ref, rows_ref, cells_ref, done_ref,
+            band_width=band_width, emit_info=emit_info,
+        )
+
+    _round_sweep(
+        ri, ub_ref, q_ref, cand_ref, cb_ref, out_ref, rows_out, cells_out,
+        prev_ref, ns_ref, flags_ref, rows_ref, cells_ref, done_ref,
+        n_rows=n_rows, window=window, row_block=row_block,
+        band_width=band_width, use_cb=use_cb, emit_info=emit_info,
+    )
+
+
+def _dtw_ea_fused_kernel(
+    # operands
+    ub_ref,      # (block_k, 1) per-lane upper bounds
+    q_ref,       # (1, row_block) query slice for this (query, row) block
+    ref_ref,     # (1, N_pad) raw reference (VMEM, or HBM when streaming)
+    starts_ref,  # (block_k, 1) int32 window start per lane
+    mu_ref,      # (block_k, 1) per-lane window mean
+    sg_ref,      # (block_k, 1) per-lane window sigma (pre-clamped)
+    u_ref,       # (1, m) query envelope upper (read iff use_cb)
+    low_ref,     # (1, m) query envelope lower (read iff use_cb)
+    # outputs
+    out_ref,     # (block_k,) distances
+    *rest,       # [rows_out, cells_out] if emit_info, then scratch
+    n_rows: int,
+    window: int,
+    row_block: int,
+    band_width: int,
+    use_cb: bool,
+    emit_info: bool,
+    ref_in_vmem: bool,
+):
+    """Fused round kernel: windows sliced + normalized in-kernel.
+
+    Same DP program as ``_dtw_ea_kernel``, but the candidate tile is VMEM
+    *scratch* filled by ``_gather_norm_block`` at each block's first row
+    step, and the UCR ``cb`` suffix — when enabled — is built in-kernel from
+    that tile and the query envelope. The in-kernel suffix sum runs in tree
+    order, so fused-round ``cb`` matches the host drivers' sequential cumsum
+    to the documented O(1)-ulp reformulation rounding (DESIGN.md §2.2/§2.5)
+    — abandon thresholds can shift by an ulp, the winner cannot change.
+    """
+    if emit_info:
+        rows_out, cells_out = rest[0], rest[1]
+        rest = rest[2:]
+    else:
+        rows_out = cells_out = None
+    if ref_in_vmem:
+        sem = None
+        (cand_ref, cb_ref, prev_ref, ns_ref, flags_ref, rows_ref,
+         cells_ref, done_ref) = rest
+    else:
+        (cand_ref, cb_ref, prev_ref, ns_ref, flags_ref, rows_ref,
+         cells_ref, done_ref, sem) = rest
+
+    ri = pl.program_id(2)
+
+    @pl.when(ri == 0)
+    def _init():
+        _gather_norm_block(
+            ref_ref, starts_ref, mu_ref, sg_ref, cand_ref, sem,
+            ref_in_vmem=ref_in_vmem,
+        )
+        if use_cb:
+            terms = _lb_keogh_terms(cand_ref[...], u_ref[...], low_ref[...])
+            cb_ref[...] = _suffix_sum(terms)
+        _round_init_scratch(
+            prev_ref, ns_ref, flags_ref, rows_ref, cells_ref, done_ref,
+            band_width=band_width, emit_info=emit_info,
+        )
+
+    _round_sweep(
+        ri, ub_ref, q_ref, cand_ref, cb_ref, out_ref, rows_out, cells_out,
+        prev_ref, ns_ref, flags_ref, rows_ref, cells_ref, done_ref,
+        n_rows=n_rows, window=window, row_block=row_block,
+        band_width=band_width, use_cb=use_cb, emit_info=emit_info,
+    )
+
+
+def _dtw_ea_persistent_kernel(
+    # operands
+    ub_init_ref,  # (Q,) SMEM per-query initial incumbents
+    q_ref,        # (1, row_block) query slice for this (query, row) block
+    *rest,
+    n_rows: int,
+    window: int,
+    row_block: int,
+    band_width: int,
+    use_cb: bool,
+    fused: bool = False,
+    ref_in_vmem: bool = True,
 ):
     """Whole best-first search in one launch (DESIGN.md §2.5).
+
+    Operand forms (after ``ub_init``/``q``):
+
+    * gathered (``fused=False``, the ``gather="slab"`` comparison arm):
+      ``cand (block_k, m)`` pre-normalized best-first windows, then
+      ``lb, starts, u, low`` — the O(N·l) slab form.
+    * fused (``fused=True``, default execution form): ``ref (1, N_pad)``
+      raw reference — VMEM, or HBM (``memory_space=ANY``) when
+      ``ref_in_vmem=False`` — then ``lb, starts, mu, sg, u, low``; the
+      candidate tile becomes VMEM scratch filled by ``_gather_norm_block``
+      in each block's ``_init_block`` (gated off for skipped blocks, so a
+      cascade-stopped tail costs no copies/DMAs). O(N + block_k·m) resident,
+      which is what lets one launch sweep references whose window slab could
+      never be materialized.
 
     Grid ``(Q, cand_blocks, row_blocks)`` with the candidate dimension
     *sequential*: the incumbent ``ub_s`` (and the running best start /
@@ -364,6 +528,18 @@ def _dtw_ea_persistent_kernel(
         into ``ub_s`` with first-lane tie-breaking; strict improvement only,
         matching the host round driver's incumbent update.
     """
+    if fused:
+        (ref_ref, lb_ref, starts_ref, mu_ref, sg_ref, u_ref, low_ref,
+         dist_ref, idx_ref, blocks_ref,
+         cand_ref, prev_ref, ns_ref, flags_ref, ubv_ref, cb_ref,
+         done_ref, ub_s, best_s, blocks_s, *maybe_sem) = rest
+        sem = maybe_sem[0] if maybe_sem else None
+    else:
+        (cand_ref, lb_ref, starts_ref, u_ref, low_ref,
+         dist_ref, idx_ref, blocks_ref,
+         prev_ref, ns_ref, flags_ref, ubv_ref, cb_ref,
+         done_ref, ub_s, best_s, blocks_s) = rest
+
     qi = pl.program_id(0)
     ci = pl.program_id(1)
     ri = pl.program_id(2)
@@ -391,9 +567,18 @@ def _dtw_ea_persistent_kernel(
         skip = jnp.logical_not(jnp.any(live))
         done_ref[0] = skip.astype(jnp.int32)
         blocks_s[0] = blocks_s[0] + jnp.logical_not(skip).astype(jnp.int32)
-        if use_cb:
-            @pl.when(jnp.logical_not(skip))
-            def _cb_prologue():
+
+        @pl.when(jnp.logical_not(skip))
+        def _materialize():
+            if fused:
+                # Fused tier: slice + normalize this block's windows out of
+                # the resident reference. Gated blocks (cascade stop / all
+                # lanes dead) skip the copies/DMAs entirely.
+                _gather_norm_block(
+                    ref_ref, starts_ref, mu_ref, sg_ref, cand_ref, sem,
+                    ref_in_vmem=ref_in_vmem,
+                )
+            if use_cb:
                 # (1, m) envelope broadcasts over the block's lanes. The
                 # suffix sum runs in tree order (log-depth doubling) rather
                 # than the host drivers' sequential cumsum — cb rounding

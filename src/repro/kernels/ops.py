@@ -28,6 +28,16 @@ requires ``n == m`` (subsequence-search shape) and silently widens to full
 rows otherwise. ``with_info=True`` additionally returns per-lane
 ``(rows, cells)`` pruning counters (``EAInfo`` semantics) at the cost of two
 int32 accumulators per lane — the search fast round runs counter-free.
+
+Fused operand form (DESIGN.md §2.10, the ``gather="fused"`` default):
+``dtw_ea_multi_fused`` / ``dtw_ea_persistent_fused`` take the raw reference
+series once plus per-lane ``(start, mu, sigma)`` vectors and slice +
+z-normalize each block's windows inside the kernel — no pre-gathered
+``(Q, K, m)`` slab crosses the host→device boundary. References whose
+padded byte size exceeds ``ref_budget`` (default ``REF_VMEM_BYTES``) stay
+in HBM (``memory_space=ANY``) and the kernel streams each lane's window by
+explicit DMA. The slab-form wrappers above remain as the ``gather="slab"``
+comparison arm and the baseline cores' entry point.
 """
 from __future__ import annotations
 
@@ -43,16 +53,38 @@ from repro.core.common import (
     default_band_width,
     pad_lanes_to_blocks,
 )
-from repro.kernels.dtw_band import _dtw_ea_kernel, _dtw_ea_persistent_kernel
+from repro.kernels.dtw_band import (
+    _dtw_ea_fused_kernel,
+    _dtw_ea_kernel,
+    _dtw_ea_persistent_kernel,
+)
 from repro.kernels.lb_keogh import _lb_kernel
 
 
 # jax renamed TPUCompilerParams -> CompilerParams; support both.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
+# Fused-gather reference tier threshold: a (padded) reference at or below
+# this byte size rides in VMEM as a whole-array block; above it the operand
+# stays in HBM (memory_space=ANY) and the kernel DMA-streams each lane's
+# window slice. ~4 MB leaves headroom beside the per-block scratch within a
+# ~16 MB TPU VMEM. Overridable per call (``ref_budget``) — tests force the
+# DMA tier with a tiny budget.
+REF_VMEM_BYTES = 4 * 1024 * 1024
+
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _pad_ref_2d(ref: jax.Array) -> jax.Array:
+    """Reference as a lane-aligned ``(1, N_pad)`` row (TPU wants 2-D)."""
+    ref = jnp.asarray(ref, jnp.float32)
+    n = ref.shape[0]
+    n_pad = -(-n // 128) * 128
+    if n_pad != n:
+        ref = jnp.pad(ref, (0, n_pad - n))
+    return ref[None, :]
 
 
 @partial(
@@ -241,6 +273,189 @@ def dtw_ea(
 @partial(
     jax.jit,
     static_argnames=(
+        "window", "length", "use_cb", "band_width", "block_k", "row_block",
+        "interpret", "with_info", "ref_budget",
+    ),
+)
+def dtw_ea_multi_fused(
+    queries: jax.Array,
+    ref: jax.Array,
+    starts: jax.Array,
+    mu: jax.Array,
+    sg: jax.Array,
+    ub: jax.Array,
+    window: int,
+    length: int,
+    u: jax.Array | None = None,
+    low: jax.Array | None = None,
+    use_cb: bool = False,
+    band_width: int | None = None,
+    block_k: int = 8,
+    row_block: int = 128,
+    interpret: bool | None = None,
+    with_info: bool = False,
+    ref_budget: int | None = None,
+):
+    """Fused-gather ``dtw_ea_multi``: windows sliced + normalized in-kernel.
+
+    Same DP program and return contract as ``dtw_ea_multi``, but the
+    candidate operand is the raw reference series (resident once, O(N))
+    plus per-lane ``(start, mu, sigma)`` vectors — the kernel materializes
+    each block's normalized tile into VMEM scratch, so no O(Q·K·m) window
+    slab is built on the host or shipped to the device. With ``use_cb`` the
+    UCR ``cb`` suffix is likewise built in-kernel from the query envelopes
+    (tree-order suffix sum — the documented O(1)-ulp reformulation vs the
+    host drivers' sequential cumsum; thresholds may shift by an ulp, the
+    winner cannot change).
+
+    Args (where they differ from ``dtw_ea_multi``):
+      ref: ``(N,)`` raw (sanitized) reference series, shared by all lanes.
+      starts: ``(Q, K)`` int32 window start per lane (in ``[0, N - length]``;
+        padding lanes may repeat any valid start).
+      mu, sg: ``(Q, K)`` per-lane window mean and **pre-clamped** sigma
+        (``clamp_sigma`` applied by the caller — the kernel divides as-is,
+        keeping flat-window output bit-identical to the retired slab).
+      length: static candidate window length ``m``.
+      u, low: ``(Q, m)`` query envelopes — required when ``use_cb``.
+      ref_budget: VMEM byte budget for the reference operand; a padded
+        reference above it stays in HBM and is DMA-streamed per lane
+        (default ``REF_VMEM_BYTES``).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    queries = jnp.asarray(queries, jnp.float32)
+    starts = jnp.asarray(starts, jnp.int32)
+    nq, n = queries.shape
+    q_, k = starts.shape
+    assert q_ == nq, (q_, nq)
+    m = int(length)
+    window = int(min(window, m))
+
+    if band_width is None:
+        band_width = default_band_width(window, m) if n == m else m
+    bw = int(min(band_width, m))
+    full = min(2 * window + 1, m)
+    if bw < full:
+        raise ValueError(f"band_width {bw} < 2*window+1 = {full}")
+    if bw < m and n != m:
+        raise ValueError("banded dtw_ea requires equal lengths (n == m)")
+    if use_cb and (u is None or low is None):
+        raise ValueError("use_cb requires the query envelopes (u, low)")
+
+    ref2 = _pad_ref_2d(ref)
+    n_ref_pad = ref2.shape[1]
+    budget = REF_VMEM_BYTES if ref_budget is None else int(ref_budget)
+    ref_in_vmem = n_ref_pad * 4 <= budget
+
+    k_pad = -(-k // block_k) * block_k
+    n_pad = -(-n // row_block) * row_block
+    ub_arr = jnp.broadcast_to(jnp.asarray(ub, jnp.float32), (nq, k))
+    mu_arr = jnp.asarray(mu, jnp.float32)
+    sg_arr = jnp.asarray(sg, jnp.float32)
+    if k_pad != k:
+        pw = ((0, 0), (0, k_pad - k))
+        starts = jnp.pad(starts, pw)  # start 0 is always in range
+        mu_arr = jnp.pad(mu_arr, pw)
+        sg_arr = jnp.pad(sg_arr, pw, constant_values=1.0)
+        ub_arr = jnp.pad(ub_arr, pw, constant_values=DEAD_LANE_UB)
+    if n_pad != n:
+        queries = jnp.pad(queries, ((0, 0), (0, n_pad - n)))
+    if u is None:
+        u_arr = jnp.zeros((nq, m), jnp.float32)
+        low_arr = jnp.zeros((nq, m), jnp.float32)
+    else:
+        u_arr = jnp.asarray(u, jnp.float32)
+        low_arr = jnp.asarray(low, jnp.float32)
+
+    ncb = k_pad // block_k
+    grid = (nq, ncb, n_pad // row_block)
+    starts_flat = starts.reshape(nq * k_pad, 1)
+    mu_flat = mu_arr.reshape(nq * k_pad, 1)
+    sg_flat = sg_arr.reshape(nq * k_pad, 1)
+    ub_flat = ub_arr.reshape(nq * k_pad, 1)
+
+    kernel = partial(
+        _dtw_ea_fused_kernel,
+        n_rows=n,
+        window=window,
+        row_block=row_block,
+        band_width=bw,
+        use_cb=use_cb,
+        emit_info=with_info,
+        ref_in_vmem=ref_in_vmem,
+    )
+    lane_block = lambda qi, ci, ri: (qi * ncb + ci,)
+    lane_spec = pl.BlockSpec((block_k,), lane_block)
+    lane2 = lambda: pl.BlockSpec(
+        (block_k, 1), lambda qi, ci, ri: (qi * ncb + ci, 0)
+    )
+    if ref_in_vmem:
+        ref_spec = pl.BlockSpec((1, n_ref_pad), lambda qi, ci, ri: (0, 0))
+    else:
+        ref_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    out_specs = [lane_spec]
+    out_shape = [jax.ShapeDtypeStruct((nq * k_pad,), jnp.float32)]
+    if with_info:
+        out_specs += [lane_spec, lane_spec]
+        out_shape += [
+            jax.ShapeDtypeStruct((nq * k_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((nq * k_pad,), jnp.int32),
+        ]
+    scratch = [
+        pltpu.VMEM((block_k, m), jnp.float32),    # normalized candidate tile
+        pltpu.VMEM((block_k, m), jnp.float32),    # in-kernel cb suffix
+        pltpu.VMEM((block_k, bw), jnp.float32),   # prev band
+        pltpu.VMEM((block_k, 1), jnp.int32),      # next_start
+        pltpu.VMEM((block_k, 2), jnp.int32),      # flags
+        pltpu.VMEM((block_k, 1), jnp.int32),      # rows counter
+        pltpu.VMEM((block_k, 1), jnp.int32),      # cells counter
+        pltpu.SMEM((1,), jnp.int32),              # block done flag
+    ]
+    if not ref_in_vmem:
+        scratch.append(pltpu.SemaphoreType.DMA)   # window-slice DMA sem
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            lane2(),                                           # ub
+            pl.BlockSpec((1, row_block), lambda qi, ci, ri: (qi, ri)),
+            ref_spec,                                          # raw reference
+            lane2(),                                           # starts
+            lane2(),                                           # mu
+            lane2(),                                           # sigma
+            pl.BlockSpec((1, m), lambda qi, ci, ri: (qi, 0)),  # envelope u
+            pl.BlockSpec((1, m), lambda qi, ci, ri: (qi, 0)),  # envelope low
+        ],
+        out_specs=out_specs if with_info else out_specs[0],
+        out_shape=out_shape if with_info else out_shape[0],
+        scratch_shapes=scratch,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        ub_flat,
+        queries,
+        ref2,
+        starts_flat,
+        mu_flat,
+        sg_flat,
+        u_arr,
+        low_arr,
+    )
+    if with_info:
+        d, rows, cells = out
+        return (
+            d.reshape(nq, k_pad)[:, :k],
+            rows.reshape(nq, k_pad)[:, :k],
+            cells.reshape(nq, k_pad)[:, :k],
+        )
+    return out.reshape(nq, k_pad)[:, :k]
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
         "window", "use_cb", "band_width", "block_k", "row_block", "interpret"
     ),
 )
@@ -266,9 +481,14 @@ def dtw_ea_persistent(
     dimension of the grid turns sequential and the incumbent is carried in
     SMEM scratch across candidate blocks — tightened by each block's
     surviving minimum and gating the next block's lower bound on device.
-    Candidates must arrive pre-gathered in best-first (ascending-``lb``)
-    order; gating correctness only needs ``lb`` to be a true lower bound,
-    but the on-device cascade stop is only as good as the ordering.
+    This wrapper is the pre-gathered **slab** arm (``gather="slab"``): it
+    still takes the O(K·m) normalized window matrix, and is kept as the
+    comparison baseline; the default execution form is
+    ``dtw_ea_persistent_fused``, which ships the raw reference once and
+    slices windows in-kernel. Lanes must arrive in best-first
+    (ascending-``lb``) order in either form; gating correctness only needs
+    ``lb`` to be a true lower bound, but the on-device cascade stop is only
+    as good as the ordering.
 
     Args:
       queries: ``(Q, n)`` z-normalized queries.
@@ -380,6 +600,174 @@ def dtw_ea_persistent(
         cand_flat,
         lb_flat,
         starts_flat,
+        u_arr,
+        low_arr,
+    )
+    return dist, idx, blocks
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "window", "length", "use_cb", "band_width", "block_k", "row_block",
+        "interpret", "ref_budget",
+    ),
+)
+def dtw_ea_persistent_fused(
+    queries: jax.Array,
+    ref: jax.Array,
+    lb: jax.Array,
+    starts: jax.Array,
+    mu: jax.Array,
+    sg: jax.Array,
+    ub_init: jax.Array,
+    window: int,
+    length: int,
+    u: jax.Array | None = None,
+    low: jax.Array | None = None,
+    use_cb: bool = False,
+    band_width: int | None = None,
+    block_k: int = 8,
+    row_block: int = 128,
+    interpret: bool | None = None,
+    ref_budget: int | None = None,
+):
+    """Fused-gather persistent sweep: the whole search, no window slab.
+
+    ``dtw_ea_persistent`` with the candidate matrix replaced by the raw
+    reference series plus per-lane ``(start, mu, sigma)`` vectors — each
+    live candidate block's normalized tile is sliced out of the resident
+    reference inside the kernel (gated blocks skip the copies entirely),
+    so the launch's working set is O(N + block_k·m) instead of O(K·m).
+    That is the form that completes persistent sweeps over references whose
+    O(N·l) slab could never be materialized. Lanes must still arrive in
+    best-first (ascending-``lb``) order.
+
+    Args (where they differ from ``dtw_ea_persistent``):
+      ref: ``(N,)`` raw (sanitized) reference series.
+      mu, sg: ``(Q, K)`` per-lane window mean and **pre-clamped** sigma.
+      length: static candidate window length ``m``.
+      ref_budget: VMEM byte budget for the reference operand; above it the
+        reference stays in HBM and windows are DMA-streamed per lane
+        (default ``REF_VMEM_BYTES``).
+
+    Returns: ``(best_dist, best_start, blocks)`` — as ``dtw_ea_persistent``.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    queries = jnp.asarray(queries, jnp.float32)
+    nq, n = queries.shape
+    m = int(length)
+    window = int(min(window, m))
+
+    if band_width is None:
+        band_width = default_band_width(window, m) if n == m else m
+    bw = int(min(band_width, m))
+    full = min(2 * window + 1, m)
+    if bw < full:
+        raise ValueError(f"band_width {bw} < 2*window+1 = {full}")
+    if bw < m and n != m:
+        raise ValueError("banded dtw_ea requires equal lengths (n == m)")
+    if use_cb and (u is None or low is None):
+        raise ValueError("use_cb requires the query envelopes (u, low)")
+
+    ref2 = _pad_ref_2d(ref)
+    n_ref_pad = ref2.shape[1]
+    budget = REF_VMEM_BYTES if ref_budget is None else int(ref_budget)
+    ref_in_vmem = n_ref_pad * 4 <= budget
+
+    lb_arr = jnp.asarray(lb, jnp.float32)
+    starts_arr = jnp.asarray(starts, jnp.int32)
+    mu_arr = jnp.asarray(mu, jnp.float32)
+    sg_arr = jnp.asarray(sg, jnp.float32)
+    k = lb_arr.shape[-1]
+    k_pad = -(-k // block_k) * block_k
+    if k_pad != k:
+        pw = ((0, 0), (0, k_pad - k))
+        lb_arr = jnp.pad(lb_arr, pw, constant_values=jnp.inf)
+        starts_arr = jnp.pad(starts_arr, pw)  # start 0 is always in range
+        mu_arr = jnp.pad(mu_arr, pw)
+        sg_arr = jnp.pad(sg_arr, pw, constant_values=1.0)
+    n_pad = -(-n // row_block) * row_block
+    if n_pad != n:
+        queries = jnp.pad(queries, ((0, 0), (0, n_pad - n)))
+    if u is None:
+        u_arr = jnp.zeros((nq, m), jnp.float32)
+        low_arr = jnp.zeros((nq, m), jnp.float32)
+    else:
+        u_arr = jnp.asarray(u, jnp.float32)
+        low_arr = jnp.asarray(low, jnp.float32)
+
+    ncb = k_pad // block_k
+    grid = (nq, ncb, n_pad // row_block)
+    lb_flat = lb_arr.reshape(nq * k_pad, 1)
+    starts_flat = starts_arr.reshape(nq * k_pad, 1)
+    mu_flat = mu_arr.reshape(nq * k_pad, 1)
+    sg_flat = sg_arr.reshape(nq * k_pad, 1)
+
+    kernel = partial(
+        _dtw_ea_persistent_kernel,
+        n_rows=n,
+        window=window,
+        row_block=row_block,
+        band_width=bw,
+        use_cb=use_cb,
+        fused=True,
+        ref_in_vmem=ref_in_vmem,
+    )
+    lane2 = lambda shape: pl.BlockSpec(shape, lambda qi, ci, ri: (qi * ncb + ci, 0))
+    q_spec = pl.BlockSpec((1,), lambda qi, ci, ri: (qi,))
+    if ref_in_vmem:
+        ref_spec = pl.BlockSpec((1, n_ref_pad), lambda qi, ci, ri: (0, 0))
+    else:
+        ref_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    scratch = [
+        pltpu.VMEM((block_k, m), jnp.float32),    # normalized candidate tile
+        pltpu.VMEM((block_k, bw), jnp.float32),   # prev band
+        pltpu.VMEM((block_k, 1), jnp.int32),      # next_start
+        pltpu.VMEM((block_k, 2), jnp.int32),      # flags
+        pltpu.VMEM((block_k, 1), jnp.float32),    # per-lane thresholds
+        pltpu.VMEM((block_k, m), jnp.float32),    # cb prologue slab
+        pltpu.SMEM((1,), jnp.int32),              # block done flag
+        pltpu.SMEM((1,), jnp.float32),            # carried incumbent
+        pltpu.SMEM((1,), jnp.int32),              # carried best start
+        pltpu.SMEM((1,), jnp.int32),              # live-block counter
+    ]
+    if not ref_in_vmem:
+        scratch.append(pltpu.SemaphoreType.DMA)   # window-slice DMA sem
+    dist, idx, blocks = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # ub_init (Q,)
+            pl.BlockSpec((1, row_block), lambda qi, ci, ri: (qi, ri)),
+            ref_spec,                                         # raw reference
+            lane2((block_k, 1)),                              # lb
+            lane2((block_k, 1)),                              # starts
+            lane2((block_k, 1)),                              # mu
+            lane2((block_k, 1)),                              # sigma
+            pl.BlockSpec((1, m), lambda qi, ci, ri: (qi, 0)),  # envelope u
+            pl.BlockSpec((1, m), lambda qi, ci, ri: (qi, 0)),  # envelope low
+        ],
+        out_specs=[q_spec, q_spec, q_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq,), jnp.float32),
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+        ],
+        scratch_shapes=scratch,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        jnp.asarray(ub_init, jnp.float32),
+        queries,
+        ref2,
+        lb_flat,
+        starts_flat,
+        mu_flat,
+        sg_flat,
         u_arr,
         low_arr,
     )

@@ -8,10 +8,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.common import norm_window_slice
 from repro.core.dtw import dtw
 from repro.core.ea_pruned_dtw import ea_pruned_dtw
 from repro.core.lower_bounds import envelope, lb_keogh, lb_kim_fl
-from repro.search.znorm import gather_norm_windows
 
 
 def dtw_ea_ref(
@@ -49,6 +49,6 @@ def lb_all_windows_ref(
     """Reference for kernels.ops.lb_keogh_all_windows."""
     n_win = ref.shape[0] - length + 1
     starts = jnp.arange(n_win)
-    cand = gather_norm_windows(ref, starts, length, mu, sigma)
+    cand = norm_window_slice(ref, starts, length, mu, sigma)
     u, low = envelope(query_n, window)
     return jnp.maximum(lb_keogh(cand, u, low), lb_kim_fl(query_n, cand))

@@ -16,8 +16,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.common import norm_window_slice
 from repro.core.lower_bounds import envelope, lb_keogh, lb_kim_fl
-from repro.search.znorm import gather_norm_windows
 
 
 class CascadeOut(NamedTuple):
@@ -53,7 +53,7 @@ def cascade_lower_bounds(
         starts = c0 + jnp.arange(chunk)
         valid = starts < n_win
         safe = jnp.minimum(starts, n_win - 1)
-        cand = gather_norm_windows(ref, safe, length, mu, sigma)
+        cand = norm_window_slice(ref, safe, length, mu, sigma)
         lb = jnp.zeros((chunk,), cand.dtype)
         if use_kim:
             lb = jnp.maximum(lb, lb_kim_fl(query_n, cand))

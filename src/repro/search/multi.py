@@ -53,8 +53,10 @@ candidate order is gathered once, the kernel grid keeps the query dimension
 parallel, and each query's incumbent is carried in SMEM across the now
 *sequential* candidate-block dimension — tightened every ``block_k`` lanes
 and gating LB-pruned blocks on device. Same per-query results, O(1)
-dispatches, at the cost of materializing the ``(Q, N, l)`` window tensor up
-front. ``warm_start`` works here too: the same prepass dispatch seeds the
+dispatches. With the default ``gather="fused"`` the sweep *addresses* the
+best-first order instead of materializing a ``(Q, N, l)`` window tensor:
+each block's candidates are sliced + z-normalized from the resident
+reference on demand (DESIGN.md §2.10). ``warm_start`` works here too: the same prepass dispatch seeds the
 sweep's SMEM incumbents and the prepass winner keeps its start when the
 sweep cannot beat it (pre-refactor the knob was silently dropped).
 
@@ -131,6 +133,8 @@ def multi_query_search(
     warm_start: int = 0,
     rounds: str = "host",
     quarantine: bool = True,
+    gather: str = "fused",
+    slab_budget: int | None = None,
 ) -> MultiSearchResult:
     """Nearest z-normalized window of ``ref`` for each of Q queries.
 
@@ -200,6 +204,7 @@ def multi_query_search(
         band_width=band_width, chunk=chunk, backend=backend,
         rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
         rounds=rounds, quarantine=quarantine, warm_start=warm_start,
+        gather=gather, slab_budget=slab_budget,
         with_info=with_info, allowed_variants=MULTI_VARIANTS,
     )
     state, stats, n_quar = _offline_search_impl(
@@ -230,6 +235,8 @@ def make_distributed_multi_search(
     block_k: int = 8,
     row_block: int = 128,
     quarantine: bool = True,
+    gather: str = "fused",
+    slab_budget: int | None = None,
 ):
     """Build a jitted distributed multi-query search fn for a mesh config.
 
@@ -259,7 +266,8 @@ def make_distributed_multi_search(
         length=length, window=window, variant="eapruned", batch=batch,
         band_width=band_width, chunk=chunk, backend=backend,
         rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
-        quarantine=quarantine, allowed_variants=MULTI_VARIANTS,
+        quarantine=quarantine, gather=gather, slab_budget=slab_budget,
+        allowed_variants=MULTI_VARIANTS,
     )
     sharded = make_sharded_search(mesh, axis_names, plan)
 

@@ -76,9 +76,16 @@ from repro.core.batch import (
     block_sweep,
     ea_pruned_dtw_batch,
     ea_pruned_dtw_multi_batch,
+    ea_pruned_dtw_multi_batch_fused,
     ea_pruned_dtw_persistent,
+    ea_pruned_dtw_persistent_fused,
 )
-from repro.core.common import BIG, DEAD_LANE_UB, pad_lanes_to_blocks
+from repro.core.common import (
+    BIG,
+    DEAD_LANE_UB,
+    norm_window_slice,
+    pad_lanes_to_blocks,
+)
 from repro.core.compat import shard_map as _shard_map
 from repro.core.dtw import dtw
 from repro.core.lower_bounds import (
@@ -113,6 +120,7 @@ from repro.search.znorm import (
 VARIANTS = ("full", "pruned", "eapruned", "eapruned_nolb")
 MULTI_VARIANTS = ("eapruned", "eapruned_nolb")
 ROUND_DRIVERS = ("host", "persistent")
+GATHER_MODES = ("fused", "slab")
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +150,19 @@ class SearchPlan:
     rounds: str = "host"
     quarantine: bool = True
     warm_start: int = 0
+    # Candidate materialization (DESIGN.md §2.10): "fused" (default) slices
+    # + z-normalizes windows inside the kernel / round body from the O(N)
+    # reference and stats tables; "slab" pre-gathers the O(K·l) normalized
+    # window matrix on the host (the retired baseline, kept as the
+    # comparison arm and for the full/pruned baseline cores, which have no
+    # fused form). Results are identical (bit-for-bit on jax; to the
+    # documented O(1)-ulp cb reformulation on the Pallas round path).
+    gather: str = "fused"
+    # Optional byte ceiling for any host-side candidate slab. "slab" paths
+    # that would materialize more than this raise SearchInputError at trace
+    # time; fused paths never build one, so they are exempt — the knob pins
+    # the "persistent sweep too big to slab" regime in tests/benches.
+    slab_budget: int | None = None
 
     @property
     def use_lb(self) -> bool:
@@ -174,6 +195,8 @@ def make_plan(
     rounds: str = "host",
     quarantine: bool = True,
     warm_start: int = 0,
+    gather: str = "fused",
+    slab_budget: int | None = None,
     with_info: bool = False,
     allowed_variants: tuple[str, ...] = VARIANTS,
 ) -> SearchPlan:
@@ -190,6 +213,12 @@ def make_plan(
         )
     if rounds not in ROUND_DRIVERS:
         raise ValueError(f"rounds {rounds!r} not in {ROUND_DRIVERS}")
+    if gather not in GATHER_MODES:
+        raise guards.SearchInputError(
+            f"gather {gather!r} not in {GATHER_MODES}"
+        )
+    if slab_budget is not None and int(slab_budget) <= 0:
+        raise guards.SearchInputError("slab_budget must be positive bytes")
     if rounds == "persistent" and with_info:
         raise ValueError(
             "rounds='persistent' is counter-free; use the host driver for "
@@ -205,7 +234,28 @@ def make_plan(
         backend=resolve_backend(backend), rows_per_step=int(rows_per_step),
         block_k=int(block_k), row_block=int(row_block), rounds=rounds,
         quarantine=bool(quarantine), warm_start=int(warm_start),
+        gather=gather,
+        slab_budget=None if slab_budget is None else int(slab_budget),
     )
+
+
+def _ensure_slab_budget(plan: SearchPlan, n_lanes: int, what: str) -> None:
+    """Trace-time guard: a host-side slab must fit ``plan.slab_budget``.
+
+    ``n_lanes`` is static (shape-derived), so the check runs while tracing
+    and raises before any O(K·l) allocation happens. Fused paths never call
+    this — not materializing the slab is the point.
+    """
+    if plan.slab_budget is None:
+        return
+    need = int(n_lanes) * int(plan.length) * 4  # float32 windows
+    if need > plan.slab_budget:
+        raise guards.SearchInputError(
+            f"{what}: gather='slab' would materialize {need} bytes of "
+            f"candidate windows ({n_lanes} lanes x {plan.length} samples) "
+            f"but slab_budget={plan.slab_budget}; use gather='fused' or "
+            "raise the budget"
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -323,7 +373,7 @@ def local_cascade(
         def one(i):
             s = jax.lax.dynamic_slice(starts_p, (i * plan.chunk,), (plan.chunk,))
             v = jax.lax.dynamic_slice(valid_p, (i * plan.chunk,), (plan.chunk,))
-            cand = gather_norm_windows(
+            cand = norm_window_slice(
                 prep.ref, s, plan.length, prep.mu, prep.sigma
             )
             lb = jnp.maximum(lb_kim_fl(query_n, cand), lb_keogh(cand, u, low))
@@ -367,6 +417,27 @@ def _round_slicers(batch: int):
     return slice_round, peek_lb
 
 
+def _dtw_round_fused(
+    plan: SearchPlan, prep: PreparedRef, pq, starts, ub_lanes, *,
+    use_cb: bool, with_info: bool,
+):
+    """One fused-gather EAPrunedDTW round over ``(Q, K)`` lane starts.
+
+    Candidates are sliced and z-normalized from ``prep.ref`` inside the
+    batch primitive (jax) or the Pallas kernel — no O(Q·K·l) slab is built
+    host-side. Returns ``(d, info_or_None)``.
+    """
+    env = (pq.u, pq.low) if use_cb else None
+    out = ea_pruned_dtw_multi_batch_fused(
+        pq.qn, prep.ref, starts, ub_lanes, window=plan.window,
+        mu=prep.mu, sigma=prep.sigma, envelopes=env,
+        band_width=plan.band_width, with_info=with_info, **plan.knobs(),
+    )
+    if with_info:
+        return out
+    return out, None
+
+
 def warm_prepass(
     plan: SearchPlan,
     prep: PreparedRef,
@@ -403,28 +474,38 @@ def warm_prepass(
         )
     pre_starts = order[:, :pre]
     pre_lbs = lb_sorted[:, :pre]
-    cand0 = jax.vmap(
-        lambda s: gather_norm_windows(
-            prep.ref, s, plan.length, prep.mu, prep.sigma
-        )
-    )(pre_starts)
     ub_pre = jnp.where(
         jnp.logical_and(jnp.isfinite(pre_lbs), pre_lbs < state0.ub[:, None]),
         jnp.broadcast_to(state0.ub[:, None], (nq, pre)),
         DEAD_LANE_UB,
     )
-    if with_info:
-        d0, info0 = ea_pruned_dtw_multi_batch(
-            pq.qn, cand0, ub_pre, window=plan.window,
-            band_width=plan.band_width, with_info=True, **plan.knobs(),
+    if plan.gather == "fused":
+        d0, info0 = _dtw_round_fused(
+            plan, prep, pq, pre_starts, ub_pre,
+            use_cb=False, with_info=with_info,
         )
+    else:
+        _ensure_slab_budget(plan, nq * pre, "warm_prepass")
+        cand0 = jax.vmap(
+            lambda s: gather_norm_windows(
+                prep.ref, s, plan.length, prep.mu, prep.sigma
+            )
+        )(pre_starts)
+        if with_info:
+            d0, info0 = ea_pruned_dtw_multi_batch(
+                pq.qn, cand0, ub_pre, window=plan.window,
+                band_width=plan.band_width, with_info=True, **plan.knobs(),
+            )
+        else:
+            d0 = ea_pruned_dtw_multi_batch(
+                pq.qn, cand0, ub_pre, window=plan.window,
+                band_width=plan.band_width, **plan.knobs(),
+            )
+            info0 = None
+    if with_info:
         rows_pre = jnp.sum(info0.rows, axis=1, dtype=jnp.int32)
         cells_pre = jnp.sum(info0.cells, axis=1, dtype=jnp.int32)
     else:
-        d0 = ea_pruned_dtw_multi_batch(
-            pq.qn, cand0, ub_pre, window=plan.window,
-            band_width=plan.band_width, **plan.knobs(),
-        )
         rows_pre = cells_pre = jnp.zeros((nq,), jnp.int32)
     d0 = jnp.where(jnp.isfinite(pre_lbs), d0, jnp.inf)
     state, _ = fold_min(state0, pre_starts, d0, offset=offset)
@@ -480,6 +561,8 @@ def run_host_rounds(
         active0 = lb_p[:, 0] < state0.ub
 
     slice_round, peek_lb = _round_slicers(batch)
+    if plan.gather != "fused":
+        _ensure_slab_budget(plan, nq * batch, "run_host_rounds")
 
     class St(NamedTuple):
         r: jax.Array        # (Q,) per-query round pointer
@@ -495,14 +578,6 @@ def run_host_rounds(
     def body(st: St) -> St:
         starts = slice_round(order_p, st.r)            # (Q, batch)
         lbs_b = slice_round(lb_p, st.r)                # (Q, batch)
-        cand = jax.vmap(
-            lambda s: gather_norm_windows(
-                prep.ref, s, plan.length, prep.mu, prep.sigma
-            )
-        )(starts)                                      # (Q, batch, l)
-        cb = None
-        if use_cb:
-            cb = jax.vmap(cascade_keogh_cumulative)(cand, pq.u, pq.low)
         # Flattened (Q x batch) lane set, per-lane ub. Three per-lane cases
         # the scalar-ub form cannot express: finished queries submit dead
         # lanes; within an active query's batch, lanes whose own lower bound
@@ -517,19 +592,36 @@ def run_host_rounds(
             jnp.broadcast_to(st.inc.ub[:, None], (nq, batch)),
             DEAD_LANE_UB,
         )
-        if with_info:
-            d, info = ea_pruned_dtw_multi_batch(
-                pq.qn, cand, ub_lanes, window=plan.window,
-                band_width=plan.band_width, cb=cb, with_info=True,
-                **plan.knobs(),
+        if plan.gather == "fused":
+            d, info = _dtw_round_fused(
+                plan, prep, pq, starts, ub_lanes,
+                use_cb=use_cb, with_info=with_info,
             )
+        else:
+            cand = jax.vmap(
+                lambda s: gather_norm_windows(
+                    prep.ref, s, plan.length, prep.mu, prep.sigma
+                )
+            )(starts)                                  # (Q, batch, l)
+            cb = None
+            if use_cb:
+                cb = jax.vmap(cascade_keogh_cumulative)(cand, pq.u, pq.low)
+            if with_info:
+                d, info = ea_pruned_dtw_multi_batch(
+                    pq.qn, cand, ub_lanes, window=plan.window,
+                    band_width=plan.band_width, cb=cb, with_info=True,
+                    **plan.knobs(),
+                )
+            else:
+                d = ea_pruned_dtw_multi_batch(
+                    pq.qn, cand, ub_lanes, window=plan.window,
+                    band_width=plan.band_width, cb=cb, **plan.knobs(),
+                )
+                info = None
+        if with_info:
             rows_q = jnp.sum(info.rows, axis=1, dtype=jnp.int32)
             cells_q = jnp.sum(info.cells, axis=1, dtype=jnp.int32)
         else:
-            d = ea_pruned_dtw_multi_batch(
-                pq.qn, cand, ub_lanes, window=plan.window,
-                band_width=plan.band_width, cb=cb, **plan.knobs(),
-            )
             rows_q = cells_q = jnp.zeros((nq,), st.rows.dtype)
         d = jnp.where(jnp.isfinite(lbs_b), d, jnp.inf)  # padding lanes
         d = jnp.where(st.active[:, None], d, jnp.inf)
@@ -606,16 +698,28 @@ def run_persistent(
     )
 
     lb_p, order_p, _ = pad_lanes_to_blocks(plan.block_k, lb_sorted, order)
-    cand_all = jax.vmap(
-        lambda s: gather_norm_windows(
-            prep.ref, s, plan.length, prep.mu, prep.sigma
+    if plan.gather == "fused":
+        # The whole best-first order is *addressed*, never materialized:
+        # each block of block_k lanes is sliced + normalized from the
+        # resident reference on demand (O(N + block_k) working set).
+        bd, bs, blocks = ea_pruned_dtw_persistent_fused(
+            pq.qn, prep.ref, lb_p, order_p, state0.ub, window=plan.window,
+            mu=prep.mu, sigma=prep.sigma, band_width=plan.band_width,
+            envelopes=(pq.u, pq.low) if plan.use_cb else None,
+            **plan.knobs(),
         )
-    )(order_p)                                         # (Q, k_pad, l)
-    bd, bs, blocks = ea_pruned_dtw_persistent(
-        pq.qn, cand_all, lb_p, order_p, state0.ub, window=plan.window,
-        band_width=plan.band_width,
-        envelopes=(pq.u, pq.low) if plan.use_cb else None, **plan.knobs(),
-    )
+    else:
+        _ensure_slab_budget(plan, nq * order_p.shape[1], "run_persistent")
+        cand_all = jax.vmap(
+            lambda s: gather_norm_windows(
+                prep.ref, s, plan.length, prep.mu, prep.sigma
+            )
+        )(order_p)                                     # (Q, k_pad, l)
+        bd, bs, blocks = ea_pruned_dtw_persistent(
+            pq.qn, cand_all, lb_p, order_p, state0.ub, window=plan.window,
+            band_width=plan.band_width,
+            envelopes=(pq.u, pq.low) if plan.use_cb else None, **plan.knobs(),
+        )
     # Strict-improvement fold against the (possibly prepass-seeded) state:
     # unbeaten seeds keep their start, a tighter sweep result adopts its.
     improved = bd < state0.ub
@@ -722,6 +826,10 @@ def _baseline_search_impl(ref, query, plan: SearchPlan, with_info):
         # single dispatch (EA variants) or the shared block-granular host
         # sweep (full/pruned kernels take no per-lane threshold).
         lb_p, order_p, _ = pad_lanes_to_blocks(plan.block_k, lb_sorted, order)
+        # Baseline cores take pre-gathered candidates by contract, so this
+        # slab is sanctioned regardless of plan.gather — but it still has to
+        # fit the configured budget.
+        _ensure_slab_budget(plan, order_p.shape[0], "baseline persistent")
         cand_all = gather_norm_windows(
             prep.ref, order_p, plan.length, prep.mu, prep.sigma
         )
@@ -937,6 +1045,8 @@ def make_sharded_search(
             return x
 
         slice_round, peek_lb = _round_slicers(batch)
+        if plan.gather != "fused":
+            _ensure_slab_budget(plan, nq * batch, "make_sharded_search")
 
         class St(NamedTuple):
             r: jax.Array        # (Q,) local per-query round pointer
@@ -952,12 +1062,6 @@ def make_sharded_search(
             lb = slice_round(lb_p, st.r)
             head = peek_lb(lb_p, st.r)
             local_more = jnp.logical_and(st.r < n_rounds, head < st.ub)
-            cand = jax.vmap(
-                lambda ss: gather_norm_windows(
-                    ref, ss, plan.length, mu, sigma
-                )
-            )(s)
-            cb = jax.vmap(cascade_keogh_cumulative)(cand, u, low)
             # Dead-lane sentinel for finished (query, range) items and for
             # lanes whose own lower bound already reaches the incumbent
             # (lane-level LB gating, as in the host round driver).
@@ -969,10 +1073,23 @@ def make_sharded_search(
                 jnp.broadcast_to(st.ub[:, None], (nq, batch)),
                 DEAD_LANE_UB,
             )
-            d = ea_pruned_dtw_multi_batch(
-                queries_n, cand, ub_lanes, window=plan.window,
-                band_width=plan.band_width, cb=cb, **plan.knobs(),
-            )
+            if plan.gather == "fused":
+                d = ea_pruned_dtw_multi_batch_fused(
+                    queries_n, ref, s, ub_lanes, window=plan.window,
+                    mu=mu, sigma=sigma, envelopes=(u, low),
+                    band_width=plan.band_width, **plan.knobs(),
+                )
+            else:
+                cand = jax.vmap(
+                    lambda ss: gather_norm_windows(
+                        ref, ss, plan.length, mu, sigma
+                    )
+                )(s)
+                cb = jax.vmap(cascade_keogh_cumulative)(cand, u, low)
+                d = ea_pruned_dtw_multi_batch(
+                    queries_n, cand, ub_lanes, window=plan.window,
+                    band_width=plan.band_width, cb=cb, **plan.knobs(),
+                )
             d = jnp.where(jnp.isfinite(lb), d, jnp.inf)  # padding lanes
             d = jnp.where(local_more[:, None], d, jnp.inf)
             # Local fold keeps this shard's best achieved pair; the global

@@ -84,12 +84,13 @@ class IngestResult(NamedTuple):
 _INGEST_STATICS = (
     "length", "window", "variant", "batch", "band_width", "chunk_lb",
     "backend", "rows_per_step", "block_k", "row_block", "quarantine",
+    "gather", "slab_budget",
 )
 
 
 def _ingest_plan(
     length, window, variant, batch, band_width, chunk_lb, backend,
-    rows_per_step, block_k, row_block, quarantine,
+    rows_per_step, block_k, row_block, quarantine, gather, slab_budget,
 ) -> SearchPlan:
     """Static ingest knobs → the pipeline plan (backend already concrete)."""
     return SearchPlan(
@@ -97,6 +98,7 @@ def _ingest_plan(
         band_width=band_width, chunk=chunk_lb, backend=backend,
         rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
         rounds="host", quarantine=quarantine, warm_start=0,
+        gather=gather, slab_budget=slab_budget,
     )
 
 
@@ -121,6 +123,8 @@ def _ingest_impl(
     block_k,
     row_block,
     quarantine,
+    gather,
+    slab_budget,
 ):
     """One raw-shape ingest: stats + cascade + carried-ub rounds, jitted.
 
@@ -133,7 +137,7 @@ def _ingest_impl(
     """
     plan = _ingest_plan(
         length, window, variant, batch, band_width, chunk_lb, backend,
-        rows_per_step, block_k, row_block, quarantine,
+        rows_per_step, block_k, row_block, quarantine, gather, slab_budget,
     )
     ctx = jnp.concatenate([tail, chunk])
     keep = min(ctx.shape[0], length - 1)
@@ -173,6 +177,8 @@ def _ingest_impl_padded(
     block_k,
     row_block,
     quarantine,
+    gather,
+    slab_budget,
 ):
     """Fixed-shape ingest: one trace for any mix of real chunk lengths.
 
@@ -187,7 +193,7 @@ def _ingest_impl_padded(
     """
     plan = _ingest_plan(
         length, window, variant, batch, band_width, chunk_lb, backend,
-        rows_per_step, block_k, row_block, quarantine,
+        rows_per_step, block_k, row_block, quarantine, gather, slab_budget,
     )
     ctx = jnp.concatenate([tail_buf, chunk_buf])
     k_buf = ctx.shape[0] - length + 1
@@ -228,6 +234,8 @@ def ingest_chunk(
     pad_to: int | None = None,
     quarantine: bool = True,
     chunk_index: int | None = None,
+    gather: str = "fused",
+    slab_budget: int | None = None,
 ) -> tuple[jax.Array, IngestResult]:
     """Advance Q standing queries over one stream chunk.
 
@@ -278,7 +286,7 @@ def ingest_chunk(
             band_width=band_width, chunk_lb=chunk_lb,
             backend=resolve_backend(backend),
             rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
-            quarantine=quarantine,
+            quarantine=quarantine, gather=gather, slab_budget=slab_budget,
         )
     if c > pad_to:
         raise guards.StreamStateError(
@@ -306,7 +314,7 @@ def ingest_chunk(
         band_width=band_width, chunk_lb=chunk_lb,
         backend=resolve_backend(backend),
         rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
-        quarantine=quarantine,
+        quarantine=quarantine, gather=gather, slab_budget=slab_budget,
     )
     keep = min(t + c, length - 1)
     new_tail = jnp.concatenate([jnp.asarray(tail, dt), chunk])[t + c - keep :]
@@ -452,6 +460,8 @@ class StreamIngestExecutor:
         block_k: int = 8,
         row_block: int = 128,
         quarantine: bool = True,
+        gather: str = "fused",
+        slab_budget: int | None = None,
     ):
         self.queries_n = queries_n
         self.u = u
@@ -467,6 +477,8 @@ class StreamIngestExecutor:
         self.block_k = int(block_k)
         self.row_block = int(row_block)
         self.quarantine = bool(quarantine)
+        self.gather = gather
+        self.slab_budget = None if slab_budget is None else int(slab_budget)
 
     def run_ingest(
         self,
@@ -488,4 +500,5 @@ class StreamIngestExecutor:
             rows_per_step=self.rows_per_step, block_k=self.block_k,
             row_block=self.row_block, pad_to=pad_to,
             quarantine=self.quarantine, chunk_index=chunk_index,
+            gather=self.gather, slab_budget=self.slab_budget,
         )

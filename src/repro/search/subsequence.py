@@ -103,6 +103,8 @@ def subsequence_search(
     row_block: int = 128,
     rounds: str = "host",
     quarantine: bool = True,
+    gather: str = "fused",
+    slab_budget: int | None = None,
 ) -> SearchResult:
     """Locate the closest z-normalized window of ``ref`` to ``query``.
 
@@ -137,6 +139,13 @@ def subsequence_search(
         (DESIGN.md §2.6); they ride the rounds as dead lanes and are counted
         in ``SearchResult.quarantined``. ``False`` skips the prepass (the
         caller then guarantees a finite reference).
+      gather: candidate materialization (DESIGN.md §2.10) — ``"fused"``
+        (default) slices + z-normalizes candidates from the resident
+        reference inside the DTW stage; ``"slab"`` pre-gathers the O(K·l)
+        window matrix (comparison arm). Results are identical.
+      slab_budget: optional byte cap on host-side candidate slabs; an
+        over-budget ``"slab"`` dispatch raises ``SearchInputError`` at
+        trace time.
     """
     if rounds not in ROUND_DRIVERS:
         raise ValueError(f"rounds {rounds!r} not in {ROUND_DRIVERS}")
@@ -160,7 +169,8 @@ def subsequence_search(
         length=length, window=window, variant=variant, batch=batch,
         band_width=band_width, chunk=chunk, backend=backend,
         rows_per_step=rows_per_step, block_k=block_k, row_block=row_block,
-        rounds=rounds, quarantine=quarantine, with_info=with_info,
+        rounds=rounds, quarantine=quarantine, gather=gather,
+        slab_budget=slab_budget, with_info=with_info,
     )
     if univariate and variant in MULTI_VARIANTS:
         # Q=1 of the multi-query pipeline core: same executors, one lane set.

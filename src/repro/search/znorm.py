@@ -41,7 +41,23 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-EPS = 1e-8
+# The sigma floor and the two normalization entry points live in core.common
+# (the fused gather path normalizes inside core.batch and the kernels, and
+# core must not import search); re-exported here so the search layer keeps
+# one import site for all z-normalization.
+from repro.core.common import EPS, clamp_sigma, norm_window_slice
+
+__all__ = [
+    "EPS",
+    "append_window_stats",
+    "clamp_sigma",
+    "gather_norm_windows",
+    "norm_window_slice",
+    "sanitize_series",
+    "window_finite_mask",
+    "window_stats",
+    "znorm",
+]
 
 
 @partial(jax.jit, static_argnames=("length",))
@@ -118,12 +134,6 @@ def sanitize_series(ref: jax.Array) -> jax.Array:
     return jnp.where(jnp.isfinite(ref), ref, jnp.zeros_like(ref))
 
 
-def clamp_sigma(sigma: jax.Array) -> jax.Array:
-    """The one sanctioned sigma clamp: keeps flat windows finite under
-    normalization (they become all-zero, their true z-normal form limit)."""
-    return jnp.maximum(sigma, EPS)
-
-
 @jax.jit
 def znorm(x: jax.Array) -> jax.Array:
     """Z-normalize along the last axis (whole-series, for queries)."""
@@ -143,6 +153,16 @@ def gather_norm_windows(
     """Materialize z-normalized windows ``(K, length)`` for given starts.
 
     ``mu``/``sigma`` are the precomputed per-window stats indexed by start.
+
+    This is the O(K·l) **slab** baseline (``gather="slab"``): an arbitrary
+    index gather that re-copies every overlapping window. The default search
+    paths use the fused normalize-on-slice form instead
+    (``core.common.norm_window_slice`` on the jax backend, in-kernel
+    slicing on Pallas) with an O(N + K) working set; sanctioned callers of
+    this function are the full/pruned baseline cores in
+    ``search.pipeline._baseline_search_impl`` and the explicit
+    ``gather="slab"`` comparison arms — ``scripts/lint_layers.py`` enforces
+    the import surface.
     """
     idx = starts[:, None] + jnp.arange(length)[None, :]
     win = ref[idx]

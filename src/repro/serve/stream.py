@@ -137,6 +137,11 @@ class StreamSearchEngine:
       quarantine: exclude windows overlapping non-finite samples instead of
         letting a NaN poison the incumbents (default on; DESIGN.md §2.6).
         Counts surface as ``quarantined_windows`` / ``quarantined_samples``.
+      gather, slab_budget: candidate materialization policy per DESIGN.md
+        §2.10 — ``"fused"`` (default) slices + z-normalizes candidates from
+        the resident context inside the batch primitive; ``"slab"`` keeps
+        the pre-gathered O(K·l) comparison form, guarded by ``slab_budget``
+        bytes when set.
       debug_checks: verify after every ingest that no NaN reached the
         carried incumbents, raising ``NonFiniteInputError`` instead of
         serving poisoned results. ``None`` defers to ``$REPRO_DEBUG_CHECKS``.
@@ -172,6 +177,8 @@ class StreamSearchEngine:
         quarantine: bool = True,
         debug_checks: bool | None = None,
         executor=None,
+        gather: str = "fused",
+        slab_budget: int | None = None,
     ):
         if variant not in MULTI_VARIANTS:
             raise ValueError(f"variant must be one of {MULTI_VARIANTS}")
@@ -197,6 +204,8 @@ class StreamSearchEngine:
         self.block_k = int(block_k)
         self.row_block = int(row_block)
         self.stream_chunk = None if stream_chunk is None else int(stream_chunk)
+        self.gather = gather
+        self.slab_budget = None if slab_budget is None else int(slab_budget)
         self.queries_n = znorm(q[:, : self.length])
         self.u, self.low = jax.vmap(envelope, in_axes=(0, None))(
             self.queries_n, self.window
@@ -231,6 +240,7 @@ class StreamSearchEngine:
             chunk_lb=self.chunk_lb, backend=self.backend,
             rows_per_step=self.rows_per_step, block_k=self.block_k,
             row_block=self.row_block, quarantine=self.quarantine,
+            gather=self.gather, slab_budget=self.slab_budget,
         )
         if executor is None:
             executor = default_executor

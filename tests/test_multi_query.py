@@ -191,13 +191,14 @@ def test_env_var_reread_between_calls(monkeypatch):
     import repro.search.pipeline as pipeline
 
     seen = []
-    real = pipeline.ea_pruned_dtw_multi_batch
+    # the default gather="fused" rounds go through the fused batch primitive
+    real = pipeline.ea_pruned_dtw_multi_batch_fused
 
     def recorder(*args, **kwargs):
         seen.append(kwargs.get("backend"))
         return real(*args, **kwargs)
 
-    monkeypatch.setattr(pipeline, "ea_pruned_dtw_multi_batch", recorder)
+    monkeypatch.setattr(pipeline, "ea_pruned_dtw_multi_batch_fused", recorder)
     rng = np.random.default_rng(17)
     # unique shape so each backend traces fresh through the recorder
     ref = jnp.asarray(np.cumsum(rng.normal(size=777)))
